@@ -1,0 +1,12 @@
+"""Figure 3: speedup of STAR's asymmetric replication over single-node
+execution, I(n) = n/(nP - P + 1) — analytical (exact)."""
+from repro.core.analytical import star_speedup
+
+
+def run():
+    rows = []
+    for n in (2, 4, 8, 16):
+        for P in (0.0, 0.01, 0.05, 0.1, 0.2, 0.5, 1.0):
+            rows.append((f"fig03/speedup_n{n}_P{P:g}", 0.0,
+                         round(float(star_speedup(n, P)), 4)))
+    return rows

@@ -1,0 +1,20 @@
+"""Figure 10: STAR improvement over partitioning-based (varying K) and
+non-partitioned systems on n=4 — analytical (exact) + crossover check."""
+from repro.core.analytical import (improvement_over_nonpartitioned,
+                                   improvement_over_partitioning)
+
+
+def run():
+    n = 4
+    rows = []
+    for K in (2, 4, 8, 16, 32):
+        for P in (0.05, 0.1, 0.3, 0.5, 0.9):
+            rows.append((f"fig10/vs_partitioning_K{K}_P{P:g}", 0.0,
+                         round(float(improvement_over_partitioning(n, P, K)), 4)))
+    for P in (0.05, 0.1, 0.3, 0.5, 0.9):
+        rows.append((f"fig10/vs_nonpartitioned_P{P:g}", 0.0,
+                     round(float(improvement_over_nonpartitioned(n, P)), 4)))
+    # paper claim: crossover exactly at K = n
+    rows.append(("fig10/crossover_at_K_eq_n", 0.0,
+                 round(float(improvement_over_partitioning(n, 0.5, n)), 4)))
+    return rows

@@ -1,0 +1,50 @@
+"""Figure 13: STAR vs Calvin-{2,4,6} (deterministic database).
+
+Measured: the deterministic executor (lock-order commit, no aborts) runs for
+real — run_single_master(deterministic=True); cluster numbers via the
+calibrated model (lock-manager threads vs worker threads trade-off).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import get_calibration, timed
+from repro.baselines.cost_model import calvin_throughput, star_throughput
+from repro.core.single_master import run_single_master
+
+
+def run():
+    rows = []
+    # real deterministic execution micro-benchmark
+    rng = np.random.default_rng(0)
+    B, Mops, N = 256, 8, 4096
+    txns = {
+        "valid": jnp.ones(B, bool),
+        "row": jnp.asarray(np.stack([rng.choice(N, Mops, replace=False)
+                                     for _ in range(B)]), jnp.int32),
+        "kind": jnp.asarray(rng.integers(0, 4, (B, Mops)), jnp.int32),
+        "delta": jnp.asarray(rng.integers(-9, 9, (B, Mops, 10)), jnp.int32),
+        "user_abort": jnp.zeros(B, bool),
+    }
+    val = jnp.zeros((N, 10), jnp.int32)
+    tid = jnp.zeros((N,), jnp.uint32)
+    fn = jax.jit(lambda: run_single_master(val, tid, txns, jnp.uint32(1),
+                                           max_rounds=16, deterministic=True))
+    us, out = timed(fn)
+    committed = int(out[3]["committed"])
+    rows.append(("fig13/calvin_exec_us_per_txn", us * 1e6 / B,
+                 f"committed={committed}/{B}"))
+
+    for wl in ("ycsb", "tpcc"):
+        cal = get_calibration(wl)
+        for P in (0.0, 0.1, 0.5, 0.9):
+            star = star_throughput(4, P, cal)
+            best_calvin = 0.0
+            for x in (2, 4, 6):
+                thr = calvin_throughput(4, P, cal, lock_threads=x)
+                rows.append((f"fig13/{wl}_P{P:g}_calvin{x}", 0.0, round(thr)))
+                best_calvin = max(best_calvin, thr)
+            rows.append((f"fig13/{wl}_P{P:g}_star", 0.0, round(star)))
+            rows.append((f"fig13/{wl}_P{P:g}_star_over_best_calvin", 0.0,
+                         round(star / best_calvin, 2)))
+    return rows

@@ -1,0 +1,26 @@
+"""Figure 14: phase-transition overhead vs iteration time e (1..100 ms) and
+vs cluster size — overhead = 1 - thr(e)/thr(200 ms).  Fence cost = measured
+in-process fence + modeled coordination round trips (grows with n: variance
+of communication delays, paper §7.4)."""
+from benchmarks.common import get_calibration
+from repro.baselines.cost_model import Network, star_throughput
+
+
+def run():
+    rows = []
+    cal = get_calibration("ycsb", cross=0.1)
+    ref = star_throughput(4, 0.1, cal, iteration_s=0.200)
+    for e_ms in (1, 2, 5, 10, 20, 50, 100):
+        thr = star_throughput(4, 0.1, cal, iteration_s=e_ms / 1e3)
+        rows.append((f"fig14/overhead_e{e_ms}ms", 0.0,
+                     round(1 - thr / ref, 4)))
+    # vs nodes at e = 10 and 20 ms (fence rtt scaled by log n for stragglers)
+    for n in (2, 4, 8, 16):
+        import math
+        net = Network(rtt_s=100e-6 * (1 + 0.5 * math.log2(n)))
+        ref_n = star_throughput(n, 0.1, cal, net=net, iteration_s=0.200)
+        for e_ms in (10, 20):
+            thr = star_throughput(n, 0.1, cal, net=net, iteration_s=e_ms / 1e3)
+            rows.append((f"fig14/overhead_n{n}_e{e_ms}ms", 0.0,
+                         round(1 - thr / ref_n, 4)))
+    return rows

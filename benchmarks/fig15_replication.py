@@ -1,0 +1,75 @@
+"""Figure 15: replication strategies + fault tolerance.
+
+(a) MEASURED: TPC-C epochs through the real engine; hybrid (operation)
+    replication bytes vs value replication bytes — the paper's ~order-of-
+    magnitude reduction; plus SYNC-STAR throughput degradation (model).
+(b) MEASURED: disk-logging overhead — engine epochs with WAL flushes on/off.
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import get_envelope_calibration
+from repro.baselines.cost_model import star_throughput
+from repro.core.engine import StarEngine
+from repro.db import tpcc
+from repro.db.wal import WriteAheadLog
+
+
+def run():
+    rows = []
+    cfg = tpcc.TPCCConfig(n_partitions=4, n_items=2000, cust_per_district=200,
+                          order_ring=128)
+    state = tpcc.TPCCState(cfg)
+    rng = np.random.default_rng(0)
+    eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition,
+                     init_val=tpcc.init_values(cfg, rng))
+    batches = [tpcc.make_batch(cfg, state, 256, seed=i) for i in range(4)]
+    for b in batches[:2]:
+        eng.run_epoch(b)            # warm the jits
+    t0 = time.perf_counter()
+    for b in batches[2:]:
+        eng.run_epoch(b)
+    t_no_wal = time.perf_counter() - t0
+    s = eng.stats
+    ratio = s.value_bytes_if_not_hybrid / max(s.op_bytes_hybrid, 1)
+    rows.append(("fig15/tpcc_value_bytes", 0.0, s.value_bytes_if_not_hybrid))
+    rows.append(("fig15/tpcc_hybrid_bytes", 0.0, s.op_bytes_hybrid))
+    rows.append(("fig15/tpcc_hybrid_reduction_x", 0.0, round(ratio, 2)))
+    assert eng.replica_consistent()
+
+    # SYNC STAR vs STAR (model, calibrated)
+    cal = get_envelope_calibration("tpcc")
+    for P in (0.02, 0.1, 0.5, 0.9):
+        a = star_throughput(4, P, cal, sync_replication=False)
+        b = star_throughput(4, P, cal, sync_replication=True)
+        rows.append((f"fig15/sync_star_slowdown_P{P:g}", 0.0, round(a / b, 2)))
+        h = star_throughput(4, P, cal, hybrid=True)
+        nv = star_throughput(4, P, cal, hybrid=False)
+        rows.append((f"fig15/hybrid_gain_P{P:g}", 0.0, round(h / nv, 2)))
+
+    # disk logging overhead (measured WAL flush on the same write volume)
+    with tempfile.TemporaryDirectory() as d:
+        wal = WriteAheadLog(d, 0)
+        state2 = tpcc.TPCCState(cfg)
+        eng2 = StarEngine(cfg.n_partitions, cfg.rows_per_partition,
+                          init_val=tpcc.init_values(cfg, rng))
+        bs = [tpcc.make_batch(cfg, state2, 256, seed=10 + i) for i in range(4)]
+        for b in bs[:2]:
+            eng2.run_epoch(b)
+        t0 = time.perf_counter()
+        for i, b in enumerate(bs[2:]):
+            eng2.run_epoch(b)
+            k = np.asarray(b["ptxn"]["kind"])
+            wal.append(np.asarray(b["ptxn"]["row"]),
+                       np.asarray(b["ptxn"]["delta"]),
+                       np.broadcast_to(np.uint32(2 * i + 2), k.shape).copy(),
+                       k > 0)
+            wal.flush(epoch=i)
+        t_wal = time.perf_counter() - t0
+        wal.close()
+    overhead = max(t_wal / max(t_no_wal, 1e-9) - 1.0, 0.0)
+    rows.append(("fig15/disk_logging_overhead", t_wal * 1e6 / 2,
+                 round(overhead, 3)))
+    return rows

@@ -1,0 +1,22 @@
+"""Roofline summary rows from the dry-run artifacts (EXPERIMENTS.md §Roofline
+reads the full JSONs; this emits the headline terms per cell)."""
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run():
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / "*pod16x16.json"))):
+        r = json.loads(Path(f).read_text())
+        cell = f"{r['arch']}/{r['shape']}"
+        if r["status"] != "ok":
+            rows.append((f"roofline/{cell}", 0.0, r["status"]))
+            continue
+        ro = r["roofline"]
+        dom = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        rows.append((f"roofline/{cell}/{ro['bottleneck']}", 0.0,
+                     f"{dom * 1e3:.1f}ms useful={ro['useful_flops_ratio']:.2f}"))
+    return rows

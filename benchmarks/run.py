@@ -1,0 +1,30 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [figure ...]
+"""
+import sys
+
+from benchmarks import (fig03_model, fig10_improvement, fig11_throughput,
+                        fig12_latency, fig13_calvin, fig14_overhead,
+                        fig15_replication, fig16_scalability, roofline_report)
+from benchmarks.common import emit
+
+ALL = {
+    "fig03": fig03_model, "fig10": fig10_improvement,
+    "fig11": fig11_throughput, "fig12": fig12_latency,
+    "fig13": fig13_calvin, "fig14": fig14_overhead,
+    "fig15": fig15_replication, "fig16": fig16_scalability,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        emit(ALL[name].run())
+
+
+if __name__ == '__main__':
+    main()

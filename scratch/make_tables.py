@@ -1,0 +1,38 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from results/dryrun/*.json."""
+import glob
+import json
+from pathlib import Path
+
+RES = Path("results/dryrun")
+
+
+def table(mesh_tag, with_collcounts=False):
+    rows = []
+    for f in sorted(glob.glob(str(RES / f"*__{mesh_tag}.json"))):
+        r = json.loads(Path(f).read_text())
+        name = f"{r['arch']} × {r['shape']}"
+        if r["status"] == "skipped":
+            rows.append(f"| {name} | — | — | — | — | skipped | {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {name} | — | — | — | — | ERROR | {r.get('error','')[:60]} |")
+            continue
+        ro = r["roofline"]
+        peak = r["mem"]["peak_bytes"] / 2**30
+        fits = "✓" if r["mem"]["fits_16GiB"] else "✗"
+        rows.append(
+            f"| {name} | {ro['compute_s']*1e3:.1f} | {ro['memory_s']*1e3:.1f} | "
+            f"{ro['collective_s']*1e3:.1f} | {peak:.1f} {fits} | {ro['bottleneck']} | "
+            f"{ro['useful_flops_ratio']:.2f} |")
+    return rows
+
+
+hdr = ("| arch × shape | compute (ms) | memory (ms) | collective (ms) | "
+       "peak GiB (≤16) | bottleneck | 6·N·D / HLO |\n"
+       "|---|---|---|---|---|---|---|")
+print("### single-pod 16×16\n")
+print(hdr)
+print("\n".join(table("pod16x16")))
+print("\n### multi-pod 2×16×16 (pass/fail + terms)\n")
+print(hdr)
+print("\n".join(table("pod2x16x16")))

@@ -1,0 +1,29 @@
+"""Quick dev check: every arch smoke config runs fwd + loss + prefill/decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_arch
+from repro.data import make_batch
+from repro.models import (decode_step, init_cache, init_params, loss_fn,
+                          prefill)
+
+S, B = 64, 2
+which = sys.argv[1:] or ALL_ARCHS
+for name in which:
+    cfg = get_arch(name, smoke=True)
+    params = init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, "train", S, B)
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, b, cfg))(params, batch)
+    assert jnp.isfinite(loss), (name, loss)
+    line = f"{name}: loss={float(loss):.3f}"
+    if not cfg.is_encoder:
+        pb = make_batch(cfg, "prefill", S, B)
+        logits, cache = jax.jit(lambda p, b: prefill(p, b, cfg, alloc_len=S + 8))(params, pb)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        logits2, cache = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))(params, cache, tok)
+        assert jnp.all(jnp.isfinite(logits2.astype(jnp.float32))), name
+        line += f" decode_logit0={float(logits2[0, 0, 0]):.3f}"
+    print(line, flush=True)
+print("OK")

@@ -1,0 +1,8 @@
+from repro.baselines.calibrate import calibrate
+from repro.baselines.cost_model import (Calibration, Network, Node,
+                                        calvin_throughput, dist_throughput,
+                                        pb_occ_throughput, star_throughput)
+
+__all__ = ["Calibration", "Network", "Node", "calibrate",
+           "calvin_throughput", "dist_throughput", "pb_occ_throughput",
+           "star_throughput"]

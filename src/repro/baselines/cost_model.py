@@ -1,0 +1,130 @@
+"""Calibrated cluster cost model for the evaluation baselines (§7).
+
+The transaction *algorithms* (OCC rounds, lock conflicts, replication
+streams) execute for real in the vectorized engine; absolute wall-clock
+throughput on a 4-node EC2 cluster is then derived from:
+
+  * measured per-transaction CPU cost on this host (calibration),
+  * the paper's hardware envelope: 12 workers/node, 4.8 Gbit/s NIC,
+    ~100 us same-AZ RTT.
+
+EXPERIMENTS.md labels every number derived through this model as
+"model-derived (calibrated)". Ratios between systems — what Fig. 11/13/16
+actually claim — depend only on the message/byte patterns and measured
+conflict behaviour, not on the absolute CPU scale factor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Network:
+    bandwidth_Bps: float = 4.8e9 / 8       # 4.8 Gbit/s (paper, iperf)
+    rtt_s: float = 100e-6                  # same-AZ round trip
+    def transfer_s(self, nbytes: float) -> float:
+        return nbytes / self.bandwidth_Bps
+
+
+@dataclass(frozen=True)
+class Node:
+    workers: int = 12                      # paper: 12 worker threads/node
+
+
+@dataclass
+class Calibration:
+    """Per-txn CPU costs measured on this host (seconds), plus conflict
+    telemetry measured from the real executors."""
+    t_single_cpu: float                    # single-partition txn, no CC
+    t_cross_cpu: float                     # cross-partition txn under OCC
+    retry_factor: float = 0.0              # measured retries per committed txn
+    value_bytes_per_txn: float = 0.0       # replication payload
+    op_bytes_per_txn: float = 0.0          # hybrid replication payload
+    remote_reads_per_cross: float = 2.0    # measured avg remote ops
+
+
+def star_throughput(n_nodes: int, frac_cross: float, cal: Calibration,
+                    net: Network = Network(), node: Node = Node(),
+                    iteration_s: float = 0.010, hybrid: bool = True,
+                    sync_replication: bool = False) -> float:
+    """STAR (§6.3 model + fence/network overheads).
+
+    In tau_p all n nodes commit singles in parallel; in tau_s one master
+    commits the cross txns. Replication bandwidth can throttle (TPC-C
+    saturates the NIC at 4 nodes, §7.6); two fences cost ~2 RTT each.
+    """
+    P = min(max(frac_cross, 0.0), 1.0)
+    rate_p = n_nodes * node.workers / cal.t_single_cpu          # txn/s
+    t_cross = cal.t_cross_cpu * (1.0 + cal.retry_factor)
+    if sync_replication:
+        t_cross += net.rtt_s                                     # hold locks
+    rate_s = node.workers / t_cross
+    # Eq (5): time shares solved per Eqs (1)-(2)
+    denom = (1.0 - P) * rate_s + P * rate_p
+    tau_s = iteration_s * P * rate_p / denom if denom > 0 else 0.0
+    tau_p = iteration_s - tau_s
+    fence_s = 4 * net.rtt_s                                      # 2 fences
+    committed = tau_p * rate_p + tau_s * rate_s
+    thr = committed / (iteration_s + fence_s)
+    # replication bandwidth cap (writes fan out to f+k-1 replicas -> NIC-bound
+    # at the master during tau_s, at every node during tau_p)
+    bytes_per_txn = cal.op_bytes_per_txn if hybrid else cal.value_bytes_per_txn
+    if bytes_per_txn > 0:
+        cap = net.bandwidth_Bps / bytes_per_txn
+        thr = min(thr, cap)
+    return thr
+
+
+def pb_occ_throughput(frac_cross: float, cal: Calibration,
+                      net: Network = Network(), node: Node = Node(),
+                      sync_replication: bool = False) -> float:
+    """Primary/backup non-partitioned Silo: one primary executes everything
+    (insensitive to P); sync replication holds write locks for one RTT."""
+    # every txn runs under single-node OCC — same measured conflict regime
+    t = cal.t_cross_cpu * (1.0 + cal.retry_factor)
+    if sync_replication:
+        t = t + net.rtt_s
+    thr = node.workers / t
+    if cal.value_bytes_per_txn > 0:
+        thr = min(thr, net.bandwidth_Bps / cal.value_bytes_per_txn)
+    return thr
+
+
+def dist_throughput(n_nodes: int, frac_cross: float, cal: Calibration,
+                    protocol: str = "occ", net: Network = Network(),
+                    node: Node = Node(), sync_replication: bool = False) -> float:
+    """Partitioning-based systems (Dist.OCC / Dist.S2PL, NO_WAIT).
+
+    Singles run locally; cross txns pay remote-read round trips during
+    execution plus commit-protocol round trips: 2PC (2 RTT) when synchronous,
+    1 validation round under async + epoch group commit. NO_WAIT aborts
+    (measured retry factor) multiply the work.
+    """
+    P = min(max(frac_cross, 0.0), 1.0)
+    t_single = cal.t_single_cpu + (net.rtt_s if sync_replication else 0.0)
+    rounds = cal.remote_reads_per_cross * net.rtt_s
+    commit = (2 * net.rtt_s) if sync_replication else net.rtt_s
+    retry = 1.0 + cal.retry_factor * (2.0 if protocol == "s2pl" else 1.0)
+    t_cross = (cal.t_cross_cpu + rounds + commit) * retry
+    avg = (1 - P) * t_single + P * t_cross
+    thr = n_nodes * node.workers / avg
+    if cal.value_bytes_per_txn > 0:
+        thr = min(thr, n_nodes * net.bandwidth_Bps / cal.value_bytes_per_txn)
+    return thr
+
+
+def calvin_throughput(n_nodes: int, frac_cross: float, cal: Calibration,
+                      lock_threads: int, net: Network = Network(),
+                      node: Node = Node()) -> float:
+    """Calvin-x (§7.3): x lock-manager threads, 12-x workers. Deterministic:
+    no aborts, inputs replicated (cheap); cross txns still need remote reads.
+    The lock manager grants ~one txn per x-thread per grant cycle; more lock
+    threads help until workers starve."""
+    workers = max(node.workers - lock_threads, 1)
+    grant_rate = lock_threads / (cal.t_single_cpu * 0.5)      # grants/s
+    P = min(max(frac_cross, 0.0), 1.0)
+    t_exec = (1 - P) * cal.t_single_cpu + P * (
+        cal.t_cross_cpu + cal.remote_reads_per_cross * net.rtt_s * 0.5)
+    exec_rate = workers / t_exec
+    sync_penalty = 1.0 / (1.0 + 0.05 * lock_threads * P)
+    return n_nodes * min(grant_rate, exec_rate) * sync_penalty

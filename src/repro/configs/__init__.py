@@ -1,0 +1,5 @@
+from repro.configs.base import (ALL_ARCHS, SHAPES, ArchConfig, ShapeCell,
+                                cell_applicable, get_arch)
+
+__all__ = ["ALL_ARCHS", "SHAPES", "ArchConfig", "ShapeCell",
+           "cell_applicable", "get_arch"]

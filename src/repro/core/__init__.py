@@ -1,0 +1,8 @@
+from repro.core import analytical, fault, ops, phase_switch, replication, tid
+from repro.core.engine import EngineStats, StarEngine
+from repro.core.partitioned import run_partitioned
+from repro.core.single_master import run_single_master
+
+__all__ = ["analytical", "fault", "ops", "phase_switch", "replication", "tid",
+           "EngineStats", "StarEngine", "run_partitioned",
+           "run_single_master"]

@@ -1,0 +1,228 @@
+"""STAR engine: phase-switched epochs over the array-resident database (§3-§5).
+
+One engine instance models the cluster: the master view (the designated full
+replica) plus a backup replica kept consistent purely through the replication
+streams — value replication (Thomas write rule, out-of-order) from the
+single-master phase and ordered operation replication from the partitioned
+phase (hybrid strategy, §5).  ``replica_consistent()`` verifying bit-equality
+at each fence is the system's own correctness check (and a test).
+
+Fault tolerance: ``inject_failure``/``recover`` drive the §4.5 machinery —
+revert to the last committed epoch via the two-version records, classify the
+failure case, re-master partitions, catch up via Thomas-rule apply.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import replication as repl
+from repro.core import tid as tidlib
+from repro.core.fault import ClusterConfig, make_recovery_plan
+from repro.core.partitioned import run_partitioned
+from repro.core.phase_switch import PhaseController
+from repro.core.single_master import run_single_master
+
+
+@dataclass
+class EngineStats:
+    epochs: int = 0
+    committed_single: int = 0
+    committed_cross: int = 0
+    user_aborts: int = 0
+    retries: int = 0
+    fences: int = 0
+    value_bytes: int = 0
+    op_bytes_hybrid: int = 0
+    value_bytes_if_not_hybrid: int = 0
+    part_time_s: float = 0.0
+    sm_time_s: float = 0.0
+    fence_time_s: float = 0.0
+
+
+class StarEngine:
+    def __init__(self, n_partitions: int, rows_per_partition: int,
+                 n_cols: int = 10, init_val=None, hybrid_replication=True,
+                 max_rounds=16, cluster: ClusterConfig | None = None,
+                 iteration_ms: float = 10.0):
+        P, R, C = n_partitions, rows_per_partition, n_cols
+        self.P, self.R, self.C = P, R, C
+        val = (jnp.asarray(init_val, jnp.int32) if init_val is not None
+               else jnp.zeros((P, R, C), jnp.int32))
+        tidw = jnp.zeros((P, R), jnp.uint32)
+        self.master = {"val": val, "tid": tidw}
+        self.snapshot = {"val": val, "tid": tidw}     # last committed epoch
+        self.replica = {"val": val, "tid": tidw}      # maintained via streams
+        self.epoch = 1
+        self.part_seq = jnp.zeros((P,), jnp.uint32)
+        self.sm_last_tid = None
+        self.hybrid = hybrid_replication
+        self.max_rounds = max_rounds
+        self.cluster = cluster or ClusterConfig(f=1, k=max(P, 1),
+                                                n_partitions=P)
+        self.controller = PhaseController(e_ms=iteration_ms)
+        self.stats = EngineStats()
+        self._jit_part = jax.jit(run_partitioned, static_argnames=())
+        self._jit_sm = jax.jit(run_single_master,
+                               static_argnames=("max_rounds", "deterministic"))
+        self._jit_thomas = jax.jit(repl.thomas_apply_batch)
+        self._jit_replay = jax.jit(jax.vmap(repl.replay_operations))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _pad_axis(tree, axis: int):
+        """Pad a txn pytree to the next power of two along `axis` so epoch
+        shapes stay stable across batches (no per-epoch recompilation)."""
+        def pad(a):
+            n = a.shape[axis]
+            target = 1 << max(0, (n - 1).bit_length())
+            if target == n:
+                return a
+            widths = [(0, 0)] * a.ndim
+            widths[axis] = (0, target - n)
+            return np.pad(a, widths)
+        return jax.tree.map(pad, tree)
+
+    def run_epoch(self, batch) -> dict:
+        """batch: output of ycsb/tpcc make_batch. Runs partitioned phase,
+        fence, single-master phase, fence. Returns epoch metrics."""
+        epoch_u = jnp.uint32(self.epoch)
+        ptxn = jax.tree.map(jnp.asarray, self._pad_axis(batch["ptxn"], 1))
+        cross = jax.tree.map(jnp.asarray, self._pad_axis(batch["cross"], 0))
+
+        # ---- partitioned phase (single-partition txns, no CC) ----------
+        t0 = time.perf_counter()
+        val, tidw, part_out, pstats = self._jit_part(
+            self.master["val"], self.master["tid"], ptxn, epoch_u,
+            self.part_seq)
+        jax.block_until_ready(val)
+        t_part = time.perf_counter() - t0
+        self.master = {"val": val, "tid": tidw}
+
+        # operation replication (ordered per-partition replay) — or value
+        rep_val, rep_tid = self._jit_replay(
+            self.replica["val"], self.replica["tid"], part_out["log"])
+        self.replica = {"val": rep_val, "tid": rep_tid}
+
+        # ---- fence 1: all streams applied, snapshot commit --------------
+        t0 = time.perf_counter()
+        self._fence()
+        t_f1 = time.perf_counter() - t0
+
+        # ---- single-master phase (cross-partition txns, Silo OCC) ------
+        t0 = time.perf_counter()
+        flat_val = self.master["val"].reshape(self.P * self.R, self.C)
+        flat_tid = self.master["tid"].reshape(self.P * self.R)
+        B = int(cross["row"].shape[0])
+        if B > 0:
+            fval, ftid, sm_out, sstats = self._jit_sm(
+                flat_val, flat_tid, cross, epoch_u + jnp.uint32(0),
+                max_rounds=self.max_rounds)
+            jax.block_until_ready(fval)
+            self.master = {"val": fval.reshape(self.P, self.R, self.C),
+                           "tid": ftid.reshape(self.P, self.R)}
+            # value replication, Thomas write rule (order-free)
+            rflat_val = self.replica["val"].reshape(self.P * self.R, self.C)
+            rflat_tid = self.replica["tid"].reshape(self.P * self.R)
+            rv, rt, _ = self._jit_thomas(rflat_val, rflat_tid, sm_out["log"])
+            self.replica = {"val": rv.reshape(self.P, self.R, self.C),
+                            "tid": rt.reshape(self.P, self.R)}
+        else:
+            sstats = {"committed": jnp.int32(0), "retries": jnp.int32(0),
+                      "user_aborts": jnp.int32(0), "starved": jnp.int32(0),
+                      "writes": jnp.int32(0)}
+        t_sm = time.perf_counter() - t0
+
+        # ---- fence 2: epoch boundary ------------------------------------
+        t0 = time.perf_counter()
+        self._fence()
+        self.epoch += 1
+        t_f2 = time.perf_counter() - t0
+
+        # ---- replication byte accounting (Fig. 15) ----------------------
+        vb = ob = vb_alt = 0
+        if "p_row_bytes" in batch:
+            wmask = np.asarray(part_out["log"]["write"])
+            prb = self._pad_axis(batch["p_row_bytes"], 1)
+            pob = self._pad_axis(batch["p_op_bytes"], 1)
+            vb_alt = int(repl.value_bytes(wmask, prb))
+            ob = int(repl.operation_bytes(wmask, pob))
+            if B > 0:
+                cw = np.asarray(sm_out["log"]["write"])        # (rounds,B,M)
+                crb = np.broadcast_to(self._pad_axis(batch["c_row_bytes"], 0),
+                                      cw.shape[1:])
+                vb = int(repl.value_bytes(cw, crb[None]))
+        else:
+            wmask = np.asarray(part_out["log"]["write"])
+            rb = batch.get("row_bytes")
+            if rb is not None:
+                vb_alt = int(repl.value_bytes(wmask, rb[None, None, :]))
+                ob = int(repl.operation_bytes(wmask, batch["op_bytes"][None, None, :]))
+            if B > 0 and rb is not None:
+                cw = np.asarray(sm_out["log"]["write"])
+                vb = int(repl.value_bytes(cw, rb[None, None, :]))
+
+        # ---- controller telemetry ---------------------------------------
+        nc = int(sstats["committed"])
+        ns = int(pstats["committed"])
+        self.controller.observe("partitioned", ns, t_part)
+        self.controller.observe("single", nc, t_sm,
+                                frac_cross=nc / max(nc + ns, 1))
+        tau_p, tau_s = self.controller.plan()
+
+        s = self.stats
+        s.epochs += 1
+        s.committed_single += ns
+        s.committed_cross += nc
+        s.user_aborts += int(pstats["user_aborts"]) + int(sstats["user_aborts"])
+        s.retries += int(sstats["retries"])
+        s.part_time_s += t_part
+        s.sm_time_s += t_sm
+        s.fence_time_s += t_f1 + t_f2
+        s.value_bytes += vb
+        s.op_bytes_hybrid += ob if self.hybrid else vb_alt
+        s.value_bytes_if_not_hybrid += vb_alt
+        return {"committed_single": ns, "committed_cross": nc,
+                "tau_p_ms": tau_p, "tau_s_ms": tau_s,
+                "t_part_s": t_part, "t_sm_s": t_sm,
+                "starved": int(sstats["starved"])}
+
+    # ------------------------------------------------------------------
+    def _fence(self):
+        """Replication fence: all outstanding writes applied, then the commit
+        point. In-process the streams are applied synchronously above, so the
+        fence is the snapshot promotion + epoch bookkeeping."""
+        self.snapshot = {"val": self.master["val"], "tid": self.master["tid"]}
+        self.stats.fences += 1
+
+    def replica_consistent(self) -> bool:
+        ok_v = bool(jnp.all(self.master["val"] == self.replica["val"]))
+        ok_t = bool(jnp.all(self.master["tid"] == self.replica["tid"]))
+        return ok_v and ok_t
+
+    # ------------------------------------------------------------------
+    # fault tolerance (§4.5)
+    # ------------------------------------------------------------------
+    def inject_failure(self, failed: set[int], dirty: bool = True):
+        """Simulate node failures mid-epoch: optionally scribble uncommitted
+        writes into the working version, then run detection + revert."""
+        if dirty:
+            self.master = {
+                "val": self.master["val"].at[:, 0, 0].add(12345),
+                "tid": self.master["tid"].at[:, 0].add(jnp.uint32(2)),
+            }
+        plan = make_recovery_plan(self.cluster, failed, self.epoch - 1)
+        # revert to last committed epoch (two-version records, §4.5.2)
+        self.master = {"val": self.snapshot["val"], "tid": self.snapshot["tid"]}
+        self.replica = {"val": self.snapshot["val"], "tid": self.snapshot["tid"]}
+        return plan
+
+    def recover_node(self, plan):
+        """Case-1 recovery: copy + Thomas-rule catch-up (here: resync from the
+        committed snapshot, which the donor streams guarantee)."""
+        self.replica = {"val": self.snapshot["val"], "tid": self.snapshot["tid"]}
+        return True

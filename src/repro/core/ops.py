@@ -1,0 +1,64 @@
+"""Stored-procedure op semantics shared by both phase executors.
+
+Every transaction is a fixed-width list of ops (table, row, kind, delta).
+Kinds:
+  0 READ      — no write
+  1 SET       — overwrite the row with delta
+  2 ADD       — row += delta (RMW; models stock/ytd/balance updates)
+  3 APPEND    — string concat modeled as a rolling hash + length word
+                (col0 = hash-combine, col1 = capped length) — the TPC-C
+                Payment c_data op that operation-replication ships cheaply.
+
+The same functions implement *operation replay* on replicas: value
+replication ships the post-image; operation replication ships (kind, delta)
+and recomputes — exactly the paper's §5 distinction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+READ, SET, ADD, APPEND, STOCK_DECR, PAY_CUST = 0, 1, 2, 3, 4, 5
+APPEND_CAP = 500
+
+# Invariant (enforced by the workload generators, relied on by both
+# executors' gather-once/scatter-once semantics): a transaction touches each
+# row through AT MOST ONE op. Compound updates get a fused kind (PAY_CUST).
+
+
+def hash_combine(h, x):
+    return (h * jnp.int32(1000003) + x) & jnp.int32(0x7FFFFFFF)
+
+
+def apply_op(kind, old, delta):
+    """kind: (...,) int32; old/delta: (..., C) int32 -> new value."""
+    set_v = delta
+    add_v = old + delta
+    app_v = old
+    app_v = app_v.at[..., 0].set(hash_combine(old[..., 0], delta[..., 0]))
+    app_v = app_v.at[..., 1].set(
+        jnp.minimum(old[..., 1] + delta[..., 1], APPEND_CAP))
+    # TPC-C stock update: col0 qty = qty-d if qty-d >= 10 else qty-d+91;
+    # col1 ytd += d; col2 order_cnt += 1; col3 remote_cnt += delta[3]
+    d = delta[..., 0]
+    q = old[..., 0] - d
+    stk = old
+    stk = stk.at[..., 0].set(jnp.where(q >= 10, q, q + 91))
+    stk = stk.at[..., 1].set(old[..., 1] + d)
+    stk = stk.at[..., 2].set(old[..., 2] + 1)
+    stk = stk.at[..., 3].set(old[..., 3] + delta[..., 3])
+    # TPC-C Payment customer row, fused: cols0-1 = c_data rolling hash+len,
+    # cols2-4 += (balance, ytd_paid, cnt) — one op so the row is written once
+    pay = add_v
+    pay = pay.at[..., 0].set(hash_combine(old[..., 0], delta[..., 0]))
+    pay = pay.at[..., 1].set(jnp.minimum(old[..., 1] + delta[..., 1], APPEND_CAP))
+    k = kind[..., None]
+    new = jnp.where(k == SET, set_v, old)
+    new = jnp.where(k == ADD, add_v, new)
+    new = jnp.where(k == APPEND, app_v, new)
+    new = jnp.where(k == STOCK_DECR, stk, new)
+    new = jnp.where(k == PAY_CUST, pay, new)
+    return new
+
+
+def is_write_kind(kind):
+    return kind > READ

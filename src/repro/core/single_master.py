@@ -1,0 +1,118 @@
+"""Single-master phase executor (§4.2): vectorized Silo-variant OCC.
+
+A batch of B transactions runs as B parallel "lanes" (the TPU-native analogue
+of Silo worker threads).  Rounds proceed over a shared snapshot:
+
+  read      — gather values + TIDs for every op;
+  lock      — writers claim rows via scatter-min of lane id (a deterministic
+              global lock order — the paper locks in address order to avoid
+              deadlock; lane-id order is our equivalent);
+  validate  — Silo read validation: a lane aborts (retries next round) if any
+              row it accessed is claimed by an earlier lane this round, i.e.
+              its read TIDs would have changed / the row is locked (§4.2);
+  install   — winners draw TIDs satisfying criteria (a)(b)(c) and scatter
+              post-images + TIDs.
+
+With ``deterministic=True`` the same machinery becomes the Calvin baseline:
+lock-order is the pre-assigned global order and read validation is skipped
+(deterministic execution never aborts; §7.3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tid as tidlib
+from repro.core.ops import apply_op, is_write_kind
+
+
+def run_single_master(val, tidw, txns, epoch, max_rounds: int = 16,
+                      deterministic: bool = False, last_tid0=None):
+    """val: (N, C) int32 (master's flat view over ALL partitions);
+    tidw: (N,) uint32.
+
+    txns: {'valid': (B,), 'row': (B, M) global row, 'kind': (B, M),
+           'delta': (B, M, C), 'user_abort': (B,)}.
+    """
+    N, C = val.shape
+    B, M = txns["row"].shape
+    lanes = jnp.arange(B, dtype=jnp.int32)
+    SENTINEL = jnp.int32(B)
+
+    runnable = txns["valid"] & ~txns["user_abort"]
+    last_tid = last_tid0 if last_tid0 is not None else jnp.zeros((B,), jnp.uint32)
+
+    def round_fn(state, round_idx):
+        val, tidw, committed, last_tid, retries, committed_round = state
+        active = runnable & ~committed                                  # (B,)
+        rows, kind, delta = txns["row"], txns["kind"], txns["delta"]
+
+        old = val[rows]                                                 # (B,M,C)
+        rtids = tidw[rows]                                              # (B,M)
+        new = apply_op(kind, old, delta)
+        wmask = is_write_kind(kind) & active[:, None]                   # (B,M)
+        amask = active[:, None] & (kind >= 0)                           # all ops
+
+        # --- lock acquisition: scatter-min lane id over claimed rows
+        claim_lane = jnp.where(wmask, lanes[:, None], SENTINEL)
+        lock = jnp.full((N + 1,), SENTINEL, jnp.int32)
+        lock = lock.at[jnp.where(wmask, rows, N)].min(claim_lane)
+        holder = lock[rows]                                             # (B,M)
+
+        wins_all = jnp.all(jnp.where(wmask, holder == lanes[:, None], True), axis=1)
+        if deterministic:
+            # Calvin: deterministic order, no read validation; a txn runs when
+            # it holds all its locks (reads included) in global order
+            rlock = jnp.full((N + 1,), SENTINEL, jnp.int32)
+            rlock = rlock.at[jnp.where(amask, rows, N)].min(
+                jnp.where(amask, lanes[:, None], SENTINEL))
+            holder_any = rlock[rows]
+            commit_now = active & jnp.all(
+                jnp.where(amask, holder_any == lanes[:, None], True), axis=1)
+        else:
+            # Silo validation: abort if an earlier lane writes anything I read
+            dirty = holder < lanes[:, None]                             # (B,M)
+            read_ok = jnp.all(~(amask & dirty), axis=1)
+            commit_now = active & wins_all & read_ok
+
+        # --- TID generation (criteria a, b, c)
+        obs = jnp.max(jnp.where(amask, rtids, jnp.uint32(0)), axis=1)
+        new_tid = tidlib.next_tid(epoch, obs, last_tid)                 # (B,)
+
+        # --- install: winners only (unique per row by construction)
+        w = wmask & commit_now[:, None]
+        wrows = jnp.where(w, rows, N)
+        val_pad = jnp.concatenate([val, jnp.zeros((1, C), val.dtype)], 0)
+        val = val_pad.at[wrows.reshape(-1)].set(
+            new.reshape(-1, C))[:N]
+        tid_pad = jnp.concatenate([tidw, jnp.zeros((1,), tidw.dtype)], 0)
+        tidw = tid_pad.at[wrows.reshape(-1)].set(
+            jnp.broadcast_to(new_tid[:, None], (B, M)).reshape(-1))[:N]
+
+        committed_round = jnp.where(commit_now & ~committed, round_idx,
+                                    committed_round)
+        committed = committed | commit_now
+        last_tid = jnp.where(commit_now, new_tid, last_tid)
+        retries = retries + jnp.sum(active & ~commit_now)
+        log = {"row": jnp.where(w, rows, -1), "val": new,
+               "tid": jnp.broadcast_to(new_tid[:, None], (B, M)), "write": w}
+        return (val, tidw, committed, last_tid, retries, committed_round), log
+
+    committed0 = jnp.zeros((B,), bool)
+    cround0 = jnp.full((B,), -1, jnp.int32)
+    (val, tidw, committed, last_tid, retries, committed_round), logs = jax.lax.scan(
+        round_fn, (val, tidw, committed0, last_tid, jnp.int32(0), cround0),
+        jnp.arange(max_rounds, dtype=jnp.int32))
+
+    stats = {
+        "committed": jnp.sum(committed),
+        "starved": jnp.sum(runnable & ~committed),
+        "user_aborts": jnp.sum(txns["valid"] & txns["user_abort"]),
+        "retries": retries,
+        "writes": jnp.sum(logs["write"]),
+    }
+    # logs stacked over rounds: (rounds, B, M, …) — replication consumes the
+    # flattened committed-write stream (Thomas rule makes order irrelevant).
+    return val, tidw, {"log": logs, "committed": committed,
+                       "committed_round": committed_round,
+                       "last_tid": last_tid}, stats

@@ -1,0 +1,66 @@
+"""Silo-style TID words (§3 of the paper).
+
+A TID is a uint32:  [ epoch : 8 | sequence : 23 | lock : 1 ].
+
+Criteria for a committing transaction's TID (paper §3):
+  (a) larger than the TID of any record in its read/write set,
+  (b) larger than the worker's last chosen TID,
+  (c) in the current global epoch.
+
+The lock bit lives in the LSB so `tid > other` comparisons order first by
+epoch, then sequence — exactly the serial-equivalent order the Thomas write
+rule needs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPOCH_BITS = 8
+SEQ_BITS = 23
+LOCK_MASK = jnp.uint32(1)
+SEQ_SHIFT = 1
+EPOCH_SHIFT = 1 + SEQ_BITS
+SEQ_MASK = jnp.uint32((1 << SEQ_BITS) - 1)
+EPOCH_MASK = jnp.uint32((1 << EPOCH_BITS) - 1)
+
+
+def make_tid(epoch, seq, locked=False):
+    epoch = jnp.asarray(epoch, jnp.uint32)
+    seq = jnp.asarray(seq, jnp.uint32)
+    t = (epoch << EPOCH_SHIFT) | (seq << SEQ_SHIFT)
+    return t | LOCK_MASK if locked else t
+
+
+def tid_epoch(tid):
+    return (jnp.asarray(tid, jnp.uint32) >> EPOCH_SHIFT) & EPOCH_MASK
+
+
+def tid_seq(tid):
+    return (jnp.asarray(tid, jnp.uint32) >> SEQ_SHIFT) & SEQ_MASK
+
+
+def tid_locked(tid):
+    return (jnp.asarray(tid, jnp.uint32) & LOCK_MASK) != 0
+
+
+def tid_lock(tid):
+    return jnp.asarray(tid, jnp.uint32) | LOCK_MASK
+
+
+def tid_unlock(tid):
+    return jnp.asarray(tid, jnp.uint32) & ~LOCK_MASK
+
+
+def next_tid(epoch, observed_max_tid, last_tid):
+    """TID satisfying (a), (b), (c): seq = max(observed, last)+1 in `epoch`.
+    TIDs from other epochs contribute seq 0 (epoch bits already dominate the
+    ordering, so criterion (a) holds whenever obs is from an epoch <= ours)."""
+    e = jnp.asarray(epoch, jnp.uint32)
+
+    def seq_in_epoch(t):
+        t = tid_unlock(t)
+        return jnp.where(tid_epoch(t) == e, tid_seq(t), jnp.uint32(0))
+
+    seq = jnp.maximum(seq_in_epoch(observed_max_tid),
+                      seq_in_epoch(last_tid)) + jnp.uint32(1)
+    return make_tid(e, seq)

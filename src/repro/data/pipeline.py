@@ -1,0 +1,63 @@
+"""Deterministic synthetic data pipeline + dry-run input specs.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input of a given (arch, shape-cell) — weak-type-correct, shardable, zero
+allocation — the dry-run lowers against these.  ``make_batch`` materializes
+the same structure with real arrays for smoke tests and the example drivers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+
+def _batch_tree(cfg: ArchConfig, kind: str, seq_len: int, batch: int):
+    """Returns {name: (shape, dtype)} for the given step kind."""
+    t = {}
+    if cfg.frontend == "audio_stub":
+        t["frames"] = ((batch, seq_len, cfg.frontend_dim), jnp.bfloat16)
+        if kind == "train":
+            t["labels"] = ((batch, seq_len), jnp.int32)
+        return t
+    if cfg.frontend == "vision_stub" and kind in ("train", "prefill"):
+        n_text = seq_len - cfg.n_patches
+        t["tokens"] = ((batch, n_text), jnp.int32)
+        t["patch_embeds"] = ((batch, cfg.n_patches, cfg.frontend_dim), jnp.bfloat16)
+        if kind == "train":
+            t["labels"] = ((batch, n_text), jnp.int32)
+        return t
+    if kind == "decode":
+        t["tokens"] = ((batch, 1), jnp.int32)
+        return t
+    t["tokens"] = ((batch, seq_len), jnp.int32)
+    if kind == "train":
+        t["labels"] = ((batch, seq_len), jnp.int32)
+    return t
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    tree = _batch_tree(cfg, cell.kind, cell.seq_len, cell.global_batch)
+    return {k: jax.ShapeDtypeStruct(shape, dtype) for k, (shape, dtype) in tree.items()}
+
+
+def make_batch(cfg: ArchConfig, kind: str, seq_len: int, batch: int,
+               seed: int = 0) -> dict:
+    tree = _batch_tree(cfg, kind, seq_len, batch)
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (shape, dtype) in tree.items():
+        if dtype == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(shape), jnp.float32).astype(dtype)
+    return out
+
+
+def synthetic_stream(cfg: ArchConfig, seq_len: int, batch: int, n_steps: int,
+                     seed: int = 0):
+    """Deterministic stream of train batches (host-side, per-step seeds)."""
+    for step in range(n_steps):
+        yield make_batch(cfg, "train", seq_len, batch, seed=seed * 100_003 + step)

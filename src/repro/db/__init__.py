@@ -1,0 +1,4 @@
+from repro.db.table import Database, TableSpec, make_database, snapshot_commit, revert_to_snapshot
+
+__all__ = ["Database", "TableSpec", "make_database", "snapshot_commit",
+           "revert_to_snapshot"]

@@ -1,0 +1,65 @@
+"""Open-addressing hash index over dense arrays (vectorized linear probing).
+
+The paper's tables are hash tables (§3).  Pointer-chasing has no TPU analogue,
+so the index is a power-of-two slot array probed with vectorized gathers; a
+batch of lookups is a (B, max_probes) gather fan-out resolved with argmax.
+Used by the generic key->row path and exercised directly by tests; YCSB/TPC-C
+primary keys also have direct-index fast paths (DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+
+
+def make_index(n_slots: int):
+    assert n_slots & (n_slots - 1) == 0, "n_slots must be a power of two"
+    return {"key": jnp.full((n_slots,), EMPTY, jnp.int32),
+            "row": jnp.full((n_slots,), EMPTY, jnp.int32)}
+
+
+def _hash(key, n_slots):
+    k = jnp.asarray(key, jnp.uint32)
+    k = (k ^ (k >> 16)) * jnp.uint32(0x45d9f3b)
+    k = (k ^ (k >> 16)) * jnp.uint32(0x45d9f3b)
+    k = k ^ (k >> 16)
+    return (k & jnp.uint32(n_slots - 1)).astype(jnp.int32)
+
+
+def insert(index, keys, rows, max_probes: int = 32):
+    """Sequential batch insert (scan) — index build is a setup-time op."""
+    n_slots = index["key"].shape[0]
+
+    def put(idx, kr):
+        key, row = kr
+        h = _hash(key, n_slots)
+
+        def body(state):
+            i, _ = state
+            return i + 1, (h + i + 1) % n_slots
+
+        def cond(state):
+            i, slot = state
+            return (idx["key"][slot] != EMPTY) & (i < max_probes)
+
+        _, slot = jax.lax.while_loop(cond, body, (jnp.int32(0), h))
+        return {"key": idx["key"].at[slot].set(key),
+                "row": idx["row"].at[slot].set(row)}, None
+
+    index, _ = jax.lax.scan(put, index, (keys, rows))
+    return index
+
+
+def lookup(index, keys, max_probes: int = 32):
+    """Vectorized probe: (B,) keys -> (B,) rows (-1 if absent)."""
+    n_slots = index["key"].shape[0]
+    h = _hash(keys, n_slots)                                  # (B,)
+    probes = (h[:, None] + jnp.arange(max_probes)[None, :]) % n_slots
+    probe_keys = index["key"][probes]                         # (B, max_probes)
+    hit = probe_keys == keys[:, None]
+    any_hit = jnp.any(hit, axis=1)
+    first = jnp.argmax(hit, axis=1)
+    rows = index["row"][probes[jnp.arange(keys.shape[0]), first]]
+    return jnp.where(any_hit, rows, EMPTY)

@@ -1,0 +1,283 @@
+"""TPC-C workload (§7.1.1): NewOrder + Payment (88% of the standard mix; the
+other three need range scans the paper's system also does not support).
+
+Partitioned by warehouse: one partition == one warehouse, all 9 tables hashed
+by warehouse id; ITEM is read-only and replicated per partition (the paper
+replicates read-only data everywhere and never ships it).  Rows are int32
+word-packed; the *byte* accounting (Fig. 15) uses the true TPC-C row sizes.
+
+Default mix: alternating NewOrder/Payment; 10% of NewOrder and 15% of Payment
+are cross-partition (§7.1.1).  1% of NewOrder aborts (invalid item id).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.ops import ADD, APPEND, PAY_CUST, READ, SET, STOCK_DECR
+
+C = 10
+M = 50                 # ops per NewOrder (worst case); Payment padded
+N_DIST = 10
+
+# true TPC-C row byte sizes (for replication accounting)
+ROW_BYTES = {"warehouse": 89, "district": 95, "customer": 655, "stock": 306,
+             "item": 82, "orders": 24, "new_order": 8, "order_line": 54}
+# operation-replication operand sizes
+OP_BYTES = {READ: 0, SET: 24, ADD: 16, APPEND: 24, STOCK_DECR: 16,
+            PAY_CUST: 28}
+
+# customer row layout: [data_hash, data_len, balance, ytd_paid, pay_cnt,
+# discount] — c_data words first so the fused PAY_CUST op owns cols 0-1.
+
+
+@dataclass(frozen=True)
+class TPCCConfig:
+    n_partitions: int
+    n_items: int = 100_000
+    cust_per_district: int = 3_000
+    order_ring: int = 1_024            # retained orders per district
+    neworder_cross: float = 0.10
+    payment_cross: float = 0.15
+    neworder_abort: float = 0.01
+    seed: int = 0
+
+    # ---- per-partition row layout --------------------------------------
+    @property
+    def off_warehouse(self):
+        return 0
+
+    @property
+    def off_district(self):
+        return 1
+
+    @property
+    def off_customer(self):
+        return 1 + N_DIST
+
+    @property
+    def off_stock(self):
+        return self.off_customer + N_DIST * self.cust_per_district
+
+    @property
+    def off_item(self):
+        return self.off_stock + self.n_items
+
+    @property
+    def off_orders(self):
+        return self.off_item + self.n_items
+
+    @property
+    def off_new_order(self):
+        return self.off_orders + N_DIST * self.order_ring
+
+    @property
+    def off_order_line(self):
+        return self.off_new_order + N_DIST * self.order_ring
+
+    @property
+    def rows_per_partition(self):
+        return self.off_order_line + N_DIST * self.order_ring * 15
+
+
+@dataclass
+class TPCCState:
+    """Host-side sequencer state: o_id assignment per (warehouse, district).
+    Order-id draw is hoisted into the router (stored-procedure parameters),
+    keeping insert rows unique across retries — noted in DESIGN.md."""
+    cfg: TPCCConfig
+    next_o_id: np.ndarray = None
+
+    def __post_init__(self):
+        if self.next_o_id is None:
+            self.next_o_id = np.full((self.cfg.n_partitions, N_DIST), 3001,
+                                     np.int64)
+
+
+def init_values(cfg: TPCCConfig, rng: np.random.Generator):
+    """Initial (P, R, C) int32 database content."""
+    P, R = cfg.n_partitions, cfg.rows_per_partition
+    val = np.zeros((P, R, C), np.int32)
+    val[:, cfg.off_warehouse, 1] = rng.integers(0, 2000, P)            # w_tax
+    d = np.arange(N_DIST)
+    val[:, cfg.off_district + d, 0] = 3001                             # next_o_id
+    val[:, cfg.off_district + d, 2] = rng.integers(0, 2000, (P, N_DIST))
+    cust = slice(cfg.off_customer, cfg.off_customer + N_DIST * cfg.cust_per_district)
+    val[:, cust, 5] = rng.integers(0, 5000, (P, N_DIST * cfg.cust_per_district))
+    stock = slice(cfg.off_stock, cfg.off_stock + cfg.n_items)
+    val[:, stock, 0] = rng.integers(10, 101, (P, cfg.n_items))         # s_qty
+    item = slice(cfg.off_item, cfg.off_item + cfg.n_items)
+    val[:, item, 0] = rng.integers(100, 10000, (P, cfg.n_items))       # i_price
+    return val
+
+
+def _new_order(cfg, state, rng, w):
+    """Emit one NewOrder as (parts, rows, kinds, deltas, is_cross, abort)."""
+    d_id = rng.integers(0, N_DIST)
+    c_id = rng.integers(0, cfg.cust_per_district)
+    ol_cnt = rng.integers(5, 16)
+    is_cross = rng.random() < cfg.neworder_cross
+    abort = rng.random() < cfg.neworder_abort
+    o_id = state.next_o_id[w, d_id]
+    state.next_o_id[w, d_id] += 1
+    slot = int(o_id % cfg.order_ring)
+
+    parts = np.full(M, w, np.int32)
+    rows = np.zeros(M, np.int32)
+    kinds = np.full(M, READ, np.int32)
+    deltas = np.zeros((M, C), np.int32)
+    tables = ["warehouse"] * M
+
+    rows[0] = cfg.off_warehouse                                        # w tax
+    rows[1] = cfg.off_district + d_id                                  # RMW next_o_id
+    kinds[1] = ADD
+    deltas[1, 0] = 1
+    tables[1] = "district"
+    rows[2] = cfg.off_customer + d_id * cfg.cust_per_district + c_id
+    tables[2] = "customer"
+
+    remote_items = set()
+    if is_cross and cfg.n_partitions > 1:
+        remote_items = set(rng.choice(ol_cnt, size=max(1, ol_cnt // 5),
+                                      replace=False).tolist())
+    for i in range(int(ol_cnt)):
+        item = rng.integers(0, cfg.n_items)
+        qty = rng.integers(1, 11)
+        supply_w = w
+        if i in remote_items:
+            supply_w = int(rng.integers(0, cfg.n_partitions))
+        j = 3 + 2 * i
+        rows[j] = cfg.off_item + item                                  # price
+        tables[j] = "item"
+        rows[j + 1] = cfg.off_stock + item
+        parts[j + 1] = supply_w
+        kinds[j + 1] = STOCK_DECR
+        deltas[j + 1, 0] = qty
+        deltas[j + 1, 3] = int(supply_w != w)
+        tables[j + 1] = "stock"
+
+    base = 3 + 2 * 15
+    rows[base] = cfg.off_orders + d_id * cfg.order_ring + slot         # order
+    kinds[base] = SET
+    deltas[base, :4] = (c_id, int(o_id), int(ol_cnt), int(not remote_items))
+    tables[base] = "orders"
+    rows[base + 1] = cfg.off_new_order + d_id * cfg.order_ring + slot
+    kinds[base + 1] = SET
+    deltas[base + 1, 0] = int(o_id)
+    tables[base + 1] = "new_order"
+    for i in range(int(ol_cnt)):
+        r = base + 2 + i
+        rows[r] = (cfg.off_order_line
+                   + (d_id * cfg.order_ring + slot) * 15 + i)
+        kinds[r] = SET
+        deltas[r, 0] = 1
+        tables[r] = "order_line"
+
+    return parts, rows, kinds, deltas, bool(remote_items), abort, tables
+
+
+def _payment(cfg, rng, w):
+    d_id = rng.integers(0, N_DIST)
+    c_id = rng.integers(0, cfg.cust_per_district)
+    amount = int(rng.integers(100, 500000))
+    is_cross = rng.random() < cfg.payment_cross and cfg.n_partitions > 1
+    c_w = int(rng.integers(0, cfg.n_partitions)) if is_cross else w
+
+    parts = np.full(M, w, np.int32)
+    rows = np.zeros(M, np.int32)
+    kinds = np.full(M, READ, np.int32)
+    deltas = np.zeros((M, C), np.int32)
+    tables = ["warehouse"] * M
+
+    kinds[0] = ADD                                                     # w_ytd
+    rows[0] = cfg.off_warehouse
+    deltas[0, 0] = amount
+    rows[1] = cfg.off_district + d_id
+    kinds[1] = ADD                                                     # d_ytd
+    deltas[1, 1] = amount
+    tables[1] = "district"
+    crow = cfg.off_customer + d_id * cfg.cust_per_district + c_id
+    rows[2] = crow
+    parts[2] = c_w
+    kinds[2] = PAY_CUST       # fused: c_data concat + balance/ytd/cnt update
+    deltas[2, 0] = amount & 0x7FFFFFFF
+    deltas[2, 1] = 24
+    deltas[2, 2] = -amount
+    deltas[2, 3] = amount
+    deltas[2, 4] = 1
+    tables[2] = "customer"
+
+    return parts, rows, kinds, deltas, (c_w != w), False, tables
+
+
+def make_batch(cfg: TPCCConfig, state: TPCCState, n_txns: int,
+               seed: int | None = None):
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    P, R = cfg.n_partitions, cfg.rows_per_partition
+
+    all_parts, all_rows, all_kinds, all_deltas = [], [], [], []
+    all_cross, all_abort, all_home, all_tables = [], [], [], []
+    for i in range(n_txns):
+        w = int(rng.integers(0, P))
+        if i % 2 == 0:
+            parts, rows, kinds, deltas, cross, abort, tables = _new_order(
+                cfg, state, rng, w)
+        else:
+            parts, rows, kinds, deltas, cross, abort, tables = _payment(
+                cfg, rng, w)
+        all_parts.append(parts); all_rows.append(rows); all_kinds.append(kinds)
+        all_deltas.append(deltas); all_cross.append(cross)
+        all_abort.append(abort); all_home.append(w); all_tables.append(tables)
+
+    parts = np.stack(all_parts); rows = np.stack(all_rows)
+    kinds = np.stack(all_kinds); deltas = np.stack(all_deltas)
+    is_cross = np.array(all_cross); abort = np.array(all_abort)
+    home = np.array(all_home, np.int32)
+    row_bytes = np.array([[ROW_BYTES[t] for t in ts] for ts in all_tables],
+                         np.int32)
+    op_bytes = np.vectorize(lambda k: OP_BYTES[int(k)])(kinds).astype(np.int32)
+
+    single = ~is_cross
+    n_single = int(single.sum())
+    T = max(1, int(np.ceil(n_single / P * 1.5)) + 2)
+    ptxn = {
+        "valid": np.zeros((P, T), bool),
+        "row": np.zeros((P, T, M), np.int32),
+        "kind": np.zeros((P, T, M), np.int32),
+        "delta": np.zeros((P, T, M, C), np.int32),
+        "user_abort": np.zeros((P, T), bool),
+    }
+    prow_bytes = np.zeros((P, T, M), np.int32)
+    pop_bytes = np.zeros((P, T, M), np.int32)
+    fill = np.zeros(P, np.int32)
+    routed = 0
+    for i in np.nonzero(single)[0]:
+        p = home[i]
+        t = fill[p]
+        if t >= T:
+            continue
+        ptxn["valid"][p, t] = True
+        ptxn["row"][p, t] = rows[i]
+        ptxn["kind"][p, t] = kinds[i]
+        ptxn["delta"][p, t] = deltas[i]
+        ptxn["user_abort"][p, t] = abort[i]
+        prow_bytes[p, t] = row_bytes[i]
+        pop_bytes[p, t] = op_bytes[i]
+        fill[p] += 1
+        routed += 1
+
+    cx = np.nonzero(is_cross)[0]
+    cross = {
+        "valid": np.ones(len(cx), bool),
+        "row": (parts[cx].astype(np.int64) * R + rows[cx]).astype(np.int32),
+        "kind": kinds[cx],
+        "delta": deltas[cx],
+        "user_abort": abort[cx],
+    }
+    return {
+        "ptxn": ptxn, "cross": cross,
+        "n_single": routed, "n_cross": len(cx),
+        "p_row_bytes": prow_bytes, "p_op_bytes": pop_bytes,
+        "c_row_bytes": row_bytes[cx], "c_op_bytes": op_bytes[cx],
+    }

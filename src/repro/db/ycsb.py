@@ -1,0 +1,106 @@
+"""YCSB workload (§7.1.1): 1 table, 10 int-word columns, 10 ops/txn,
+90/10 read/write, uniform access, 200K records/partition (scalable), default
+10% cross-partition transactions.
+
+The generator emits the unified txn format consumed by both executors:
+single-partition txns routed per partition (P, T, M) and cross-partition txns
+as a flat batch (B, M) with global rows.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.ops import READ, SET
+
+C = 10             # int32 words per row
+M = 10             # ops per transaction
+ROW_BYTES = 100    # paper: 10 columns x 10 random bytes
+
+
+@dataclass(frozen=True)
+class YCSBConfig:
+    n_partitions: int
+    records_per_partition: int = 200_000
+    cross_ratio: float = 0.10
+    write_ops: int = 1             # of 10 -> the 90/10 mix
+    seed: int = 0
+
+    @property
+    def total_rows(self):
+        return self.n_partitions * self.records_per_partition
+
+
+def route_single(cfg, home, rows, kinds, deltas, T):
+    """Group single-partition txns by home partition into (P, T, M) arrays."""
+    P = cfg.n_partitions
+    n = home.shape[0]
+    out = {
+        "valid": np.zeros((P, T), bool),
+        "row": np.zeros((P, T, M), np.int32),
+        "kind": np.zeros((P, T, M), np.int32),
+        "delta": np.zeros((P, T, M, C), np.int32),
+        "user_abort": np.zeros((P, T), bool),
+    }
+    fill = np.zeros(P, np.int32)
+    for i in range(n):
+        p = home[i]
+        t = fill[p]
+        if t >= T:
+            continue
+        out["valid"][p, t] = True
+        out["row"][p, t] = rows[i]
+        out["kind"][p, t] = kinds[i]
+        out["delta"][p, t] = deltas[i]
+        fill[p] += 1
+    return out, int(fill.sum())
+
+
+def make_batch(cfg: YCSBConfig, n_txns: int, seed: int | None = None):
+    """Returns dict with 'ptxn' (P,T,…), 'cross' (B,M,…), metadata."""
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    P, R = cfg.n_partitions, cfg.records_per_partition
+
+    is_cross = rng.random(n_txns) < cfg.cross_ratio
+    home = rng.integers(0, P, n_txns).astype(np.int32)
+
+    # op partitions: single-partition -> home; cross -> random partitions
+    op_part = np.repeat(home[:, None], M, axis=1)
+    cross_parts = rng.integers(0, P, (n_txns, M)).astype(np.int32)
+    # ensure cross txns touch ≥2 partitions: first op stays home
+    cross_parts[:, 0] = home
+    op_part = np.where(is_cross[:, None], cross_parts, op_part)
+
+    op_idx = rng.integers(0, R, (n_txns, M)).astype(np.int32)
+    kinds = np.full((n_txns, M), READ, np.int32)
+    wpos = rng.integers(0, M, (n_txns, cfg.write_ops))
+    for j in range(cfg.write_ops):
+        kinds[np.arange(n_txns), wpos[:, j]] = SET
+    deltas = rng.integers(0, 2**31 - 1, (n_txns, M, C), dtype=np.int64).astype(np.int32)
+
+    single = ~is_cross
+    n_single = int(single.sum())
+    T = max(1, int(np.ceil(n_single / P * 1.3)) + 2)
+    ptxn, routed = route_single(
+        cfg, home[single], op_idx[single], kinds[single], deltas[single], T)
+
+    cross = {
+        "valid": np.ones(int(is_cross.sum()), bool),
+        "row": (op_part[is_cross].astype(np.int64) * R
+                + op_idx[is_cross]).astype(np.int32),
+        "kind": kinds[is_cross],
+        "delta": deltas[is_cross],
+        "user_abort": np.zeros(int(is_cross.sum()), bool),
+    }
+    row_bytes = np.full((M,), ROW_BYTES, np.int32)
+    # paper §7.5: a YCSB write updates the whole record -> op bytes = row bytes
+    return {
+        "ptxn": ptxn, "cross": cross,
+        "n_single": routed, "n_cross": int(is_cross.sum()),
+        "row_bytes": row_bytes, "op_bytes": row_bytes.copy(),
+    }
+
+
+def schema_rows(cfg: YCSBConfig):
+    return cfg.records_per_partition

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel directory holds kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper, interpret=True off-TPU) and ref.py
+(pure-jnp oracle used by the allclose test sweeps):
+
+* thomas_merge    -- replication-stream apply under the Thomas write rule
+                     (the paper's replica-side hot loop, SS3/SS5);
+* flash_attention -- online-softmax attention; causal / window / encoder /
+                     slot-cache decode in one kernel; GQA via kv index_map;
+* mamba2_ssd      -- chunked state-space-duality scan (Mamba-2 / Hymba);
+* rmsnorm         -- fused residual-add + RMSNorm epilogue.
+"""
+from repro.kernels.flash_attention import ops as flash_attention
+from repro.kernels.mamba2_ssd import ops as mamba2_ssd
+from repro.kernels.rmsnorm import ops as rmsnorm
+from repro.kernels.thomas_merge import ops as thomas_merge
+
+__all__ = ["flash_attention", "mamba2_ssd", "rmsnorm", "thomas_merge"]

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (FlashAttention-2 style online softmax).
+
+Grid: (BH, Sq/block_q, Sk/block_k) with dimension semantics
+(parallel, parallel, arbitrary) — the kv axis iterates innermost so the
+(block_q, D) fp32 accumulator + running (m, l) live in VMEM scratch across kv
+steps; softmax is re-scaled online (never materializing the (Sq, Sk) score
+matrix — the XLA-level chunked attention this replaces holds a full
+(block, Sk) f32 tile in HBM).
+
+Positions are explicit refs: q_pos (Sq,), k_pos (Sk,) — so one kernel serves
+causal training, bidirectional encoders, sliding windows (k_pos > q_pos - w)
+and slot-indexed decode caches (k_pos = slot_pos, -1 masks empty slots).
+GQA is handled by the kv index_map (kv head = q head // group), so kv tiles
+are fetched once per group without materializing an expanded cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale, causal, window, n_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                    # (bq, D)
+    k = k_ref[0]                                    # (bk, D)
+    v = v_ref[0]
+    qpos = qpos_ref[...]                            # (bq,) int32
+    kpos = kpos_ref[...]                            # (bk,) int32
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    mask = (kpos[None, :] >= 0)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                             # (bq,)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                 # (bq, bk)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "groups", "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, q_pos, k_pos, *, groups=1, causal=True,
+                           window=None, scale=None, block_q=256, block_k=256,
+                           interpret=False):
+    """q: (BH, Sq, D); k, v: (BH//groups, Sk, D); q_pos (Sq,), k_pos (Sk,)."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_q, n_k = Sq // block_q, Sk // block_k
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b // groups, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b // groups, ki, 0)),
+            pl.BlockSpec((block_q,), lambda b, qi, ki: (qi,)),
+            pl.BlockSpec((block_k,), lambda b, qi, ki: (ki,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, q_pos, k_pos)

@@ -1,0 +1,67 @@
+"""Public wrappers: training/prefill attention and slot-cache decode.
+
+Block sizes target TPU v5e VMEM: (block_q=256, block_k=256, D<=128) keeps
+q/k/v tiles + fp32 accumulator around 0.5 MB — far under the ~16 MB budget,
+leaving room for double buffering; both matmul dims are multiples of the
+128-wide MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _interp(interpret):
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def mha(q, k, v, *, causal=True, window=None, block_q=256, block_k=256,
+        interpret=None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    groups = H // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, k.shape[1], D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, v.shape[1], D)
+    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+    k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    out = flash_attention_pallas(qf, kf, vf, q_pos, k_pos, groups=groups,
+                                 causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=_interp(interpret))
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+def decode(q, k_cache, v_cache, slot_pos, pos, *, window=None, block_k=256,
+           interpret=None):
+    """q: (B, 1, H, D); caches: (B, S_alloc, Hkv, D); slot_pos: (S_alloc,)
+    absolute positions per slot (-1 empty); pos: scalar current position."""
+    B, _, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    groups = H // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, 1, D)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, -1, D)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, -1, D)
+    q_pos = jnp.full((1,), pos, jnp.int32)
+    out = flash_attention_pallas(qf, kf, vf, q_pos,
+                                 jnp.asarray(slot_pos, jnp.int32),
+                                 groups=groups, causal=True, window=window,
+                                 block_q=1, block_k=block_k,
+                                 interpret=_interp(interpret))
+    return out.reshape(B, H, 1, D).transpose(0, 2, 1, 3)
+
+
+def mha_ref(q, k, v, *, causal=True, window=None):
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = jnp.repeat(k, H // Hkv, axis=2).transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vf = jnp.repeat(v, H // Hkv, axis=2).transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    out = flash_attention_ref(qf, kf, vf, jnp.arange(Sq, dtype=jnp.int32),
+                              jnp.arange(k.shape[1], dtype=jnp.int32),
+                              causal=causal, window=window)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: masked attention with explicit (q_pos, k_pos) positions.
+
+Covers every mode the kernel serves: causal training, bidirectional encoding,
+sliding windows, and slot-cache decode (k_pos = slot positions, -1 = empty).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                        scale=None):
+    """q: (BH, Sq, D); k, v: (BH, Sk, D); q_pos: (Sq,); k_pos: (Sk,)."""
+    D = q.shape[-1]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = k_pos[None, :] >= 0
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: chunked SSD (state-space duality, Mamba-2).
+
+Grid (BH, S/Q) with (parallel, arbitrary) semantics: the (P, N) fp32 state
+lives in VMEM scratch and flows across chunk steps.  Per chunk the kernel
+does the quadratic intra-chunk part on the MXU — L ⊙ (C Bᵀ) then @ (x·dt) —
+plus the rank-1-per-token inter-chunk correction from the carried state, and
+updates the state with the decay-weighted chunk contribution.  This maps the
+SSD algorithm's "matmul-rich within chunks, recurrence across chunks"
+structure directly onto MXU + VMEM (see DESIGN.md §Hardware adaptation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(xdt_ref, logd_ref, b_ref, c_ref, y_ref, hfin_ref, h_ref,
+                *, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xdt = xdt_ref[0]                                # (Q, P) f32
+    logd = logd_ref[0]                              # (Q,)  f32
+    Bv = b_ref[0]                                   # (Q, N)
+    Cv = c_ref[0]                                   # (Q, N)
+    Q = xdt.shape[0]
+
+    cs = jnp.cumsum(logd)                           # (Q,)
+    # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j
+    diff = cs[:, None] - cs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    CB = jax.lax.dot_general(Cv, Bv, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    y_intra = jax.lax.dot_general(CB * L, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += exp(cs_i) * C_i · h      (h: (P, N))
+    h = h_ref[...]
+    y_inter = jax.lax.dot_general(Cv, h, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (Q, P)
+    y_ref[0] = (y_intra + y_inter * jnp.exp(cs)[:, None]).astype(y_ref.dtype)
+
+    # state update: h' = h * exp(cs_Q) + Σ_j exp(cs_Q - cs_j) xdt_j ⊗ B_j
+    decay_state = jnp.exp(cs[-1] - cs)              # (Q,)
+    contrib = jax.lax.dot_general(xdt * decay_state[:, None], Bv,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (P, N)
+    h_ref[...] = h * jnp.exp(cs[-1]) + contrib
+
+    @pl.when(ci == n_chunks - 1)
+    def _done():
+        hfin_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(xdt, logd, Bv, Cv, *, chunk=128, interpret=False):
+    """Shapes as in ref.py; S % chunk == 0."""
+    BH, S, P = xdt.shape
+    N = Bv.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks)
+    y, hfin = pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, P, N), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), xdt.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xdt, logd, Bv, Cv)
+    return y, hfin

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the SSD kernel (interpret=True off-TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mamba2_ssd.kernel import ssd_pallas
+from repro.kernels.mamba2_ssd.ref import ssd_ref
+
+
+def ssd(xdt, logd, Bv, Cv, *, chunk=128, use_pallas=True, interpret=None):
+    if not use_pallas:
+        return ssd_ref(xdt, logd, Bv, Cv)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssd_pallas(xdt, logd, Bv, Cv, chunk=chunk, interpret=interpret)

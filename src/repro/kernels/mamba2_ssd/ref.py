@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD scan: sequential token-by-token recurrence.
+
+h_t = h_{t-1} * exp(dt_t * A) + B_t ⊗ (x_t * dt_t);   y_t = C_t · h_t
+(x pre-multiplied by dt and log-decay precomputed by the caller, matching the
+kernel interface).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xdt, logd, Bv, Cv):
+    """xdt: (BH, S, P) f32 (= x*dt); logd: (BH, S) f32 (= dt*A);
+    Bv, Cv: (BH, S, N) f32 -> y (BH, S, P), h_final (BH, P, N)."""
+    BH, S, P = xdt.shape
+    N = Bv.shape[-1]
+
+    def step(h, inp):
+        x_t, ld_t, b_t, c_t = inp
+        h = h * jnp.exp(ld_t)[:, None, None] + x_t[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bpn,bn->bp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((BH, P, N), jnp.float32)
+    hf, ys = jax.lax.scan(
+        step, h0,
+        (xdt.transpose(1, 0, 2), logd.transpose(1, 0),
+         Bv.transpose(1, 0, 2), Cv.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), hf

@@ -1,0 +1,18 @@
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def rmsnorm(x, w, residual=None, *, eps=1e-5, use_pallas=True,
+            interpret=None):
+    if residual is None:
+        residual = jnp.zeros_like(x)
+    if not use_pallas:
+        return rmsnorm_ref(x, w, residual, eps=eps)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rmsnorm_pallas(x, w, residual, eps=eps, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: RMSNorm with optional fused residual add."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, residual=None, eps: float = 1e-5):
+    """x: (T, D); w: (D,); optional residual (T, D) added BEFORE the norm
+    (the fused bias-add+norm epilogue). Returns (y, x+residual)."""
+    if residual is not None:
+        x = x + residual
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype), x

@@ -1,0 +1,42 @@
+"""Jit'd public wrapper: pads inputs to block multiples and dispatches to the
+Pallas kernel (interpret=True on CPU) or the jnp reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.thomas_merge.kernel import thomas_merge_pallas
+from repro.kernels.thomas_merge.ref import thomas_merge_ref
+
+
+def _pad_to(x, mult, axis, fill=0):
+    n = x.shape[axis]
+    target = ((n + mult - 1) // mult) * mult
+    if target == n:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - n)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def thomas_merge(val, tidw, wrows, wvals, wtids, *, use_pallas=True,
+                 block_rows=256, block_k=256, interpret=None):
+    """Replication-stream apply (Thomas write rule). Shapes as in ref.py;
+    wrows may contain -1 (skip). Pads N to block_rows and K to block_k."""
+    if not use_pallas:
+        return thomas_merge_ref(val, tidw, wrows, wvals, wtids)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N, C = val.shape
+    valp = _pad_to(val, block_rows, 0)
+    tidp = _pad_to(tidw, block_rows, 0)
+    rowsp = _pad_to(jnp.asarray(wrows, jnp.int32), block_k, 0, fill=-1)
+    valsp = _pad_to(jnp.asarray(wvals), block_k, 0)
+    tidsp = _pad_to(jnp.asarray(wtids, jnp.uint32), block_k, 0)
+    br = min(block_rows, valp.shape[0])
+    bk = min(block_k, rowsp.shape[0])
+    out_val, out_tid = thomas_merge_pallas(
+        valp, tidp, rowsp, valsp, tidsp, block_rows=br, block_k=bk,
+        interpret=interpret)
+    return out_val[:N], out_tid[:N]

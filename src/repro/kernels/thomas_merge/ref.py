@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the Thomas-write-rule merge (replication apply).
+
+Semantics: for a batch of writes (row, value, tid), apply each write iff its
+TID is strictly greater than the record's current TID; among duplicate rows
+the max-TID write wins.  Rows < 0 are skipped.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def thomas_merge_ref(val, tidw, wrows, wvals, wtids):
+    """val: (N, C) int32; tidw: (N,) uint32; wrows: (K,) int32;
+    wvals: (K, C) int32; wtids: (K,) uint32 -> (val', tidw')."""
+    N, C = val.shape
+    rows = jnp.where(wrows >= 0, wrows, N)
+    tid_pad = jnp.concatenate([tidw, jnp.zeros((1,), tidw.dtype)])
+    merged = tid_pad.at[rows].max(wtids)
+    win = (wtids == merged[rows]) & (wtids > tid_pad[rows]) & (wrows >= 0)
+    prow = jnp.where(win, rows, N)
+    val_pad = jnp.concatenate([val, jnp.zeros((1, C), val.dtype)])
+    val_new = val_pad.at[prow].set(wvals)[:N]
+    tid_new = tid_pad.at[prow].set(wtids)[:N]
+    return val_new, tid_new

@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first init,
+and the production meshes need 512 placeholder host devices.  Run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+
+Each successful cell writes results/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis and the derived roofline terms (single-pod
+only — §Roofline reads these).
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ALL_ARCHS, SHAPES, cell_applicable, get_arch
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import bundle_for
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> Path:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{tag}" if tag else ""
+    return RESULTS / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, tag: str = "",
+             overrides: dict | None = None) -> dict:
+    cfg = get_arch(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape]
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        return {"arch": arch, "shape": shape, "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, shapes, in_sh, out_sh, donate = bundle_for(cfg, cell, mesh)
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        print(compiled.memory_analysis())
+        print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        hlo = compiled.as_text()
+
+    n_chips = int(len(mesh.devices.flat))
+    roof = rl.derive(cost, hlo, n_chips, rl.model_flops_for(cfg, cell))
+    argb = getattr(mem, "argument_size_in_bytes", 0)
+    outb = getattr(mem, "output_size_in_bytes", 0)
+    tmpb = getattr(mem, "temp_size_in_bytes", 0)
+    peak = argb + tmpb
+    hbm = 16 * (1 << 30)
+    rec = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod, "tag": tag,
+        "status": "ok", "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "mem": {"argument_bytes": int(argb), "output_bytes": int(outb),
+                "temp_bytes": int(tmpb), "peak_bytes": int(peak),
+                "fits_16GiB": bool(peak <= hbm)},
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed",
+                                          "transcendentals")},
+        "roofline": roof.to_dict(),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (int/float/bool parsed)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        overrides[k] = v
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_fail = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                path = cell_path(arch, shape, multi_pod, args.tag)
+                if args.skip_done and path.exists():
+                    print(f"[done] {path.name}")
+                    continue
+                label = f"{arch} x {shape} x {'2x16x16' if multi_pod else '16x16'}"
+                print(f"=== {label}", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi_pod, args.tag,
+                                   overrides=overrides or None)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_fail += status == "error"
+                path.write_text(json.dumps(rec, indent=1))
+                if status == "ok":
+                    r = rec["roofline"]
+                    print(f"    ok  peak={rec['mem']['peak_bytes']/2**30:.2f}GiB "
+                          f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+                          f"coll={r['collective_s']*1e3:.2f}ms -> {r['bottleneck']}",
+                          flush=True)
+                else:
+                    print(f"    {status}: {rec.get('reason', rec.get('error'))}",
+                          flush=True)
+    print(f"dryrun summary: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

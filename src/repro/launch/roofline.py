@@ -1,0 +1,136 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+memory term     = HLO_bytes / (chips * HBM_bw)
+collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` on the SPMD-partitioned module reports *per-device* flops
+and bytes, so the per-chip division is already applied; the collective bytes
+are parsed out of the partitioned HLO text (per-device operand sizes summed
+over every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+
+# TPU v5e hardware envelope (per task spec)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,4096]{1,0}  or  f32[]  or  (bf16[8,128], f32[8])
+_SHAPE_RE = re.compile(r"(pred|[sucbf]\d+|bf16)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    bytes_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device operand bytes of every collective instruction."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        result_shape, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand bytes: shapes inside the call parens; fall back to result
+        paren = line[line.index("("):]
+        # strip metadata/attribute tail which can contain shapes in comments
+        paren = paren.split("metadata=")[0]
+        operand_bytes = _shape_bytes(paren)
+        if operand_bytes == 0:
+            operand_bytes = _shape_bytes(result_shape)
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + operand_bytes
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_counts: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0           # 6*N*D (or active-N) global
+    useful_flops_ratio: float = 0.0    # model_flops / (flops_per_device*chips)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def derive(cost: dict, hlo_text: str, n_chips: int, model_flops: float = 0.0) -> Roofline:
+    """Derive the three terms from the partitioned HLO (trip-count aware).
+
+    ``cost_analysis()`` numbers are kept in the record for reference but the
+    terms come from :mod:`repro.launch.hlo_analysis`, which multiplies loop
+    bodies by their trip counts (scan-over-layers would otherwise be counted
+    once).
+    """
+    from repro.launch import hlo_analysis
+    tot = hlo_analysis.analyze(hlo_text)
+    flops = tot.flops
+    byts = tot.traffic_bytes
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = tot.collective_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    ratio = model_flops / (flops * n_chips) if flops > 0 else 0.0
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=tot.collective_bytes,
+        collective_counts={k: int(v) for k, v in tot.counts_by_kind.items()},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_flops_ratio=ratio,
+    )
+
+
+def model_flops_for(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N*D for train (D = tokens per step), 2*N*D for fwd-only."""
+    n = cfg.n_active_params()
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6 if cell.kind == "train" else 2
+    return float(mult) * n * tokens

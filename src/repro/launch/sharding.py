@@ -1,0 +1,214 @@
+"""Sharding policy: PartitionSpecs for params, optimizer state, batches, caches.
+
+Baseline policy (the §Perf hillclimbs mutate this):
+
+* tensor-parallel over ``model``: attention heads, FFN hidden, experts, vocab;
+* batch over ``(pod, data)``;
+* FSDP (weight sharding over ``data``) for archs flagged ``cfg.fsdp``;
+* optimizer state ALWAYS owner-sharded over ``data`` on top of the param spec
+  (ZeRO-1) — the STAR "single-master" dense update;
+* KV caches: kv-heads over ``model`` when divisible, else sequence-sharded;
+* SSM params/state replicated over ``model`` (head counts are not divisible).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0 and n >= mesh.shape[axis]
+
+
+def add_data_axis(spec: P, shape: tuple, mesh, min_size: int = 1 << 20) -> P:
+    """ZeRO-style: shard the largest free dim over `data` if profitable."""
+    if "data" not in mesh.axis_names:
+        return spec
+    flat = []
+    for e in spec:
+        flat.extend(e if isinstance(e, tuple) else (e,))
+    if "data" in flat:
+        return spec
+    size = 1
+    for s in shape:
+        size *= s
+    if size < min_size:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, -1
+    for i, (s, e) in enumerate(zip(shape, entries)):
+        if e is None and s % mesh.shape["data"] == 0 and s > best:
+            best, best_dim = s, i
+    if best_dim < 0:
+        return spec
+    entries[best_dim] = "data"
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+def param_specs(cfg: ArchConfig, param_tree, mesh):
+    """param_tree: pytree of arrays or ShapeDtypeStructs."""
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        L = (cfg.n_layers,) if name.startswith("layers/") else ()
+        pre = (None,) * len(L)
+
+        def p(*rest):
+            return P(*pre, *rest)
+
+        sp = P(*((None,) * len(shape)))
+        vocab_tp = (not cfg.batch_over_model) and _div(cfg.padded_vocab, mesh, "model")
+        if "norm" in name or "A_log" in name or name.endswith("D") or "dt_bias" in name \
+                or "conv_" in name:
+            sp = P(*((None,) * len(shape)))
+        elif name == "embed":
+            sp = P("model", None) if vocab_tp else P(None, None)
+        elif name == "lm_head":
+            sp = P(None, "model") if vocab_tp else P(None, None)
+        elif "frontend" in name:
+            sp = P(None, None)
+        elif name.endswith("attn/wq"):
+            sp = p(None, "model", None) if _div(cfg.n_heads_padded, mesh, "model") else p(None, None, None)
+        elif name.endswith("attn/wk") or name.endswith("attn/wv"):
+            sp = p(None, "model", None) if _div(cfg.n_kv_heads_padded, mesh, "model") else p(None, None, None)
+        elif name.endswith("attn/wo"):
+            sp = p("model", None, None) if _div(cfg.n_heads_padded, mesh, "model") else p(None, None, None)
+        elif name.endswith("attn/w_uq") or name.endswith("attn/w_uk") or name.endswith("attn/w_uv"):
+            sp = p(None, "model", None) if _div(cfg.n_heads_padded, mesh, "model") else p(None, None, None)
+        elif name.endswith("attn/w_dq") or name.endswith("attn/w_dkv") or name.endswith("attn/w_kr"):
+            sp = p(None, None)
+        elif "mlp/w_up" in name or "mlp/w_gate" in name:
+            sp = p(None, "model") if _div(cfg.d_ff, mesh, "model") else p(None, None)
+        elif "mlp/w_down" in name:
+            sp = p("model", None) if _div(cfg.d_ff, mesh, "model") else p(None, None)
+        elif "moe/router" in name:
+            sp = p(None, None)
+        elif "moe/" in name:  # (L, E, a, b) expert weights: experts over model
+            sp = p("model", None, None) if _div(cfg.n_experts, mesh, "model") else p(None, None, None)
+        elif "ssm/" in name:
+            sp = P(*((None,) * len(shape)))
+
+        # batch_over_model archs use the model axis for DATA parallelism —
+        # any weight sharded over 'model' there would conflict (same axis on
+        # both operand batch and weight) and force giant reshards.
+        if cfg.batch_over_model:
+            sp = P(*((None,) * len(shape)))
+        # embed/lm_head stay vocab-sharded only: GSPMD partitions gathers over
+        # a 1-axis-sharded table cleanly but replicates 2-axis-sharded lookups.
+        # Norm/scale vectors are too small to be worth a per-layer gather.
+        if cfg.fsdp and name not in ("embed", "lm_head") and "norm" not in name:
+            sp = add_data_axis(sp, shape, mesh)
+        return sp
+
+    return jax.tree_util.tree_map_with_path(spec_for, param_tree)
+
+
+def opt_specs(cfg: ArchConfig, opt_tree, pspecs, mesh):
+    """Optimizer state: param spec + forced `data` owner-sharding (ZeRO-1)."""
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        if name == "step":
+            return P()
+        # strip the leading master/m/v key, reuse the param spec
+        sub = jax.tree_util.tree_map(lambda x: x, pspecs)
+        node = sub
+        for k in path[1:]:
+            key = getattr(k, "key", getattr(k, "idx", None))
+            node = node[key]
+        return add_data_axis(node, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, opt_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+def data_specs(batch_tree, mesh, cfg: ArchConfig | None = None,
+               kind: str = "train"):
+    import numpy as np
+    ba = batch_axes(mesh)
+    if (cfg is not None and cfg.batch_over_model and kind in ("train", "prefill")
+            and "model" in mesh.axis_names):
+        ba = ba + ("model",)
+    nb = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+
+    def spec_for(path, leaf):
+        B = leaf.shape[0]
+        rest = (None,) * (len(leaf.shape) - 1)
+        if ba and B % nb == 0:
+            return P(ba, *rest)
+        # fall back to (pod, data) only
+        ba2 = batch_axes(mesh)
+        nb2 = int(np.prod([mesh.shape[a] for a in ba2])) if ba2 else 1
+        if ba2 and B % nb2 == 0:
+            return P(ba2, *rest)
+        return P(None, *rest)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_tree)
+
+
+def cache_specs(cfg: ArchConfig, cache_tree, mesh):
+    """KV cache: batch over (pod,data); kv heads over model if divisible,
+    else sequence-sharded over model (split-K decode)."""
+    ba = batch_axes(mesh)
+    import numpy as np
+    nb = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if name == "pos" or "slot_pos" in name:
+            return P(*((None,) * len(shape)))
+        if name.endswith("/k") or name.endswith("/v"):
+            # (L, B, S_alloc, Hkv, Dh)
+            bspec = ba if (ba and shape[1] % nb == 0) else None
+            if _div(cfg.n_kv_heads_padded, mesh, "model"):
+                return P(None, bspec, None, "model", None)
+            if shape[2] % mesh.shape["model"] == 0:
+                return P(None, bspec, "model", None, None)
+            return P(None, bspec, None, None, None)
+        if "c_kv" in name or "k_rope" in name:
+            # (L, B, S_alloc, r)
+            bspec = ba if (ba and shape[1] % nb == 0) else None
+            if shape[2] % mesh.shape["model"] == 0:
+                return P(None, bspec, "model", None)
+            return P(None, bspec, None, None)
+        if "ssm/h" in name or "ssm/conv" in name:
+            bspec = ba if (ba and shape[1] % nb == 0) else None
+            return P(None, bspec, *((None,) * (len(shape) - 2)))
+        # fallback: shard batch dim if present at axis 1
+        if len(shape) >= 2 and ba and shape[1] % nb == 0:
+            return P(None, ba, *((None,) * (len(shape) - 2)))
+        return P(*((None,) * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,138 @@
+"""Step builders shared by the dry-run, the trainer and the serving engine.
+
+Each builder returns ``(fn, in_shapes, in_shardings, out_shardings, donate)``
+ready for ``jax.jit(...).lower(*in_shapes)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.data.pipeline import input_specs
+from repro.launch import sharding as shd
+from repro.models import transformer as tf
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_fn(cfg: ArchConfig, mesh, hp: AdamWConfig = AdamWConfig()):
+    """Single fused step; with cfg.microbatches > 1, gradients accumulate in
+    fp32 across a lax.scan of microbatches (the activation working set shrinks
+    by the same factor — how large archs fit the 16 GiB HBM budget)."""
+
+    def grad_of(params, b):
+        def lf(p):
+            return tf.loss_fn(p, b, cfg, mesh=mesh)
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        k = cfg.microbatches
+        B = jax.tree.leaves(batch)[0].shape[0]
+        if B % k != 0:                 # smoke/tiny batches: no accumulation
+            k = 1
+        if k == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, b):
+                gsum, lsum = carry
+                (loss, metrics), grads = grad_of(params, b)
+                gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                    gsum, grads)
+                return (gsum, lsum + loss), metrics
+
+            (gsum, lsum), metrics = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = lsum / k
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt_state, hp)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_fn(cfg: ArchConfig, mesh, alloc_len: int | None = None):
+    def prefill_step(params, batch):
+        return tf.prefill(params, batch, cfg, mesh=mesh, alloc_len=alloc_len)
+
+    return prefill_step
+
+
+def make_decode_fn(cfg: ArchConfig, mesh):
+    def decode(params, cache, batch):
+        return tf.decode_step(params, cache, batch["tokens"], cfg, mesh=mesh)
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# lowering bundles for the dry-run
+# ---------------------------------------------------------------------------
+def opt_shapes(cfg: ArchConfig, param_shapes):
+    return jax.eval_shape(init_opt_state, param_shapes)
+
+
+def train_bundle(cfg: ArchConfig, cell: ShapeCell, mesh):
+    pshapes = tf.params_shape(cfg)
+    oshapes = opt_shapes(cfg, pshapes)
+    bshapes = input_specs(cfg, cell)
+    pspec = shd.param_specs(cfg, pshapes, mesh)
+    ospec = shd.opt_specs(cfg, oshapes, pspec, mesh)
+    bspec = shd.data_specs(bshapes, mesh, cfg, cell.kind)
+    fn = make_train_fn(cfg, mesh)
+    in_sh = (shd.named(mesh, pspec), shd.named(mesh, ospec), shd.named(mesh, bspec))
+    metric_sh = {k: NamedSharding(mesh, P()) for k in ("ce", "aux", "loss", "grad_norm")}
+    out_sh = (in_sh[0], in_sh[1], metric_sh)
+    return fn, (pshapes, oshapes, bshapes), in_sh, out_sh, (0, 1)
+
+
+def prefill_bundle(cfg: ArchConfig, cell: ShapeCell, mesh):
+    pshapes = tf.params_shape(cfg)
+    bshapes = input_specs(cfg, cell)
+    pspec = shd.param_specs(cfg, pshapes, mesh)
+    bspec = shd.data_specs(bshapes, mesh, cfg, cell.kind)
+    fn = make_prefill_fn(cfg, mesh, alloc_len=cell.seq_len)
+    cshapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, cell.global_batch, cell.seq_len))
+    cspec = shd.cache_specs(cfg, cshapes, mesh)
+    logits_spec = shd.data_specs(
+        {"x": jax.ShapeDtypeStruct((cell.global_batch, 1, cfg.vocab_size),
+                                   jnp.bfloat16)}, mesh)["x"]
+    in_sh = (shd.named(mesh, pspec), shd.named(mesh, bspec))
+    out_sh = (NamedSharding(mesh, logits_spec), shd.named(mesh, cspec))
+    return fn, (pshapes, bshapes), in_sh, out_sh, ()
+
+
+def decode_bundle(cfg: ArchConfig, cell: ShapeCell, mesh):
+    pshapes = tf.params_shape(cfg)
+    bshapes = input_specs(cfg, cell)
+    cshapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, cell.global_batch, cell.seq_len))
+    pspec = shd.param_specs(cfg, pshapes, mesh)
+    bspec = shd.data_specs(bshapes, mesh, cfg, cell.kind)
+    cspec = shd.cache_specs(cfg, cshapes, mesh)
+    fn = make_decode_fn(cfg, mesh)
+    logits_spec = shd.data_specs(
+        {"x": jax.ShapeDtypeStruct((cell.global_batch, 1, cfg.vocab_size),
+                                   jnp.bfloat16)}, mesh)["x"]
+    in_sh = (shd.named(mesh, pspec), shd.named(mesh, cspec), shd.named(mesh, bspec))
+    out_sh = (NamedSharding(mesh, logits_spec), shd.named(mesh, cspec))
+    return fn, (pshapes, cshapes, bshapes), in_sh, out_sh, (1,)
+
+
+def bundle_for(cfg: ArchConfig, cell: ShapeCell, mesh):
+    if cell.kind == "train":
+        return train_bundle(cfg, cell, mesh)
+    if cell.kind == "prefill":
+        return prefill_bundle(cfg, cell, mesh)
+    if cell.kind == "decode":
+        return decode_bundle(cfg, cell, mesh)
+    raise ValueError(cell.kind)

@@ -1,0 +1,284 @@
+"""Attention variants: GQA (with partial RoPE / sliding window), and MLA.
+
+Prefill/train use an XLA-level "flash" pattern: queries are processed in
+chunks with a ``lax.map`` so the (chunk, S) score tile — not the full (S, S)
+matrix — is the peak intermediate.  Decode keeps a slot-indexed KV cache that
+supports both full caches and ring buffers (sliding window), with absolute
+positions stored per slot so RoPE is applied exactly once, at write time.
+
+MLA decode uses the absorbed form: the latent c_kv is the cache and the
+per-head up-projections are folded into the query/output side.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, normal_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# shared chunked attention core
+# ---------------------------------------------------------------------------
+def _attend(q, k, v, q_pos, k_pos, *, causal, window, scale,
+            scores_bf16=False):
+    """q: (B, Sq, H, Dh) ; k, v: (B, Sk, H, Dh[v]) — kv already head-expanded.
+
+    Head-expanded layout (instead of a (Hkv, G) reshape) keeps the head axis
+    cleanly shardable over the ``model`` mesh axis.  fp32 softmax by default;
+    scores_bf16 halves the score-tile HBM traffic (perf knob — the Pallas
+    flash kernel makes this moot by keeping tiles in VMEM).
+    """
+    acc_t = jnp.bfloat16 if scores_bf16 else jnp.float32
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=acc_t) * jnp.asarray(scale, acc_t)
+    mask = k_pos[None, :] >= 0                                   # valid slots
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    neg = jnp.asarray(-3e38 if not scores_bf16 else -3e38, acc_t)
+    scores = jnp.where(mask[None, None], scores, neg)
+    m = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    e = jnp.exp((scores - m).astype(acc_t))
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def expand_kv(k, groups: int, index_map=None):
+    """(B, S, Hkv, Dh) -> (B, S, H, Dh).  With padded-head TP the q->kv
+    assignment is an explicit static gather (grouping is irregular)."""
+    if index_map is not None:
+        return k[:, :, jnp.asarray(index_map, jnp.int32), :]
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal, window, scale, chunk,
+                      scores_bf16=False):
+    """Query-chunked exact attention.  Shapes as in :func:`_attend`."""
+    B, Sq, H, Dh = q.shape
+    if Sq <= chunk or Sq % chunk != 0:
+        return _attend(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                       scale=scale, scores_bf16=scores_bf16)
+    n = Sq // chunk
+    qc = q.reshape(B, n, chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(n, chunk)
+
+    # checkpoint each chunk: backward recomputes the (chunk, Sk) score tile
+    # instead of saving a stacked (n, B, H, chunk, Sk) probs tensor.
+    # NOTE (§Perf iterations 1/3): the while-loop body here degrades GSPMD
+    # sharding (full-head f32 q/k gathers per iteration); a static unroll was
+    # probed and REGRESSED (co-live chunk buffers, worse collectives), so the
+    # map stays and the real fixes are (a) attn_chunk = seq at train shapes
+    # (loop-free) and (b) the Pallas flash kernel for long prefill.
+    @jax.checkpoint
+    def one(args):
+        qi, pi = args
+        return _attend(qi, k, v, pi, k_pos, causal=causal, window=window,
+                       scale=scale, scores_bf16=scores_bf16)
+
+    out = jax.lax.map(one, (qc, pc))                     # (n, B, chunk, H, Dhv)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, out.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg, dtype) -> dict:
+    d, Dh = cfg.d_model, cfg.d_head
+    H, Hkv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": normal_init(ks[0], (d, H, Dh), s, dtype),
+        "wk": normal_init(ks[1], (d, Hkv, Dh), s, dtype),
+        "wv": normal_init(ks[2], (d, Hkv, Dh), s, dtype),
+        "wo": normal_init(ks[3], (H, Dh, d), (H * Dh) ** -0.5, dtype),
+    }
+
+
+def _head_mask(cfg, dtype):
+    """(H_pad,) mask: pad heads contribute zero and receive zero grads."""
+    if cfg.n_heads_padded == cfg.n_heads:
+        return None
+    return (jnp.arange(cfg.n_heads_padded) < cfg.n_heads).astype(dtype)
+
+
+def attention_forward(p, x, cfg, positions):
+    """Full-sequence attention (train / prefill).
+
+    x: (B, S, d); positions: (S,) int32.  Returns (y, (k, v)) with k/v post-RoPE
+    for cache seeding.
+    """
+    B, S, _ = x.shape
+    Dh = cfg.d_head
+    H, Hkv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    idx = cfg.kv_index_map() if cfg.pad_heads_to else None
+    G = H // Hkv if idx is None else 1
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    q = apply_rope(q, positions[None, :], cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta, cfg.rope_fraction)
+    out = chunked_attention(q, expand_kv(k, G, idx), expand_kv(v, G, idx),
+                            positions, positions,
+                            causal=cfg.causal, window=cfg.sliding_window,
+                            scale=Dh ** -0.5, chunk=cfg.attn_chunk,
+                            scores_bf16=cfg.attn_scores_bf16)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return y, (k, v)
+
+
+def attention_decode(p, x, cache, cfg):
+    """One-token decode. x: (B, 1, d).
+
+    cache: {"k": (B, Salloc, Hkv, Dh), "v": ..., "slot_pos": (Salloc,) int32,
+            "pos": () int32 — absolute position of the incoming token}.
+    """
+    B = x.shape[0]
+    Dh = cfg.d_head
+    H, Hkv = cfg.n_heads_padded, cfg.n_kv_heads_padded
+    idx = cfg.kv_index_map() if cfg.pad_heads_to else None
+    G = H // Hkv if idx is None else 1
+    pos = cache["pos"]
+    S_alloc = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    pvec = jnp.full((1,), pos, dtype=jnp.int32)
+    q = apply_rope(q, pvec[None], cfg.rope_theta, cfg.rope_fraction)
+    k_new = apply_rope(k_new, pvec[None], cfg.rope_theta, cfg.rope_fraction)
+
+    slot = jnp.mod(pos, S_alloc)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,))
+
+    out = _attend(q, expand_kv(k, G, idx), expand_kv(v, G, idx), pvec, slot_pos,
+                  causal=cfg.causal, window=cfg.sliding_window,
+                  scale=Dh ** -0.5, scores_bf16=cfg.attn_scores_bf16)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    new_cache = {"k": k, "v": v, "slot_pos": slot_pos, "pos": pos}  # pos bumped by caller
+    return y, new_cache
+
+
+def init_attn_cache(cfg, batch, seq_len, dtype):
+    """Allocate an empty slot cache; sliding-window archs get a ring buffer."""
+    S_alloc = seq_len if cfg.sliding_window is None else min(seq_len, cfg.sliding_window)
+    shape = (batch, S_alloc, cfg.n_kv_heads_padded, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "slot_pos": jnp.full((S_alloc,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 family)
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg, dtype) -> dict:
+    d, H = cfg.d_model, cfg.n_heads_padded
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "w_dq": normal_init(ks[0], (d, qr), s, dtype),
+        "q_norm": jnp.ones((qr,), dtype),
+        "w_uq": normal_init(ks[1], (qr, H, dn + dr), qr ** -0.5, dtype),
+        "w_dkv": normal_init(ks[2], (d, kvr), s, dtype),
+        "kv_norm": jnp.ones((kvr,), dtype),
+        "w_kr": normal_init(ks[3], (d, dr), s, dtype),
+        "w_uk": normal_init(ks[4], (kvr, H, dn), kvr ** -0.5, dtype),
+        "w_uv": normal_init(ks[5], (kvr, H, dv), kvr ** -0.5, dtype),
+        "wo": normal_init(ks[6], (H, dv, d), (H * dv) ** -0.5, dtype),
+    }
+
+
+def _mla_qkv(p, x, cfg, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])            # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions[None, :], cfg.rope_theta)
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"])             # (B,S,kvr)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions[None, :],
+                        cfg.rope_theta)[:, :, 0]              # (B,S,dr)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p, x, cfg, positions):
+    """Expanded-form MLA for train/prefill. Returns (y, (c_kv, k_rope))."""
+    B, S, _ = x.shape
+    H = cfg.n_heads_padded
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"])     # (B,S,H,dn)
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"])          # (B,S,H,dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)            # (B,S,H,dn+dr)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (B, S, H, dr))], axis=-1)
+    out = chunked_attention(q, k, v, positions, positions,
+                            causal=cfg.causal, window=cfg.sliding_window,
+                            scale=(dn + dr) ** -0.5, chunk=cfg.attn_chunk,
+                            scores_bf16=cfg.attn_scores_bf16)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (c_kv, k_rope)
+
+
+def mla_decode(p, x, cache, cfg):
+    """Absorbed-form MLA decode: the cache holds only (c_kv, k_rope)."""
+    B = x.shape[0]
+    H = cfg.n_heads_padded
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    pos = cache["pos"]
+    S_alloc = cache["c_kv"].shape[1]
+    pvec = jnp.full((1,), pos, dtype=jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, x, cfg, pvec)
+
+    slot = jnp.mod(pos, S_alloc)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, slot, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,))
+
+    # absorb W_uk into the query: q_lat (B,1,H,kvr)
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"])
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv, preferred_element_type=jnp.float32)
+              + jnp.einsum("bshe,bte->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * (dn + dr) ** -0.5
+    mask = (slot_pos[None, :] >= 0) & (slot_pos[None, :] <= pvec[:, None])
+    scores = jnp.where(mask[:, None], scores, NEG_INF)        # (B,H,1,S)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(c_kv.dtype), c_kv)
+    out = jnp.einsum("bshr,rhe->bshe", out_lat, p["w_uv"])    # (B,1,H,dv)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "slot_pos": slot_pos, "pos": pos}
+
+
+def init_mla_cache(cfg, batch, seq_len, dtype):
+    S_alloc = seq_len if cfg.sliding_window is None else min(seq_len, cfg.sliding_window)
+    return {
+        "c_kv": jnp.zeros((batch, S_alloc, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, S_alloc, cfg.qk_rope_head_dim), dtype),
+        "slot_pos": jnp.full((S_alloc,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,96 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, init helpers.
+
+Everything is functional: params are plain nested dicts of jnp arrays, so the
+same code paths serve real execution (smoke tests / examples) and
+``jax.eval_shape`` (multi-pod dry-run, no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (supports partial-rotary, e.g. GLM4 / MLA)
+# ---------------------------------------------------------------------------
+def rope_freqs(d_rot: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot
+    return 1.0 / (theta ** exponent)          # (d_rot/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rope_fraction: float = 1.0) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    d_rot = int(d_head * rope_fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    rot, rest = x[..., :d_rot], x[..., d_rot:]
+    freqs = rope_freqs(d_rot, theta)                          # (d_rot/2,)
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # (..., S, 1, d_rot/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = rot[..., ::2].astype(jnp.float32), rot[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(rot.shape).astype(x.dtype)
+    return jnp.concatenate([rotated, rest], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# (gated) MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w_up": normal_init(ks[0], (d_model, d_ff), scale_in, dtype),
+        "w_down": normal_init(ks[1], (d_ff, d_model), scale_out, dtype),
+    }
+    if gated:
+        p["w_gate"] = normal_init(ks[2], (d_model, d_ff), scale_in, dtype)
+    return p
+
+
+def mlp_forward(p: dict, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        up = act_fn(act)(x @ p["w_gate"]) * up
+    else:
+        up = act_fn(act)(up)
+    return up @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# cross entropy (sharded-vocab friendly)
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None):
+    """logits (B, S, V) any float dtype; labels (B, S) int32. fp32 math."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,165 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like math
+inside fixed-size chunks, a linear recurrence across chunks (lax.scan).
+Decode is the O(1)-state recurrent step.  ``ngroups=1`` (B/C shared across
+heads) as in the published 130m config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def init_mamba2(key, cfg, dtype) -> dict:
+    d, di, N, H, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.n_ssm_heads, cfg.ssm_conv_width)
+    ks = jax.random.split(key, 5)
+    d_proj = 2 * di + 2 * N + H                     # x, z, B, C, dt
+    return {
+        "in_proj": normal_init(ks[0], (d, d_proj), d ** -0.5, dtype),
+        "conv_w": normal_init(ks[1], (W, di + 2 * N), 0.5, dtype),
+        "conv_b": jnp.zeros((di + 2 * N,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),      # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": normal_init(ks[2], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _split_proj(proj, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    xz, rest = proj[..., : 2 * di], proj[..., 2 * di:]
+    x_in, z = xz[..., :di], xz[..., di:]
+    Bv, Cv, dt = rest[..., :N], rest[..., N: 2 * N], rest[..., 2 * N:]
+    return x_in, z, Bv, Cv, dt
+
+
+def _causal_conv(u, w, b):
+    """u: (B, S, C); w: (W, C) depthwise causal conv via shifted adds."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    S = u.shape[1]
+    out = jnp.zeros_like(u)
+    for i in range(W):
+        out = out + pad[:, i: i + S, :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(logd):
+    """logd: (..., Q) -> (..., Q, Q) with [i, j] = sum_{k=j+1..i}, -inf for j>i."""
+    Q = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def mamba2_forward(p, x, cfg, return_state: bool = False):
+    """x: (B, S, d). S must be a multiple of ssm_chunk (or smaller than it)."""
+    Bsz, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:                 # largest divisor of S <= chunk
+        Q -= 1
+    nC = S // Q
+
+    proj = x @ p["in_proj"]
+    x_in, z, Bv, Cv, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([x_in, Bv, Cv], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    x_in, Bv, Cv = (conv_out[..., :di], conv_out[..., di: di + N],
+                    conv_out[..., di + N:])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                         # (H,)
+    logd = dt * A                                                    # (B,S,H) log decay
+    xh = x_in.reshape(Bsz, S, H, P)
+    xdt = xh.astype(jnp.float32) * dt[..., None]                     # (B,S,H,P)
+
+    # chunk
+    cBv = Bv.reshape(Bsz, nC, Q, N).astype(jnp.float32)
+    cCv = Cv.reshape(Bsz, nC, Q, N).astype(jnp.float32)
+    cxdt = xdt.reshape(Bsz, nC, Q, H, P)
+    clogd = logd.reshape(Bsz, nC, Q, H).transpose(0, 1, 3, 2)        # (B,nC,H,Q)
+
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(clogd))                                      # (B,nC,H,Q,Q)
+    CB = jnp.einsum("bcin,bcjn->bcij", cCv, cBv)                     # (B,nC,Q,Q)
+    M = CB[:, :, None] * L                                           # (B,nC,H,Q,Q)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M, cxdt)
+
+    # inter-chunk state recurrence
+    cs = jnp.cumsum(clogd, axis=-1)                                  # (B,nC,H,Q)
+    decay_out = jnp.exp(cs)                                          # prod dA 1..i
+    decay_state = jnp.exp(cs[..., -1:] - cs)                         # prod dA i+1..Q
+    chunk_states = jnp.einsum("bcjn,bcjhp,bchj->bchpn", cBv, cxdt, decay_state)
+    chunk_decay = jnp.exp(cs[..., -1])                               # (B,nC,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                                # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                              # emit state at chunk START
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_last, h_starts = jax.lax.scan(
+        scan_fn, h0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)                     # (B,nC,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", cCv, h_starts) * \
+        decay_out.transpose(0, 1, 3, 2)[..., None]                   # (B,nC,Q,H,P)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["out_proj"]
+    if return_state:
+        W = cfg.ssm_conv_width
+        conv_tail = jnp.pad(conv_in, ((0, 0), (W - 1, 0), (0, 0)))[:, -(W - 1):, :]
+        return out, {"h": h_last, "conv": conv_tail}
+    return out, None
+
+
+def mamba2_decode(p, x, cache, cfg):
+    """One-token step. x: (B, 1, d); cache: {"h": (B,H,P,N) f32, "conv": (B,W-1,C)}."""
+    Bsz = x.shape[0]
+    di, N, H, P, W = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                      cfg.ssm_head_dim, cfg.ssm_conv_width)
+    proj = x @ p["in_proj"]
+    x_in, z, Bv, Cv, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([x_in, Bv, Cv], axis=-1)               # (B,1,C)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)       # (B,W,C)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"])
+                           + p["conv_b"])[:, None, :]
+    x_in, Bv, Cv = (conv_out[..., :di], conv_out[..., di: di + N],
+                    conv_out[..., di + N:])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                             # (B,H)
+    xh = x_in.reshape(Bsz, H, P).astype(jnp.float32)
+    h = cache["h"] * dA[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", Bv[:, 0].astype(jnp.float32), xh, dt)
+    y = jnp.einsum("bn,bhpn->bhp", Cv[:, 0].astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["out_proj"]
+    return out, {"h": h, "conv": window[:, 1:, :]}
+
+
+def init_mamba2_cache(cfg, batch, dtype):
+    di, N, H, P, W = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                      cfg.ssm_head_dim, cfg.ssm_conv_width)
+    return {
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, di + 2 * N), dtype),
+    }

@@ -1,0 +1,153 @@
+"""Routed mixture-of-experts FFN with sort-based (one-hot-free) dispatch.
+
+Two execution paths with identical math:
+
+* ``moe_apply`` — the per-shard body: local tokens, a contiguous slice of
+  experts, capacity-bounded sort-based dispatch, partial-sum combine.  Runs
+  standalone on one device (smoke tests) with the full expert set.
+* ``moe_forward`` — expert-parallel wrapper: experts are sharded over the
+  ``model`` mesh axis, tokens over the ``data`` (+``pod``) axes.  Each model
+  rank computes its experts for its data-shard's tokens and the partial
+  outputs are combined with a ``psum`` over ``model`` — STAR's
+  "single-partition transactions run on their partition, no coordination"
+  phase maps exactly onto this expert-local compute; only the combine is a
+  collective.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import act_fn, normal_init
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": normal_init(ks[0], (d, E), d ** -0.5, jnp.float32),
+        "w_up": normal_init(ks[1], (E, d, ff), d ** -0.5, dtype),
+        "w_down": normal_init(ks[2], (E, ff, d), ff ** -0.5, dtype),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = normal_init(ks[3], (E, d, ff), d ** -0.5, dtype)
+    return p
+
+
+def moe_capacity(n_tokens: int, cfg) -> int:
+    cap = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(min(n_tokens, 16), min(cap, n_tokens))
+
+
+def route(router, x_flat, cfg):
+    """Returns (weights (T,k) f32, expert ids (T,k) i32, aux load-balance loss)."""
+    logits = (x_flat.astype(jnp.float32) @ router)                 # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(gates, cfg.top_k)                 # (T, k)
+    weights = weights / jnp.maximum(jnp.sum(weights, -1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ids[:, 0], cfg.n_experts, dtype=jnp.float32), axis=0)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return weights, ids, aux
+
+
+def moe_apply(p, x_flat, cfg, expert_offset: int, n_local_experts: int,
+              axis_name: str | tuple | None = None):
+    """Sort-based dispatch over a local expert slice.
+
+    x_flat: (T, d). p holds weights for ONLY the local experts
+    (w_up/(w_gate)/w_down first dim = n_local_experts) but the full router.
+    """
+    T, d = x_flat.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = moe_capacity(T, cfg)
+
+    weights, ids, aux = route(p["router"], x_flat, cfg)
+
+    # flatten assignments and sort by expert id
+    flat_ids = ids.reshape(-1)                                     # (T*k,)
+    flat_w = weights.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_ids, stable=True)
+    s_ids, s_w, s_tok = flat_ids[order], flat_w[order], flat_tok[order]
+
+    # position within expert via segment starts
+    starts = jnp.searchsorted(s_ids, jnp.arange(E, dtype=s_ids.dtype))
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[s_ids].astype(jnp.int32)
+
+    local = (s_ids >= expert_offset) & (s_ids < expert_offset + n_local_experts)
+    keep = local & (pos_in_e < C)
+    local_e = jnp.clip(s_ids - expert_offset, 0, n_local_experts - 1)
+    dest = jnp.where(keep, local_e * C + pos_in_e, n_local_experts * C)  # drop slot
+
+    # slot tables: which token / weight feeds each capacity slot.  Only int32
+    # scatters run at T*k size; the (rows, d_model) gather below touches just
+    # E_loc*C rows (not T*k) — this keeps dispatch traffic proportional to
+    # the tokens actually routed here.
+    n_slots = n_local_experts * C
+    slot_tok = jnp.full((n_slots + 1,), T, jnp.int32).at[dest].set(
+        s_tok, mode="drop")[:-1]
+    slot_w = jnp.zeros((n_slots + 1,), jnp.float32).at[dest].set(
+        jnp.where(keep, s_w, 0.0), mode="drop")[:-1]
+    valid = slot_tok < T
+    safe_tok = jnp.where(valid, slot_tok, 0)
+
+    buf = x_flat[safe_tok] * valid.astype(x_flat.dtype)[:, None]
+    buf = buf.reshape(n_local_experts, C, d)
+
+    # expert FFN
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    if "w_gate" in p:
+        up = act_fn(cfg.mlp_act)(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * up
+    else:
+        up = act_fn(cfg.mlp_act)(up)
+    out = jnp.einsum("ecf,efd->ecd", up, p["w_down"]).reshape(n_slots, d)
+
+    # combine (partial sum over this expert slice): scatter-add slot rows back
+    contrib = out * (slot_w * valid).astype(out.dtype)[:, None]
+    y = jnp.zeros((T, d), x_flat.dtype).at[safe_tok].add(
+        contrib.astype(x_flat.dtype))
+    if axis_name is not None:
+        y = jax.lax.psum(y, axis_name)
+        aux = jax.lax.pmean(aux, axis_name)
+    return y, aux
+
+
+def moe_forward(p, x, cfg, mesh=None):
+    """x: (B, S, d) -> (y, aux). Expert-parallel over the ``model`` axis."""
+    B, S, d = x.shape
+    if mesh is None or "model" not in mesh.axis_names or cfg.n_experts % mesh.shape["model"] != 0:
+        y, aux = moe_apply(p, x.reshape(-1, d), cfg, 0, cfg.n_experts)
+        return y.reshape(B, S, d), aux
+
+    m = mesh.shape["model"]
+    e_loc = cfg.n_experts // m
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = math.prod(mesh.shape[a] for a in batch_axes)
+    bspec = P(batch_axes, None, None) if B % nb == 0 else P(None, None, None)
+    expert_spec = {
+        k: (P(None) if k == "router" else P("model", None, None))
+        for k in p
+    }
+
+    def body(p_loc, x_loc):
+        off = jax.lax.axis_index("model") * e_loc
+        T = x_loc.shape[0] * x_loc.shape[1]
+        y, aux = moe_apply(p_loc, x_loc.reshape(T, d), cfg, off, e_loc,
+                           axis_name="model")
+        # make aux truly replicated across every mesh axis
+        aux = jax.lax.pmean(aux, axis_name=batch_axes) if batch_axes else aux
+        return y.reshape(x_loc.shape), aux
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(expert_spec, bspec),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )(p, x)
+    return y, aux

@@ -1,0 +1,351 @@
+"""Model assembly: blocks -> scan-over-layers LM with train/prefill/decode.
+
+Layer parameters are stacked along a leading L axis and consumed with
+``lax.scan`` so compile time is depth-independent (critical for the 512-device
+dry-runs on this single-core host).  Blocks are rematerialized
+(``jax.checkpoint``) when cfg.remat is set.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ArchConfig, BLOCK_ATTN_MLP, BLOCK_ATTN_MOE,
+                                BLOCK_HYMBA, BLOCK_MAMBA2, BLOCK_MLA_MLP)
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_lib
+from repro.models.layers import init_mlp, mlp_forward, normal_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+def init_layer(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"norm1": jnp.ones((d,), dtype)}
+    if cfg.block != BLOCK_MAMBA2:       # mamba2-130m: one mixer per block, no MLP
+        p["norm2"] = jnp.ones((d,), dtype)
+    if cfg.block in (BLOCK_ATTN_MLP, BLOCK_ATTN_MOE):
+        p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    if cfg.block == BLOCK_MLA_MLP:
+        p["attn"] = attn.init_mla(ks[0], cfg, dtype)
+    if cfg.block in (BLOCK_ATTN_MLP, BLOCK_MLA_MLP):
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_gated, dtype)
+    if cfg.block == BLOCK_ATTN_MOE:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype)
+    if cfg.block == BLOCK_MAMBA2:
+        p["ssm"] = m2.init_mamba2(ks[2], cfg, dtype)
+    if cfg.block == BLOCK_HYMBA:
+        p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+        p["ssm"] = m2.init_mamba2(ks[2], cfg, dtype)
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_gated, dtype)
+        p["attn_norm"] = jnp.ones((d,), dtype)
+        p["ssm_norm"] = jnp.ones((d,), dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_head, k_layers, k_front = jax.random.split(key, 4)
+    params = {
+        "embed": normal_init(k_emb, (cfg.padded_vocab, cfg.d_model),
+                             cfg.d_model ** -0.5, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(k_head, (cfg.d_model, cfg.padded_vocab),
+                                        cfg.d_model ** -0.5, dtype)
+    if cfg.frontend != "none":
+        params["frontend"] = {
+            "proj": normal_init(k_front, (cfg.frontend_dim, cfg.d_model),
+                                cfg.frontend_dim ** -0.5, dtype)}
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    return params
+
+
+def params_shape(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# blocks (full-sequence form). Return (x, per-layer cache or None)
+# ---------------------------------------------------------------------------
+def block_forward(lp, x, cfg, positions, mesh=None, want_cache=False):
+    h = rms_norm(x, lp["norm1"])
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if cfg.block in (BLOCK_ATTN_MLP, BLOCK_ATTN_MOE):
+        y, (k, v) = attn.attention_forward(lp["attn"], h, cfg, positions)
+        if want_cache:
+            cache = {"k": k, "v": v}
+        x = x + y
+    elif cfg.block == BLOCK_MLA_MLP:
+        y, (c_kv, k_rope) = attn.mla_forward(lp["attn"], h, cfg, positions)
+        if want_cache:
+            cache = {"c_kv": c_kv, "k_rope": k_rope}
+        x = x + y
+    elif cfg.block == BLOCK_MAMBA2:
+        y, state = m2.mamba2_forward(lp["ssm"], h, cfg, return_state=want_cache)
+        if want_cache:
+            cache = {"ssm": state}
+        return x + y, cache, aux        # single-mixer block: no MLP half
+    elif cfg.block == BLOCK_HYMBA:
+        ya, (k, v) = attn.attention_forward(lp["attn"], h, cfg, positions)
+        ys, state = m2.mamba2_forward(lp["ssm"], h, cfg, return_state=want_cache)
+        y = 0.5 * (rms_norm(ya, lp["attn_norm"]) + rms_norm(ys, lp["ssm_norm"]))
+        if want_cache:
+            cache = {"attn": {"k": k, "v": v}, "ssm": state}
+        x = x + y
+
+    h2 = rms_norm(x, lp["norm2"])
+    if cfg.block == BLOCK_ATTN_MOE:
+        y2, aux = moe_lib.moe_forward(lp["moe"], h2, cfg, mesh=mesh)
+    else:
+        y2 = mlp_forward(lp["mlp"], h2, cfg.mlp_act)
+    return x + y2, cache, aux
+
+
+def block_decode(lp, x, layer_cache, cfg, mesh=None):
+    """One-token step; layer_cache carries 'pos' injected by the caller."""
+    h = rms_norm(x, lp["norm1"])
+    new_cache = {}
+    if cfg.block in (BLOCK_ATTN_MLP, BLOCK_ATTN_MOE):
+        y, new_cache = attn.attention_decode(lp["attn"], h, layer_cache, cfg)
+        x = x + y
+    elif cfg.block == BLOCK_MLA_MLP:
+        y, new_cache = attn.mla_decode(lp["attn"], h, layer_cache, cfg)
+        x = x + y
+    elif cfg.block == BLOCK_MAMBA2:
+        y, st = m2.mamba2_decode(lp["ssm"], h, layer_cache["ssm"], cfg)
+        new_cache = {"ssm": st, "pos": layer_cache["pos"]}
+        return x + y, new_cache         # single-mixer block: no MLP half
+    elif cfg.block == BLOCK_HYMBA:
+        ac = dict(layer_cache["attn"]); ac["pos"] = layer_cache["pos"]
+        ya, nac = attn.attention_decode(lp["attn"], h, ac, cfg)
+        ys, nst = m2.mamba2_decode(lp["ssm"], h, layer_cache["ssm"], cfg)
+        y = 0.5 * (rms_norm(ya, lp["attn_norm"]) + rms_norm(ys, lp["ssm_norm"]))
+        nac.pop("pos")
+        new_cache = {"attn": nac, "ssm": nst, "pos": layer_cache["pos"]}
+        x = x + y
+
+    h2 = rms_norm(x, lp["norm2"])
+    if cfg.block == BLOCK_ATTN_MOE:
+        y2, _ = moe_lib.moe_forward(lp["moe"], h2, cfg, mesh=mesh)
+    else:
+        y2 = mlp_forward(lp["mlp"], h2, cfg.mlp_act)
+    return x + y2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embedding / frontend
+# ---------------------------------------------------------------------------
+def embed_inputs(params, batch, cfg: ArchConfig):
+    """Returns (x (B,S,d), positions (S,), loss_mask (B,S) or None)."""
+    if cfg.frontend == "audio_stub":
+        frames = batch["frames"]                         # (B, T, frontend_dim)
+        x = frames.astype(params["embed"].dtype) @ params["frontend"]["proj"]
+        S = x.shape[1]
+        return x, jnp.arange(S, dtype=jnp.int32), None
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    mask = None
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype) @ params["frontend"]["proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+        n_patch = pe.shape[1]
+        mask = jnp.concatenate(
+            [jnp.zeros((x.shape[0], n_patch), jnp.float32),
+             jnp.ones((x.shape[0], tokens.shape[1]), jnp.float32)], axis=1)
+    S = x.shape[1]
+    return x, jnp.arange(S, dtype=jnp.int32), mask
+
+
+def unembed(params, x, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w
+    if cfg.padded_vocab != cfg.vocab_size:                 # mask pad rows
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+def _seq_constraint(x, cfg, mesh):
+    """Sequence-parallel residual stream: the saved per-layer activation is
+    sharded over the model axis between blocks (Megatron-SP style)."""
+    if mesh is None or not cfg.seq_shard or cfg.batch_over_model:
+        return x
+    if "model" not in mesh.axis_names or x.shape[1] % mesh.shape["model"] != 0:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = ba if (ba and x.shape[0] % int(np.prod([mesh.shape[a] for a in ba])) == 0) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bspec, "model", None)))
+
+
+def forward(params, batch, cfg: ArchConfig, mesh=None, want_cache=False,
+            unembed_out=True):
+    """Returns (logits-or-hidden, caches, aux_loss, mask)."""
+    x, positions, mask = embed_inputs(params, batch, cfg)
+
+    def body(carry, lp):
+        x, aux = carry
+        x = _seq_constraint(x, cfg, mesh)
+        x, cache, aux_i = block_forward(lp, x, cfg, positions, mesh=mesh,
+                                        want_cache=want_cache)
+        # constrain the carry OUT as well: under remat the saved per-layer
+        # residual is then sequence-sharded (16x smaller), not replicated
+        x = _seq_constraint(x, cfg, mesh)
+        return (x, aux + aux_i), cache
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                    params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    if not unembed_out:
+        return x, caches, aux, mask
+    logits = unembed(params, x, cfg)
+    return logits, caches, aux, mask
+
+
+def chunked_ce(params, x, labels, mask, cfg: ArchConfig, chunk: int = 512):
+    """Sequence-chunked fused unembed+CE: the (B, S, V) logits tensor is never
+    materialized — each (B, chunk, V) tile is computed, reduced, and (via
+    jax.checkpoint) recomputed in the backward pass."""
+    B, S, _ = x.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    if S % chunk != 0 or S <= chunk:
+        from repro.models.layers import cross_entropy
+        return cross_entropy(unembed(params, x, cfg), labels, mask)
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(args):
+        x_i, l_i, m_i = args
+        logits = unembed(params, x_i, cfg).astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        lab = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - lab) * m_i), jnp.sum(m_i)
+
+    nll, cnt = jax.lax.map(one, (xc, lc, mc))
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(cnt), 1.0)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, mesh=None):
+    x, _, aux, mask = forward(params, batch, cfg, mesh=mesh, unembed_out=False)
+    labels = batch["labels"]
+    if mask is not None:                 # VLM: loss only on text positions
+        n_patch = x.shape[1] - labels.shape[1]
+        x = x[:, n_patch:]
+        mask = mask[:, n_patch:]
+    ce = chunked_ce(params, x, labels, mask, cfg)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Empty stacked cache pytree {'layers': (L,...), 'pos': ()}. """
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.block in (BLOCK_ATTN_MLP, BLOCK_ATTN_MOE):
+        one = attn.init_attn_cache(cfg, batch, max_len, dtype)
+        one.pop("pos")
+    elif cfg.block == BLOCK_MLA_MLP:
+        one = attn.init_mla_cache(cfg, batch, max_len, dtype)
+        one.pop("pos")
+    elif cfg.block == BLOCK_MAMBA2:
+        one = {"ssm": m2.init_mamba2_cache(cfg, batch, dtype)}
+    elif cfg.block == BLOCK_HYMBA:
+        ac = attn.init_attn_cache(cfg, batch, max_len, dtype)
+        ac.pop("pos")
+        one = {"attn": ac, "ssm": m2.init_mamba2_cache(cfg, batch, dtype)}
+    else:
+        raise ValueError(cfg.block)
+    L = cfg.n_layers
+    layers = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), one)
+    return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg: ArchConfig, mesh=None, alloc_len: int | None = None):
+    """Full-sequence prefill; returns (last-token logits, decode-ready cache)."""
+    logits, caches, _, _ = forward(params, batch, cfg, mesh=mesh, want_cache=True)
+    seq_len = logits.shape[1]
+    cache = _prefill_to_cache(caches, cfg, seq_len, alloc_len or seq_len)
+    return logits[:, -1:], cache
+
+
+def _prefill_to_cache(caches, cfg, seq_len: int, alloc_len: int):
+    """Convert stacked prefill outputs (k,v / latent / state) into a decode cache.
+
+    alloc_len: cache capacity (>= window for windowed archs). Slot layout is
+    position % capacity; prefill entries land at their natural slots.
+    """
+    pos = jnp.full((), seq_len, jnp.int32)
+    cap = alloc_len if cfg.sliding_window is None else min(alloc_len, cfg.sliding_window)
+
+    def to_slots(t):                       # t: (L, B, S, ...) -> (L, B, cap, ...)
+        keep = min(seq_len, cap)
+        tail = t[:, :, seq_len - keep: seq_len]
+        idx = jnp.mod(jnp.arange(seq_len - keep, seq_len), cap)
+        out = jnp.zeros(t.shape[:2] + (cap,) + t.shape[3:], t.dtype)
+        return out.at[:, :, idx].set(tail)
+
+    keep = min(seq_len, cap)
+    sp = jnp.full((cap,), -1, jnp.int32)
+    sp = sp.at[jnp.mod(jnp.arange(seq_len - keep, seq_len), cap)].set(
+        jnp.arange(seq_len - keep, seq_len, dtype=jnp.int32))
+
+    if cfg.block in (BLOCK_ATTN_MLP, BLOCK_ATTN_MOE):
+        k, v = to_slots(caches["k"]), to_slots(caches["v"])
+        L = k.shape[0]
+        out = {"k": k, "v": v, "slot_pos": jnp.broadcast_to(sp, (L,) + sp.shape)}
+    elif cfg.block == BLOCK_MLA_MLP:
+        c_kv, k_rope = to_slots(caches["c_kv"]), to_slots(caches["k_rope"])
+        L = c_kv.shape[0]
+        out = {"c_kv": c_kv, "k_rope": k_rope,
+               "slot_pos": jnp.broadcast_to(sp, (L,) + sp.shape)}
+    elif cfg.block == BLOCK_MAMBA2:
+        out = {"ssm": caches["ssm"]}
+    elif cfg.block == BLOCK_HYMBA:
+        k, v = to_slots(caches["attn"]["k"]), to_slots(caches["attn"]["v"])
+        L = k.shape[0]
+        out = {"attn": {"k": k, "v": v,
+                        "slot_pos": jnp.broadcast_to(sp, (L,) + sp.shape)},
+               "ssm": caches["ssm"]}
+    else:
+        raise ValueError(cfg.block)
+    return {"layers": out, "pos": pos}
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig, mesh=None):
+    """tokens: (B, 1) -> (logits (B,1,V), new cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache["pos"]
+
+    def body(x, inp):
+        lp, lc = inp
+        lc = dict(lc); lc["pos"] = pos
+        x, nc = block_decode(lp, x, lc, cfg, mesh=mesh)
+        nc.pop("pos", None)
+        return x, nc
+
+    x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed(params, x, cfg)
+    return logits, {"layers": new_layers, "pos": pos + 1}

@@ -1,0 +1,63 @@
+"""Batched serving engine: prefill + decode with the slot cache.
+
+Maps STAR's serving story: the model replica serves reads ("read committed"
+on non-master nodes, §4.3) while training epochs commit elsewhere;
+``load_params``/Thomas-rule merge lets a newer committed epoch be swapped in
+between decode steps without draining the batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+@dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decoded_tokens: int = 0
+    param_swaps: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, mesh=None, max_len: int = 512):
+        self.cfg, self.mesh, self.max_len = cfg, mesh, max_len
+        self.params = params
+        self.params_tid = 0
+        self.stats = ServeStats()
+        self._prefill = jax.jit(
+            lambda p, b: tf.prefill(p, b, cfg, mesh=mesh, alloc_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, t: tf.decode_step(p, c, t, cfg, mesh=mesh))
+
+    def load_params(self, params, tid: int):
+        """Thomas-rule swap: only a strictly newer committed epoch applies."""
+        if tid > self.params_tid:
+            self.params, self.params_tid = params, tid
+            self.stats.param_swaps += 1
+            return True
+        return False
+
+    def generate(self, prompts: jax.Array, n_tokens: int,
+                 greedy: bool = True, rng=None):
+        """prompts: (B, S) int32 -> (B, n_tokens) int32."""
+        B, S = prompts.shape
+        logits, cache = self._prefill(self.params, {"tokens": prompts})
+        self.stats.prefill_tokens += B * S
+        outs = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        for i in range(n_tokens):
+            outs.append(tok)
+            logits, cache = self._decode(self.params, cache, tok)
+            if greedy:
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            else:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(
+                    sub, logits[:, -1].astype(jnp.float32))[:, None].astype(jnp.int32)
+            self.stats.decoded_tokens += B
+        return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,75 @@
+"""Disk checkpointing with epoch-commit semantics.
+
+Checkpoints are written at epoch fences only, so on-disk state is always a
+committed epoch; restore picks the NEWEST complete checkpoint (Thomas-rule
+style: highest step wins, partial/corrupt directories are skipped).  Arrays
+are saved leaf-per-file via numpy (no orbax in this environment); the pytree
+structure is rebuilt from the key paths.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:      # npz has no bf16: store f32
+            arr = arr.astype(np.float32)   # (bf16 -> f32 is lossless)
+        out[key] = arr
+    return out
+
+
+def _unflatten_into(template, flat):
+    def rebuild(path, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = flat[key]
+        return jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape)
+    return jax.tree_util.tree_map_with_path(rebuild, template)
+
+
+def save_checkpoint(directory, step: int, params, opt_state, extra: dict | None = None):
+    d = Path(directory) / f"step_{step:010d}"
+    tmp = d.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    np.savez(tmp / "params.npz", **_flatten(params))
+    np.savez(tmp / "opt.npz", **_flatten(opt_state))
+    (tmp / "meta.json").write_text(json.dumps(
+        {"step": step, **(extra or {})}))
+    tmp.rename(d)                                   # atomic commit point
+    return d
+
+
+def latest_checkpoint(directory) -> Path | None:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    cands = sorted([p for p in d.iterdir()
+                    if p.is_dir() and p.name.startswith("step_")
+                    and (p / "meta.json").exists()])
+    return cands[-1] if cands else None
+
+
+def restore_checkpoint(directory, params_template, opt_template):
+    ckpt = latest_checkpoint(directory)
+    if ckpt is None:
+        return None
+    meta = json.loads((ckpt / "meta.json").read_text())
+    pz = np.load(ckpt / "params.npz")
+    oz = np.load(ckpt / "opt.npz")
+    params = _unflatten_into(params_template, dict(pz))
+    opt = _unflatten_into(opt_template, dict(oz))
+    return params, opt, meta

@@ -1,0 +1,72 @@
+"""AdamW with fp32 master weights (params live in bf16 for compute).
+
+Pure-pytree implementation (no optax in this environment). The optimizer
+state is what STAR-DP owner-shards over the ``data`` axis (the "single-master"
+dense update — see repro.train.star_dp / DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params) -> dict:
+    # copy=True: fp32 params must NOT alias their master copies (donation)
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, opt_state, hp: AdamWConfig):
+    """Returns (new_params (param dtype), new_opt_state, grad_norm)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.grad_clip / (gnorm + 1e-9))
+    lr = hp.lr * jnp.minimum(1.0, step.astype(jnp.float32) / hp.warmup_steps)
+    b1t = 1.0 - hp.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - hp.b2 ** step.astype(jnp.float32)
+
+    def upd(master, m, v, g):
+        g = g.astype(jnp.float32) * scale
+        m = hp.b1 * m + (1 - hp.b1) * g
+        v = hp.b2 * v + (1 - hp.b2) * jnp.square(g)
+        mh = m / b1t
+        vh = v / b2t
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + hp.eps)
+                                    + hp.weight_decay * master)
+        return new_master, m, v
+
+    flat_master, treedef = jax.tree.flatten(opt_state["master"])
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_g = jax.tree.leaves(grads)
+    new = [upd(a, b, c, d) for a, b, c, d in zip(flat_master, flat_m, flat_v, flat_g)]
+    new_master = jax.tree.unflatten(treedef, [x[0] for x in new])
+    new_m = jax.tree.unflatten(treedef, [x[1] for x in new])
+    new_v = jax.tree.unflatten(treedef, [x[2] for x in new])
+    param_dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda mp, dt: mp.astype(dt), new_master, param_dtypes)
+    return new_params, {"master": new_master, "m": new_m, "v": new_v,
+                        "step": step}, gnorm

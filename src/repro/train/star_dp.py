@@ -1,0 +1,141 @@
+"""STAR-DP: the paper's asymmetric-replication protocol applied to training.
+
+Mapping (DESIGN.md §2.2):
+
+* **epoch group commit** — training proceeds in commit epochs of K steps;
+  the fence at each boundary snapshots (params, opt state, step) as the last
+  *committed* state.  Any failure reverts to it — the paper's two-version
+  revert (§4.5.2) at trainer granularity.
+* **version-tagged replication (Thomas write rule)** — every replica carries
+  a step-TID per tensor group; ``merge_replicas`` applies incoming tensors
+  iff their TID is newer.  Out-of-order / duplicated broadcasts (elastic
+  workers, async parameter serving) converge to the newest state.
+* **hybrid replication** — dense tensors replicate by value; sparse updates
+  (MoE expert deltas, embedding-row deltas) replicate as operations
+  ``(indices, delta)`` and are re-applied — the §5 bandwidth optimization.
+  ``replication_bytes`` quantifies both (the Fig.15 analogue for training).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# epoch commit / revert
+# ---------------------------------------------------------------------------
+@dataclass
+class CommitState:
+    epoch: int
+    step: int
+    params: object
+    opt_state: object
+
+
+class EpochCommitLog:
+    """In-memory committed snapshot + fence bookkeeping."""
+
+    def __init__(self, steps_per_epoch: int = 8):
+        self.steps_per_epoch = steps_per_epoch
+        self.committed: CommitState | None = None
+        self.fences = 0
+
+    def maybe_fence(self, step: int, params, opt_state) -> bool:
+        if step % self.steps_per_epoch != 0:
+            return False
+        epoch = step // self.steps_per_epoch
+        # the fence: all replication streams quiesce (synchronous in-process),
+        # then the snapshot becomes the commit point. Deep-copied so donated
+        # step buffers can't invalidate the committed epoch (at scale this is
+        # the second of the two record versions, §4.5.2).
+        snap_p = jax.tree.map(jnp.copy, params)
+        snap_o = jax.tree.map(jnp.copy, opt_state)
+        self.committed = CommitState(epoch, step, snap_p, snap_o)
+        self.fences += 1
+        return True
+
+    def revert(self) -> CommitState:
+        if self.committed is None:
+            raise RuntimeError("no committed epoch to revert to")
+        return self.committed
+
+
+# ---------------------------------------------------------------------------
+# Thomas-rule replica merge
+# ---------------------------------------------------------------------------
+def merge_replicas(dst_params, dst_tid: int, src_params, src_tid: int):
+    """Apply src iff strictly newer (per-replica TID = global step)."""
+    if src_tid <= dst_tid:
+        return dst_params, dst_tid
+    return src_params, src_tid
+
+
+def merge_tensor_groups(dst: dict, src: dict):
+    """Group-granular merge: {name: (tensor, tid)} — newest tid wins per
+    group; order/duplication of messages is irrelevant (Thomas rule)."""
+    out = dict(dst)
+    for name, (tensor, tid) in src.items():
+        if name not in out or tid > out[name][1]:
+            out[name] = (tensor, tid)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# hybrid replication streams
+# ---------------------------------------------------------------------------
+def dense_value_stream(params) -> int:
+    """Bytes to replicate the full dense state (value replication)."""
+    return int(sum(np.prod(p.shape) * p.dtype.itemsize
+                   for p in jax.tree.leaves(params)))
+
+
+def sparse_operation_stream(param, row_indices, delta_rows):
+    """Operation replication for a row-sparse update: ship (indices, delta)
+    and replay on the replica. Returns (apply_fn, bytes)."""
+    nbytes = int(row_indices.size * 4
+                 + np.prod(delta_rows.shape) * delta_rows.dtype.itemsize)
+
+    def apply_fn(replica_param):
+        return replica_param.at[row_indices].add(delta_rows)
+
+    return apply_fn, nbytes
+
+
+def sparse_rows_touched(grads_row_norms, threshold: float = 0.0):
+    """Rows with non-zero gradient — the 'single-partition transactions' of
+    training: embedding rows / experts touched only by local data."""
+    return jnp.nonzero(grads_row_norms > threshold)[0]
+
+
+@dataclass
+class ReplicationStats:
+    value_bytes: int = 0
+    op_bytes: int = 0
+
+    @property
+    def savings(self) -> float:
+        return self.value_bytes / max(self.op_bytes, 1)
+
+
+def replication_bytes(params, grads, sparse_paths=("embed", "moe")) -> ReplicationStats:
+    """Hybrid accounting: sparse-path tensors ship (touched rows, delta);
+    dense tensors ship full values. grads: same pytree as params."""
+    stats = ReplicationStats()
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    for (path, p), g in zip(flat_p, flat_g):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        nbytes = int(np.prod(p.shape)) * p.dtype.itemsize
+        if any(s in name for s in sparse_paths) and g.ndim >= 2:
+            rows = g.reshape(g.shape[0], -1)
+            touched = jnp.sum(jnp.any(rows != 0, axis=1))
+            row_bytes = int(np.prod(p.shape[1:])) * p.dtype.itemsize
+            stats.op_bytes += int(touched) * (row_bytes + 4)
+            stats.value_bytes += nbytes
+        else:
+            stats.op_bytes += nbytes
+            stats.value_bytes += nbytes
+    return stats

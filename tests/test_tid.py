@@ -1,0 +1,44 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import tid as T
+
+
+@given(st.integers(0, 255), st.integers(0, 2**23 - 1))
+@settings(max_examples=200, deadline=None)
+def test_pack_roundtrip(epoch, seq):
+    t = T.make_tid(epoch, seq)
+    assert int(T.tid_epoch(t)) == epoch
+    assert int(T.tid_seq(t)) == seq
+    assert not bool(T.tid_locked(t))
+
+
+@given(st.integers(0, 255), st.integers(0, 2**23 - 1))
+@settings(max_examples=100, deadline=None)
+def test_lock_bit(epoch, seq):
+    t = T.make_tid(epoch, seq)
+    assert bool(T.tid_locked(T.tid_lock(t)))
+    assert int(T.tid_unlock(T.tid_lock(t))) == int(t)
+
+
+@given(st.integers(1, 255), st.integers(0, 2**20), st.integers(0, 2**20),
+       st.integers(0, 255))
+@settings(max_examples=200, deadline=None)
+def test_next_tid_criteria(epoch, obs_seq, last_seq, obs_epoch):
+    """Criteria (a) > observed, (b) > last, (c) in current epoch."""
+    obs = T.make_tid(obs_epoch, obs_seq)
+    last = T.make_tid(min(obs_epoch, epoch), last_seq)
+    nt = T.next_tid(epoch, obs, last)
+    assert int(T.tid_epoch(nt)) == epoch                      # (c)
+    if obs_epoch <= epoch:
+        assert int(nt) > int(T.tid_unlock(obs))               # (a)
+    if int(T.tid_epoch(last)) <= epoch:
+        assert int(nt) > int(T.tid_unlock(last))              # (b)
+
+
+def test_epoch_dominates_order():
+    a = T.make_tid(2, 1)
+    b = T.make_tid(1, 2**23 - 1)
+    assert int(a) > int(b)
