@@ -1,8 +1,10 @@
 """Figure 12: latency percentiles.
 
-Async + epoch group commit: deferral is symmetric, latency ~ U(0, e) plus the
-phase the txn lands in — p50 ~ e/2, p99 ~ e (paper: 6.2/9.4 ms at e=10 ms).
-Sync: per-protocol round-trip counts from the cost model.  Model-derived.
+Async + epoch group commit: MEASURED through the online service layer — an
+open-loop Poisson YCSB stream is admitted, batched, executed, and stamped
+enqueue→commit-fence; the percentiles below are real end-to-end times on
+this host (paper: p50 ~ e/2, p99 ~ e at e=10 ms on theirs).
+Sync: per-protocol round-trip counts from the cost model (model-derived).
 """
 import numpy as np
 
@@ -10,15 +12,35 @@ from benchmarks.common import get_calibration
 from repro.baselines.cost_model import Network
 
 
+def _measure_async_service(duration_s=1.5, rate=1500.0):
+    from repro.core.engine import StarEngine
+    from repro.db import ycsb
+    from repro.service import (AdmissionConfig, OpenLoopClient, TxnService,
+                               YCSBSource)
+    cfg = ycsb.YCSBConfig(n_partitions=4, records_per_partition=1024,
+                          cross_ratio=0.10)
+    eng = StarEngine(4, 1024)
+    client = OpenLoopClient(YCSBSource(cfg, seed=1), rate_txn_s=rate, seed=7)
+    svc = TxnService(eng, [client], AdmissionConfig(256, 512),
+                     slots_per_partition=32, master_lanes=32)
+    out = svc.run(duration_s=duration_s)
+    out["queue_delay_ms"] = eng.controller.queue_delay_ms
+    return out
+
+
 def run():
     rows = []
     net = Network()
-    e_ms = 10.0
-    rng = np.random.default_rng(0)
-    # epoch-commit systems: arrival uniform in epoch, release at next fence
-    lat = e_ms - rng.uniform(0, e_ms, 100_000) + rng.normal(1.0, 0.5, 100_000).clip(0)
-    rows.append(("fig12/async_all_p50_ms", 0.0, round(float(np.percentile(lat, 50)), 2)))
-    rows.append(("fig12/async_all_p99_ms", 0.0, round(float(np.percentile(lat, 99)), 2)))
+    # epoch-commit: measured percentiles through the service layer
+    m = _measure_async_service()
+    epoch_us = 1e6 * m["epoch_time_s"] / max(m["epochs"], 1)
+    rows.append(("fig12/async_all_p50_ms", epoch_us, round(m["p50_ms"], 2)))
+    rows.append(("fig12/async_all_p99_ms", epoch_us, round(m["p99_ms"], 2)))
+    rows.append(("fig12/async_all_p999_ms", epoch_us, round(m["p999_ms"], 2)))
+    rows.append(("fig12/async_throughput_txn_s", epoch_us,
+                 round(m["throughput_txn_s"], 1)))
+    rows.append(("fig12/async_queue_delay_ms", epoch_us,
+                 round(m["queue_delay_ms"], 2)))
     for wl in ("ycsb", "tpcc"):
         cal = get_calibration(wl)
         for P in (0.1, 0.5, 0.9):

@@ -36,6 +36,8 @@ class PhaseController:
     t_p: float = 0.0               # partitioned-phase txn/s (EMA)
     t_s: float = 0.0               # single-master txn/s (EMA)
     frac_cross: float = 0.0
+    queue_delay_ms: float = 0.0    # measured enqueue→batch-formation (EMA)
+    measured_commit_ms: float = 0.0  # measured enqueue→commit-fence (EMA)
     history: list = field(default_factory=list)
 
     def observe(self, phase: str, n_txns: int, elapsed_s: float,
@@ -52,6 +54,22 @@ class PhaseController:
         if frac_cross is not None:
             self.frac_cross = frac_cross
 
+    def observe_latency(self, queue_delay_ms: float,
+                        commit_latency_ms: float | None = None):
+        """Feed *measured* end-to-end latency from the service layer
+        (enqueue→formation queue delay, and optionally enqueue→commit-fence)
+        so Eq. 1–2 planning and latency reporting reflect live traffic
+        instead of the synthetic U(0, e) assumption."""
+        if queue_delay_ms >= 0:
+            self.queue_delay_ms = queue_delay_ms if self.queue_delay_ms == 0 \
+                else (self.ema * queue_delay_ms
+                      + (1 - self.ema) * self.queue_delay_ms)
+        if commit_latency_ms is not None and commit_latency_ms >= 0:
+            self.measured_commit_ms = commit_latency_ms \
+                if self.measured_commit_ms == 0 \
+                else (self.ema * commit_latency_ms
+                      + (1 - self.ema) * self.measured_commit_ms)
+
     def plan(self):
         tau_p, tau_s = solve_phase_times(self.e_ms, self.t_p, self.t_s,
                                          self.frac_cross)
@@ -59,5 +77,9 @@ class PhaseController:
         return tau_p, tau_s
 
     def expected_mean_latency_ms(self) -> float:
-        """§4.3: deferral is symmetric; mean latency ≈ (tau_p + tau_s)/2."""
+        """§4.3: deferral is symmetric; mean latency ≈ (tau_p + tau_s)/2 —
+        used until the service layer reports a measured figure, after which
+        the measured enqueue→commit EMA wins."""
+        if self.measured_commit_ms > 0:
+            return self.measured_commit_ms
         return self.e_ms / 2.0

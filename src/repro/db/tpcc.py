@@ -211,16 +211,22 @@ def _payment(cfg, rng, w):
     return parts, rows, kinds, deltas, (c_w != w), False, tables
 
 
-def make_batch(cfg: TPCCConfig, state: TPCCState, n_txns: int,
-               seed: int | None = None):
-    rng = np.random.default_rng(cfg.seed if seed is None else seed)
-    P, R = cfg.n_partitions, cfg.rows_per_partition
+def make_raw(cfg: TPCCConfig, state: TPCCState, n_txns: int,
+             rng: np.random.Generator, txn_offset: int = 0):
+    """Raw unrouted NewOrder/Payment request arrays — the streaming-generator
+    core shared by the offline `make_batch` and the online service clients.
+    `txn_offset` keeps the alternating NewOrder/Payment mix phase-correct
+    across successive streamed chunks.
+
+    Returns {'parts' (B,M), 'rows', 'kinds', 'deltas', 'user_abort', 'home',
+    'declared_cross', 'row_bytes' (B,M), 'op_bytes' (B,M)}."""
+    P = cfg.n_partitions
 
     all_parts, all_rows, all_kinds, all_deltas = [], [], [], []
     all_cross, all_abort, all_home, all_tables = [], [], [], []
     for i in range(n_txns):
         w = int(rng.integers(0, P))
-        if i % 2 == 0:
+        if (i + txn_offset) % 2 == 0:
             parts, rows, kinds, deltas, cross, abort, tables = _new_order(
                 cfg, state, rng, w)
         else:
@@ -230,13 +236,29 @@ def make_batch(cfg: TPCCConfig, state: TPCCState, n_txns: int,
         all_deltas.append(deltas); all_cross.append(cross)
         all_abort.append(abort); all_home.append(w); all_tables.append(tables)
 
-    parts = np.stack(all_parts); rows = np.stack(all_rows)
-    kinds = np.stack(all_kinds); deltas = np.stack(all_deltas)
-    is_cross = np.array(all_cross); abort = np.array(all_abort)
-    home = np.array(all_home, np.int32)
-    row_bytes = np.array([[ROW_BYTES[t] for t in ts] for ts in all_tables],
-                         np.int32)
-    op_bytes = np.vectorize(lambda k: OP_BYTES[int(k)])(kinds).astype(np.int32)
+    kinds = np.stack(all_kinds)
+    return {
+        "parts": np.stack(all_parts), "rows": np.stack(all_rows),
+        "kinds": kinds, "deltas": np.stack(all_deltas),
+        "user_abort": np.array(all_abort), "home": np.array(all_home, np.int32),
+        "declared_cross": np.array(all_cross),
+        "row_bytes": np.array([[ROW_BYTES[t] for t in ts]
+                               for ts in all_tables], np.int32),
+        "op_bytes": np.vectorize(lambda k: OP_BYTES[int(k)])(kinds).astype(np.int32),
+    }
+
+
+def make_batch(cfg: TPCCConfig, state: TPCCState, n_txns: int,
+               seed: int | None = None):
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    P, R = cfg.n_partitions, cfg.rows_per_partition
+
+    raw = make_raw(cfg, state, n_txns, rng)
+    parts, rows = raw["parts"], raw["rows"]
+    kinds, deltas = raw["kinds"], raw["deltas"]
+    is_cross, abort = raw["declared_cross"], raw["user_abort"]
+    home = raw["home"]
+    row_bytes, op_bytes = raw["row_bytes"], raw["op_bytes"]
 
     single = ~is_cross
     n_single = int(single.sum())

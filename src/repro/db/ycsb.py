@@ -26,10 +26,77 @@ class YCSBConfig:
     cross_ratio: float = 0.10
     write_ops: int = 1             # of 10 -> the 90/10 mix
     seed: int = 0
+    # --- access skew (paper default: uniform). zipf_theta > 0 draws row
+    # ids rank-ordered from a bounded Zipf(theta); hot_set_size/
+    # hot_access_frac overlay a hot-key scenario (frac of ops hit the first
+    # hot_set_size rows uniformly) on top of whichever base distribution.
+    zipf_theta: float = 0.0
+    hot_set_size: int = 0
+    hot_access_frac: float = 0.0
 
     @property
     def total_rows(self):
         return self.n_partitions * self.records_per_partition
+
+
+_ZIPF_CDF_CACHE: dict = {}
+
+
+def _zipf_cdf(n: int, theta: float):
+    """Inverse-CDF table for a bounded rank-ordered Zipf over n keys."""
+    key = (n, round(theta, 6))
+    if key not in _ZIPF_CDF_CACHE:
+        w = np.arange(1, n + 1, dtype=np.float64) ** -theta
+        _ZIPF_CDF_CACHE[key] = np.cumsum(w / w.sum())
+    return _ZIPF_CDF_CACHE[key]
+
+
+def sample_rows(cfg: YCSBConfig, rng: np.random.Generator, shape):
+    """Draw partition-local row ids under the configured access skew.
+    Uniform by default (one rng call — bit-identical to the seed generator);
+    rank r is row id r, so high theta concentrates load on low row ids."""
+    if cfg.zipf_theta > 0.0:
+        cdf = _zipf_cdf(cfg.records_per_partition, cfg.zipf_theta)
+        rows = np.searchsorted(cdf, rng.random(shape)).astype(np.int32)
+    else:
+        rows = rng.integers(0, cfg.records_per_partition, shape).astype(np.int32)
+    if cfg.hot_set_size > 0 and cfg.hot_access_frac > 0.0:
+        hot = rng.random(shape) < cfg.hot_access_frac
+        rows = np.where(hot, rng.integers(0, cfg.hot_set_size, shape),
+                        rows).astype(np.int32)
+    return rows
+
+
+def make_raw(cfg: YCSBConfig, n_txns: int, rng: np.random.Generator):
+    """Raw unrouted request arrays — the streaming-generator core shared by
+    the offline `make_batch` and the online service clients.
+
+    Returns {'parts' (B,M), 'rows' (B,M), 'kinds' (B,M), 'deltas' (B,M,C),
+    'user_abort' (B,), 'home' (B,), 'declared_cross' (B,)} where `home` is
+    the partition the client *declares* (routers must detect mis-declared
+    singles themselves)."""
+    P = cfg.n_partitions
+
+    is_cross = rng.random(n_txns) < cfg.cross_ratio
+    home = rng.integers(0, P, n_txns).astype(np.int32)
+
+    # op partitions: single-partition -> home; cross -> random partitions
+    op_part = np.repeat(home[:, None], M, axis=1)
+    cross_parts = rng.integers(0, P, (n_txns, M)).astype(np.int32)
+    # ensure cross txns touch ≥2 partitions: first op stays home
+    cross_parts[:, 0] = home
+    op_part = np.where(is_cross[:, None], cross_parts, op_part)
+
+    op_idx = sample_rows(cfg, rng, (n_txns, M))
+    kinds = np.full((n_txns, M), READ, np.int32)
+    wpos = rng.integers(0, M, (n_txns, cfg.write_ops))
+    for j in range(cfg.write_ops):
+        kinds[np.arange(n_txns), wpos[:, j]] = SET
+    deltas = rng.integers(0, 2**31 - 1, (n_txns, M, C), dtype=np.int64).astype(np.int32)
+
+    return {"parts": op_part.astype(np.int32), "rows": op_idx, "kinds": kinds,
+            "deltas": deltas, "user_abort": np.zeros(n_txns, bool),
+            "home": home, "declared_cross": is_cross}
 
 
 def route_single(cfg, home, rows, kinds, deltas, T):
@@ -60,24 +127,12 @@ def route_single(cfg, home, rows, kinds, deltas, T):
 def make_batch(cfg: YCSBConfig, n_txns: int, seed: int | None = None):
     """Returns dict with 'ptxn' (P,T,…), 'cross' (B,M,…), metadata."""
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
-    P, R = cfg.n_partitions, cfg.records_per_partition
-
-    is_cross = rng.random(n_txns) < cfg.cross_ratio
-    home = rng.integers(0, P, n_txns).astype(np.int32)
-
-    # op partitions: single-partition -> home; cross -> random partitions
-    op_part = np.repeat(home[:, None], M, axis=1)
-    cross_parts = rng.integers(0, P, (n_txns, M)).astype(np.int32)
-    # ensure cross txns touch ≥2 partitions: first op stays home
-    cross_parts[:, 0] = home
-    op_part = np.where(is_cross[:, None], cross_parts, op_part)
-
-    op_idx = rng.integers(0, R, (n_txns, M)).astype(np.int32)
-    kinds = np.full((n_txns, M), READ, np.int32)
-    wpos = rng.integers(0, M, (n_txns, cfg.write_ops))
-    for j in range(cfg.write_ops):
-        kinds[np.arange(n_txns), wpos[:, j]] = SET
-    deltas = rng.integers(0, 2**31 - 1, (n_txns, M, C), dtype=np.int64).astype(np.int32)
+    R = cfg.records_per_partition
+    raw = make_raw(cfg, n_txns, rng)
+    P = cfg.n_partitions
+    is_cross, home = raw["declared_cross"], raw["home"]
+    op_part, op_idx = raw["parts"], raw["rows"]
+    kinds, deltas = raw["kinds"], raw["deltas"]
 
     single = ~is_cross
     n_single = int(single.sum())

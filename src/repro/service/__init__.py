@@ -1,0 +1,20 @@
+"""Online transaction service layer in front of `StarEngine` (§4.3).
+
+clients → admission (bounded queues, shed/backpressure, re-route) →
+epoch-pipelined batcher (double-buffered against device execution) →
+engine → commit-fence latency stamping.
+"""
+from repro.service.admission import (AdmissionConfig, AdmissionController,
+                                     BACKPRESSURE, RequestPool, SHED)
+from repro.service.batcher import BatchPlan, EpochBatcher
+from repro.service.clients import (ClosedLoopClient, OpenLoopClient,
+                                   TPCCSource, YCSBSource)
+from repro.service.latency import LatencyRecorder, LatencySummary
+from repro.service.service import ServiceStats, TxnService
+
+__all__ = [
+    "AdmissionConfig", "AdmissionController", "BACKPRESSURE", "BatchPlan",
+    "ClosedLoopClient", "EpochBatcher", "LatencyRecorder", "LatencySummary",
+    "OpenLoopClient", "RequestPool", "SHED", "ServiceStats", "TPCCSource",
+    "TxnService", "YCSBSource",
+]

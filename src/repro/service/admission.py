@@ -1,0 +1,189 @@
+"""Admission control (§4.3 router nodes + bounded ingest).
+
+Arriving request chunks are classified by the vectorized `core.router`:
+single-partition transactions enter their home partition's bounded FIFO
+queue (the partitioned-phase feed), cross-partition — and mis-declared
+"single" — transactions enter the bounded master queue (the single-master
+feed).  When a queue is full the controller applies the configured policy:
+
+  shed         — reject the excess outright (client sees an error; the load
+                 generator counts it) — queues never grow without bound;
+  backpressure — refuse the excess but report it back to the caller, who
+                 retries next tick (open-loop clients keep a bounded retry
+                 buffer; closed-loop clients simply stall).
+
+Admitted requests live in a columnar `RequestPool` (structure-of-arrays,
+grow-by-doubling, free-list recycling) so the epoch batcher can drain queues
+into the engine's device formats with pure fancy-indexed gathers.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.router import Router, globalize_rows
+
+SHED, BACKPRESSURE = "shed", "backpressure"
+
+
+@dataclass
+class AdmissionConfig:
+    part_queue_cap: int = 256       # per-partition single-partition bound
+    master_queue_cap: int = 1024    # cross-partition (master node) bound
+    policy: str = SHED              # "shed" | "backpressure"
+
+
+@dataclass
+class AdmissionStats:
+    offered: int = 0
+    admitted: int = 0
+    shed: int = 0
+    backpressured: int = 0
+    requeued: int = 0               # starved OCC txns pushed back (front)
+    max_part_depth: int = 0
+    max_master_depth: int = 0
+
+
+class RequestPool:
+    """Columnar in-flight request store. `row` holds partition-local rows
+    for singles and pre-globalized master rows for cross txns."""
+
+    def __init__(self, max_ops: int, n_cols: int, capacity: int = 2048):
+        self.M, self.C = max_ops, n_cols
+        self.capacity = 0
+        self._grow(capacity)
+        self.live = 0
+
+    def _grow(self, new_cap: int):
+        def extend(name, shape, dtype):
+            new = np.zeros(shape, dtype)
+            if self.capacity:
+                new[:self.capacity] = getattr(self, name)
+            setattr(self, name, new)
+        extend("row", (new_cap, self.M), np.int32)
+        extend("kind", (new_cap, self.M), np.int32)
+        extend("delta", (new_cap, self.M, self.C), np.int32)
+        extend("user_abort", (new_cap,), bool)
+        extend("is_cross", (new_cap,), bool)
+        extend("home", (new_cap,), np.int32)
+        extend("tenant", (new_cap,), np.int32)
+        extend("txn_id", (new_cap,), np.int64)
+        extend("arrival_s", (new_cap,), np.float64)
+        extend("admit_s", (new_cap,), np.float64)
+        extend("form_s", (new_cap,), np.float64)
+        self._free = list(range(new_cap - 1, self.capacity - 1, -1)) + \
+            (self._free if self.capacity else [])
+        self.capacity = new_cap
+
+    def alloc(self, n: int) -> np.ndarray:
+        while len(self._free) < n:
+            self._grow(self.capacity * 2)
+        idx = np.array([self._free.pop() for _ in range(n)], np.int64)
+        self.live += n
+        return idx
+
+    def release(self, idx: np.ndarray):
+        self._free.extend(int(i) for i in idx)
+        self.live -= len(idx)
+
+
+class AdmissionController:
+    """Bounded per-partition + master queues over a shared request pool."""
+
+    def __init__(self, n_partitions: int, rows_per_partition: int,
+                 max_ops: int, n_cols: int = 10,
+                 cfg: AdmissionConfig | None = None,
+                 router: Router | None = None,
+                 pool: RequestPool | None = None):
+        self.P, self.R = n_partitions, rows_per_partition
+        self.cfg = cfg or AdmissionConfig()
+        self.router = router or Router(n_partitions, rows_per_partition,
+                                       max_ops, n_cols)
+        self.pool = pool or RequestPool(max_ops, n_cols)
+        self.part_queues = [deque() for _ in range(n_partitions)]
+        self.master_queue = deque()
+        self.stats = AdmissionStats()
+
+    # ------------------------------------------------------------------
+    def offer(self, req: dict, now_s: float):
+        """Classify + admit one arrival chunk.
+
+        req: {'parts' (B,M), 'rows' (B,M), 'kinds', 'deltas', 'user_abort',
+        'home' (declared home, -1 = undeclared), 'txn_id', 'tenant',
+        'arrival_s'}.  Returns a boolean `rejected` mask over the chunk
+        (True = not admitted this tick: shed or backpressured)."""
+        B = req["parts"].shape[0]
+        self.stats.offered += B
+        if B == 0:
+            return np.zeros(0, bool)
+        is_cross, home = self.router.classify(
+            req["parts"], req["kinds"], req["home"])
+
+        admitted = np.zeros(B, bool)
+        dest = np.where(is_cross, -1, home).astype(np.int64)
+        # singles, per home partition (≤P small iterations, vectorized body)
+        for p in np.unique(dest[dest >= 0]):
+            q = self.part_queues[p]
+            sel = np.nonzero(dest == p)[0]
+            take = sel[:max(0, self.cfg.part_queue_cap - len(q))]
+            admitted[take] = True
+        cross_sel = np.nonzero(is_cross)[0]
+        cross_take = cross_sel[:max(0, self.cfg.master_queue_cap
+                                    - len(self.master_queue))]
+        admitted[cross_take] = True
+
+        aidx = np.nonzero(admitted)[0]
+        if aidx.size:
+            pool, slots = self.pool, self.pool.alloc(aidx.size)
+            # cross rows are globalized once, here, at admission
+            pool.row[slots] = np.where(
+                is_cross[aidx, None],
+                globalize_rows(req["parts"][aidx], req["rows"][aidx], self.R),
+                req["rows"][aidx])
+            pool.kind[slots] = req["kinds"][aidx]
+            pool.delta[slots] = req["deltas"][aidx]
+            pool.user_abort[slots] = req["user_abort"][aidx]
+            pool.is_cross[slots] = is_cross[aidx]
+            pool.home[slots] = np.where(is_cross[aidx], -1, home[aidx])
+            pool.tenant[slots] = req["tenant"][aidx]
+            pool.txn_id[slots] = req["txn_id"][aidx]
+            pool.arrival_s[slots] = req["arrival_s"][aidx]
+            pool.admit_s[slots] = now_s
+            for k, i in zip(aidx, slots):
+                if is_cross[k]:
+                    self.master_queue.append(int(i))
+                else:
+                    self.part_queues[int(home[k])].append(int(i))
+
+        rejected = ~admitted
+        n_rej = int(rejected.sum())
+        self.stats.admitted += int(aidx.size)
+        if self.cfg.policy == SHED:
+            self.stats.shed += n_rej
+        else:
+            self.stats.backpressured += n_rej
+        self.stats.max_part_depth = max(
+            self.stats.max_part_depth,
+            max((len(q) for q in self.part_queues), default=0))
+        self.stats.max_master_depth = max(self.stats.max_master_depth,
+                                          len(self.master_queue))
+        return rejected
+
+    # ------------------------------------------------------------------
+    def drain_singles(self, p: int, limit: int) -> list[int]:
+        q = self.part_queues[p]
+        return [q.popleft() for _ in range(min(limit, len(q)))]
+
+    def drain_master(self, limit: int) -> list[int]:
+        q = self.master_queue
+        return [q.popleft() for _ in range(min(limit, len(q)))]
+
+    def requeue_master_front(self, slots):
+        """Starved OCC transactions re-enter at the FRONT, preserving FIFO."""
+        self.master_queue.extendleft(reversed([int(s) for s in slots]))
+        self.stats.requeued += len(slots)
+
+    def depth(self) -> int:
+        return sum(len(q) for q in self.part_queues) + len(self.master_queue)

@@ -97,6 +97,25 @@ def test_router_classifies_and_routes():
     assert batch["ptxn"]["valid"][3].sum() == 1
 
 
+def test_router_reroute_misdeclared_single():
+    """§4.3 re-route: txns declared single-partition but touching a remote
+    partition are detected, sent to the master (cross) queue, and counted."""
+    r = Router(n_partitions=4, rows_per_partition=100, max_ops=4)
+    parts, rows, kinds, deltas = _mk_txn(
+        [[0, 0, 0],      # honest single
+         [1, 1, 2],      # declared single on 1, touches 2 -> re-route
+         [2, 3]])        # honest cross, undeclared
+    declared = np.array([0, 1, -1])
+    is_cross, home = r.classify(parts, kinds, declared)
+    assert is_cross.tolist() == [False, True, True]
+    assert r.stats.rerouted == 1
+    # and through route(): the re-routed txn lands in the master queue
+    r2 = Router(n_partitions=4, rows_per_partition=100, max_ops=4)
+    batch = r2.route(parts, rows, kinds, deltas, declared_home=declared)
+    assert batch["n_single"] == 1 and batch["n_cross"] == 2
+    assert r2.stats.rerouted == 1
+
+
 def test_router_feeds_engine():
     from repro.core.engine import StarEngine
     rng = np.random.default_rng(0)

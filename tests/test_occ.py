@@ -7,8 +7,7 @@ for random conflicting workloads (hypothesis-driven).
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core.ops import ADD, APPEND, READ, SET, apply_op
 from repro.core.single_master import run_single_master

@@ -1,7 +1,6 @@
 """Phase controller (Eqs 1-2) and analytical model (Eqs 3-5, Figs 3/10)."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import analytical as an
 from repro.core.phase_switch import solve_phase_times

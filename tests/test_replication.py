@@ -1,8 +1,7 @@
 """Thomas write rule properties (§3, §5) — the core replication invariant."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import replication as repl
 

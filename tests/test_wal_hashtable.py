@@ -1,8 +1,7 @@
 """Durability (WAL + fuzzy checkpoint + recovery) and the hash index."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.db import hashtable as ht
 from repro.db.wal import WriteAheadLog, recover, write_checkpoint
