@@ -6,14 +6,72 @@ Measured: per-txn CPU cost + OCC retry factor from the real executors on this
 host.  Modeled: 4-node cluster wall clock through the calibrated network
 envelope (cost_model.py).  Paper claims checked: STAR ~= Dist.* at P=0;
 STAR > both at P>=10%; up to ~10x at high P; PB.OCC flat in P.
+
+``--mix full`` additionally MEASURES the full five-transaction TPC-C mix
+(45/43/4/4/4 over the ordered-index storage engine) end to end through
+``StarEngine.run_epoch`` and reports its throughput alongside the paper's
+NewOrder+Payment mix — the workload the paper could not run:
+
+    PYTHONPATH=src python -m benchmarks.fig11_throughput --mix full [--smoke]
 """
+import time
+
 from benchmarks.common import get_calibration, get_envelope_calibration
 from repro.baselines.cost_model import (dist_throughput, pb_occ_throughput,
                                         star_throughput)
 
 
-def run():
+def measure_tpcc_mix(mix: str, n_txns: int = 512, epochs: int = 4,
+                     smoke: bool = False):
+    """Run the REAL engine over `mix` and return measured throughput rows.
+
+    Wall clock covers the two device phases + fences (jit warm); throughput
+    is committed transactions per second of engine time on this host.
+    """
+    import numpy as np
+    from repro.core.engine import StarEngine
+    from repro.db import tpcc
+
+    if smoke:
+        n_txns, epochs = 128, 2
+    cfg = tpcc.TPCCConfig(n_partitions=4, n_items=1000 if smoke else 4000,
+                          cust_per_district=100, order_ring=128, mix=mix,
+                          delivery_gen_lag=n_txns)
+    state = tpcc.TPCCState(cfg)
+    rng = np.random.default_rng(0)
+    init = tpcc.init_values(cfg, rng, state=state)
+    eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg) if mix == "full" else None)
+    eng.run_epoch(tpcc.make_batch(cfg, state, n_txns, seed=1000))  # warm jit
+    warm = eng.stats.part_time_s + eng.stats.sm_time_s   # exclude jit compile
+    t0 = time.perf_counter()
+    committed = 0
+    for ep in range(epochs):
+        m = eng.run_epoch(tpcc.make_batch(cfg, state, n_txns, seed=ep))
+        committed += m["committed_single"] + m["committed_cross"]
+    elapsed = eng.stats.part_time_s + eng.stats.sm_time_s - warm
+    wall = time.perf_counter() - t0
+    assert eng.replica_consistent(), "replica diverged under measurement"
+    thr = committed / max(elapsed, 1e-9)
+    return [
+        (f"fig11/tpcc_measured_mix_{mix}_txn_s", 1e6 * wall / max(committed, 1),
+         round(thr)),
+        (f"fig11/tpcc_measured_mix_{mix}_committed", 0.0, committed),
+        (f"fig11/tpcc_measured_mix_{mix}_consume_skips", 0.0,
+         eng.stats.consume_skips),
+    ]
+
+
+def run(mix: str | None = None, smoke: bool = False):
     rows = []
+    if mix is not None:
+        # measure the requested mix; "full" also measures the paper's
+        # NewOrder+Payment mix alongside for direct comparison
+        rows += measure_tpcc_mix(mix, smoke=smoke)
+        if mix == "full":
+            rows += measure_tpcc_mix("standard2", smoke=smoke)
+    if smoke:
+        return rows
     n = 4
     for wl in ("ycsb", "tpcc"):
         cal = get_calibration(wl)
@@ -62,3 +120,34 @@ def run():
                      round(star_throughput(n, 0.1, env)
                            / pb_occ_throughput(0.1, env), 2)))
     return rows
+
+
+def main():
+    import argparse
+
+    from benchmarks.common import emit
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mix", choices=["full", "standard2"], default=None,
+                    help="also MEASURE this TPC-C mix through the engine")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale, measured rows only; fails the build "
+                    "when throughput collapses (CI regression gate)")
+    args = ap.parse_args()
+    rows = run(mix=args.mix or ("full" if args.smoke else None),
+               smoke=args.smoke)
+    print("name,us_per_call,derived")
+    emit(rows)
+    if args.smoke:
+        thr = {r[0]: r[2] for r in rows
+               if r[0].endswith("_txn_s") or r[0].endswith("_committed")}
+        rates = {k: v for k, v in thr.items() if k.endswith("_txn_s")}
+        commits = {k: v for k, v in thr.items() if k.endswith("_committed")}
+        # loose floors: catch collapse/regression-to-zero, not host speed
+        assert rates and all(v > 5 for v in rates.values()), \
+            f"throughput collapsed: {thr}"
+        assert all(v > 100 for v in commits.values()), thr
+        print("SMOKE OK " + " ".join(f"{k.split('_mix_')[1]}" for k in rates))
+
+
+if __name__ == "__main__":
+    main()

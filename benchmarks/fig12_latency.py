@@ -60,3 +60,32 @@ def run():
                  round(s2pl * 8, 3)),
             ]
     return rows
+
+
+def main():
+    """``--smoke``: tiny measured service run only — a CI gate that the
+    online path still serves traffic with sane latency (interpret-friendly:
+    no workload calibration, one small open-loop run)."""
+    import argparse
+    import sys
+
+    from benchmarks.common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if not args.smoke:
+        emit(run())
+        return
+    m = _measure_async_service(duration_s=0.5, rate=400.0)
+    emit([("fig12/smoke_p50_ms", 0.0, round(m["p50_ms"], 2)),
+          ("fig12/smoke_p99_ms", 0.0, round(m["p99_ms"], 2)),
+          ("fig12/smoke_throughput_txn_s", 0.0,
+           round(m["throughput_txn_s"], 1))])
+    if not (m["committed"] > 0 and m["p50_ms"] > 0):
+        sys.exit(f"service smoke failed: {m}")
+    print(f"SMOKE OK committed={m['committed']} p50={m['p50_ms']:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,19 @@
-"""STAR engine: phase-switched epochs over the array-resident database (§3-§5).
+"""STAR engine: phase-switched epochs over the storage subsystem (§3-§5).
 
 One engine instance models the cluster: the master view (the designated full
 replica) plus a backup replica kept consistent purely through the replication
 streams — value replication (Thomas write rule, out-of-order) from the
 single-master phase and ordered operation replication from the partitioned
-phase (hybrid strategy, §5).  ``replica_consistent()`` verifying bit-equality
-at each fence is the system's own correctness check (and a test).
+phase (hybrid strategy, §5).  State lives in two ``storage.StorageEngine``
+instances (array-resident tables + ordered secondary indexes, two-version
+records); index maintenance replays through the same per-round/per-slot
+batches the executors installed, so ``replica_consistent()`` verifying
+bit-equality at each fence covers indexes as well as records.
+
+The replication fence is no longer free: ``_fence`` pushes the epoch's
+stream bytes through the ``baselines.cost_model.Network`` envelope and
+reports the modeled inter-node lag as ``t_fence_net_s`` (paper §7.6: TPC-C
+saturates the NIC at 4 nodes).
 
 Fault tolerance: ``inject_failure``/``recover`` drive the §4.5 machinery —
 revert to the last committed epoch via the two-version records, classify the
@@ -14,18 +22,19 @@ failure case, re-master partitions, catch up via Thomas-rule apply.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.baselines.cost_model import Network
 from repro.core import replication as repl
-from repro.core import tid as tidlib
 from repro.core.fault import ClusterConfig, make_recovery_plan
 from repro.core.partitioned import run_partitioned
 from repro.core.phase_switch import PhaseController
 from repro.core.single_master import run_single_master
+from repro.storage import IndexSpec, StorageEngine
 
 
 @dataclass
@@ -34,6 +43,7 @@ class EngineStats:
     committed_single: int = 0
     committed_cross: int = 0
     user_aborts: int = 0
+    consume_skips: int = 0          # Delivery districts skipped (stale scan)
     retries: int = 0
     fences: int = 0
     value_bytes: int = 0
@@ -42,21 +52,23 @@ class EngineStats:
     part_time_s: float = 0.0
     sm_time_s: float = 0.0
     fence_time_s: float = 0.0
+    fence_net_s: float = 0.0
 
 
 class StarEngine:
     def __init__(self, n_partitions: int, rows_per_partition: int,
                  n_cols: int = 10, init_val=None, hybrid_replication=True,
                  max_rounds=16, cluster: ClusterConfig | None = None,
-                 iteration_ms: float = 10.0):
+                 iteration_ms: float = 10.0,
+                 indexes: list[IndexSpec] | None = None,
+                 net: Network | None = None, adaptive_epoch: bool = False):
         P, R, C = n_partitions, rows_per_partition, n_cols
         self.P, self.R, self.C = P, R, C
-        val = (jnp.asarray(init_val, jnp.int32) if init_val is not None
-               else jnp.zeros((P, R, C), jnp.int32))
-        tidw = jnp.zeros((P, R), jnp.uint32)
-        self.master = {"val": val, "tid": tidw}
-        self.snapshot = {"val": val, "tid": tidw}     # last committed epoch
-        self.replica = {"val": val, "tid": tidw}      # maintained via streams
+        self.store = StorageEngine(P, R, C, init_val=init_val,
+                                   index_specs=indexes)
+        self.replica_store = StorageEngine(P, R, C, init_val=init_val,
+                                           index_specs=indexes)
+        self.has_index = bool(indexes)
         self.epoch = 1
         self.part_seq = jnp.zeros((P,), jnp.uint32)
         self.sm_last_tid = None
@@ -64,13 +76,30 @@ class StarEngine:
         self.max_rounds = max_rounds
         self.cluster = cluster or ClusterConfig(f=1, k=max(P, 1),
                                                 n_partitions=P)
-        self.controller = PhaseController(e_ms=iteration_ms)
+        self.controller = PhaseController(e_ms=iteration_ms,
+                                          adaptive=adaptive_epoch)
+        self.net = net or Network()
         self.stats = EngineStats()
         self._jit_part = jax.jit(run_partitioned, static_argnames=())
         self._jit_sm = jax.jit(run_single_master,
                                static_argnames=("max_rounds", "deterministic"))
         self._jit_thomas = jax.jit(repl.thomas_apply_batch)
-        self._jit_replay = jax.jit(jax.vmap(repl.replay_operations))
+        self._jit_replay = jax.jit(repl.replay_partitioned)
+        self._jit_replay_idx = jax.jit(repl.replay_index_rounds)
+
+    # -- dict views kept for callers/tests that read engine state --------
+    @property
+    def master(self):
+        return {"val": self.store.val, "tid": self.store.tid}
+
+    @property
+    def replica(self):
+        return {"val": self.replica_store.val, "tid": self.replica_store.tid}
+
+    @property
+    def snapshot(self):
+        return {"val": self.store.snapshot["val"],
+                "tid": self.store.snapshot["tid"]}
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -99,12 +128,13 @@ class StarEngine:
         epoch_u = jnp.uint32(self.epoch)
         ptxn = jax.tree.map(jnp.asarray, self._pad_axis(batch["ptxn"], 1))
         cross = jax.tree.map(jnp.asarray, self._pad_axis(batch["cross"], 0))
+        index = self.store.indexes if self.has_index else None
 
         # ---- partitioned phase (single-partition txns, no CC) ----------
         t0 = time.perf_counter()
         val, tidw, part_out, pstats = self._jit_part(
-            self.master["val"], self.master["tid"], ptxn, epoch_u,
-            self.part_seq)
+            self.store.val, self.store.tid, ptxn, epoch_u,
+            self.part_seq, index)
         t_ingest = 0.0
         if ingest is not None:       # overlap host ingest with device exec
             ti = time.perf_counter()
@@ -117,51 +147,23 @@ class StarEngine:
         # wall clock measures ingest, not the phase — don't let that deflate
         # the t_p estimate feeding Eq. 1-2 (t_ingest_s reports the overlap)
         t_part = max(t1 - t0 - t_ingest, t1 - tb)
-        self.master = {"val": val, "tid": tidw}
+        self.store.val, self.store.tid = val, tidw
+        if self.has_index:
+            self.store.indexes = part_out["index"]
 
         # operation replication (ordered per-partition replay) — or value
-        rep_val, rep_tid = self._jit_replay(
-            self.replica["val"], self.replica["tid"], part_out["log"])
-        self.replica = {"val": rep_val, "tid": rep_tid}
+        rep_val, rep_tid, rep_idx = self._jit_replay(
+            self.replica_store.val, self.replica_store.tid, part_out["log"],
+            self.replica_store.indexes if self.has_index else None)
+        self.replica_store.val, self.replica_store.tid = rep_val, rep_tid
+        if self.has_index:
+            self.replica_store.indexes = rep_idx
 
-        # ---- fence 1: all streams applied, snapshot commit --------------
-        t0 = time.perf_counter()
-        self._fence()
-        t_fence1 = time.perf_counter()
-        t_f1 = t_fence1 - t0
-
-        # ---- single-master phase (cross-partition txns, Silo OCC) ------
-        t0 = time.perf_counter()
-        flat_val = self.master["val"].reshape(self.P * self.R, self.C)
-        flat_tid = self.master["tid"].reshape(self.P * self.R)
-        B = int(cross["row"].shape[0])
-        if B > 0:
-            fval, ftid, sm_out, sstats = self._jit_sm(
-                flat_val, flat_tid, cross, epoch_u + jnp.uint32(0),
-                max_rounds=self.max_rounds)
-            jax.block_until_ready(fval)
-            self.master = {"val": fval.reshape(self.P, self.R, self.C),
-                           "tid": ftid.reshape(self.P, self.R)}
-            # value replication, Thomas write rule (order-free)
-            rflat_val = self.replica["val"].reshape(self.P * self.R, self.C)
-            rflat_tid = self.replica["tid"].reshape(self.P * self.R)
-            rv, rt, _ = self._jit_thomas(rflat_val, rflat_tid, sm_out["log"])
-            self.replica = {"val": rv.reshape(self.P, self.R, self.C),
-                            "tid": rt.reshape(self.P, self.R)}
-        else:
-            sstats = {"committed": jnp.int32(0), "retries": jnp.int32(0),
-                      "user_aborts": jnp.int32(0), "starved": jnp.int32(0),
-                      "writes": jnp.int32(0)}
-        t_sm = time.perf_counter() - t0
-
-        # ---- fence 2: epoch boundary ------------------------------------
-        t0 = time.perf_counter()
-        self._fence()
-        self.epoch += 1
-        t_fence2 = time.perf_counter()
-        t_f2 = t_fence2 - t0
-
-        # ---- replication byte accounting (Fig. 15) ----------------------
+        # ---- replication byte accounting, partitioned stream (Fig. 15) --
+        # (host-side np on the write mask: the device is already idle here —
+        # t_part was measured with block_until_ready above — and fence 1
+        # needs the stream bytes to model its network drain; skipped
+        # entirely when the batch carries no byte tables)
         vb = ob = vb_alt = 0
         if "p_row_bytes" in batch:
             wmask = np.asarray(part_out["log"]["write"])
@@ -169,20 +171,66 @@ class StarEngine:
             pob = self._pad_axis(batch["p_op_bytes"], 1)
             vb_alt = int(repl.value_bytes(wmask, prb))
             ob = int(repl.operation_bytes(wmask, pob))
-            if B > 0:
-                cw = np.asarray(sm_out["log"]["write"])        # (rounds,B,M)
+        elif batch.get("row_bytes") is not None:
+            wmask = np.asarray(part_out["log"]["write"])
+            rb = batch["row_bytes"]
+            vb_alt = int(repl.value_bytes(wmask, rb[None, None, :]))
+            ob = int(repl.operation_bytes(wmask, batch["op_bytes"][None, None, :]))
+
+        # ---- fence 1: all streams applied, snapshot commit --------------
+        t0 = time.perf_counter()
+        t_net1 = self._fence(ob if self.hybrid else vb_alt)
+        t_fence1 = time.perf_counter()
+        t_f1 = t_fence1 - t0
+
+        # ---- single-master phase (cross-partition txns, Silo OCC) ------
+        t0 = time.perf_counter()
+        flat_val = self.store.val.reshape(self.P * self.R, self.C)
+        flat_tid = self.store.tid.reshape(self.P * self.R)
+        B = int(cross["row"].shape[0])
+        if B > 0:
+            fval, ftid, sm_out, sstats = self._jit_sm(
+                flat_val, flat_tid, cross, epoch_u + jnp.uint32(0),
+                max_rounds=self.max_rounds,
+                index=self.store.indexes if self.has_index else None)
+            jax.block_until_ready(fval)
+            self.store.val = fval.reshape(self.P, self.R, self.C)
+            self.store.tid = ftid.reshape(self.P, self.R)
+            if self.has_index:
+                self.store.indexes = sm_out["index"]
+            # value replication, Thomas write rule (order-free) + the
+            # round-ordered index-maintenance stream
+            rflat_val = self.replica_store.val.reshape(self.P * self.R, self.C)
+            rflat_tid = self.replica_store.tid.reshape(self.P * self.R)
+            rv, rt, _ = self._jit_thomas(rflat_val, rflat_tid, sm_out["log"])
+            self.replica_store.val = rv.reshape(self.P, self.R, self.C)
+            self.replica_store.tid = rt.reshape(self.P, self.R)
+            if self.has_index:
+                self.replica_store.indexes = self._jit_replay_idx(
+                    self.replica_store.indexes, cross["kind"], cross["delta"],
+                    sm_out["log"]["iwrite"], sm_out["log"]["tid"])
+        else:
+            sstats = {"committed": jnp.int32(0), "retries": jnp.int32(0),
+                      "user_aborts": jnp.int32(0), "starved": jnp.int32(0),
+                      "writes": jnp.int32(0)}
+        t_sm = time.perf_counter() - t0
+
+        # ---- byte accounting, single-master value stream ----------------
+        if B > 0:
+            cw = np.asarray(sm_out["log"]["write"])            # (rounds,B,M)
+            if "c_row_bytes" in batch:
                 crb = np.broadcast_to(self._pad_axis(batch["c_row_bytes"], 0),
                                       cw.shape[1:])
                 vb = int(repl.value_bytes(cw, crb[None]))
-        else:
-            wmask = np.asarray(part_out["log"]["write"])
-            rb = batch.get("row_bytes")
-            if rb is not None:
-                vb_alt = int(repl.value_bytes(wmask, rb[None, None, :]))
-                ob = int(repl.operation_bytes(wmask, batch["op_bytes"][None, None, :]))
-            if B > 0 and rb is not None:
-                cw = np.asarray(sm_out["log"]["write"])
-                vb = int(repl.value_bytes(cw, rb[None, None, :]))
+            elif batch.get("row_bytes") is not None:
+                vb = int(repl.value_bytes(cw, batch["row_bytes"][None, None, :]))
+
+        # ---- fence 2: epoch boundary ------------------------------------
+        t0 = time.perf_counter()
+        t_net2 = self._fence(vb)
+        self.epoch += 1
+        t_fence2 = time.perf_counter()
+        t_f2 = t_fence2 - t0
 
         # ---- controller telemetry ---------------------------------------
         nc = int(sstats["committed"])
@@ -197,6 +245,8 @@ class StarEngine:
         s.committed_single += ns
         s.committed_cross += nc
         s.user_aborts += int(pstats["user_aborts"]) + int(sstats["user_aborts"])
+        s.consume_skips += int(pstats.get("consume_skips", 0)) \
+            + int(sstats.get("consume_skips", 0))
         s.retries += int(sstats["retries"])
         s.part_time_s += t_part
         s.sm_time_s += t_sm
@@ -214,21 +264,27 @@ class StarEngine:
                 "t_part_s": t_part, "t_sm_s": t_sm,
                 "t_ingest_s": t_ingest,
                 "t_fence1_s": t_fence1, "t_fence2_s": t_fence2,
+                "t_fence_net_s": t_net1 + t_net2,
                 "p_committed": p_committed, "c_committed": c_committed,
                 "starved": int(sstats["starved"])}
 
     # ------------------------------------------------------------------
-    def _fence(self):
+    def _fence(self, stream_bytes: int = 0) -> float:
         """Replication fence: all outstanding writes applied, then the commit
         point. In-process the streams are applied synchronously above, so the
-        fence is the snapshot promotion + epoch bookkeeping."""
-        self.snapshot = {"val": self.master["val"], "tid": self.master["tid"]}
+        fence is the snapshot promotion + epoch bookkeeping; the inter-node
+        cost — shipping this epoch's stream bytes through the NIC plus two
+        barrier round trips — is modeled through the Network envelope and
+        returned (reported as ``t_fence_net_s``), not slept."""
+        self.store.snapshot_commit()
+        self.replica_store.snapshot_commit()
         self.stats.fences += 1
+        t_net = self.net.transfer_s(stream_bytes) + 2 * self.net.rtt_s
+        self.stats.fence_net_s += t_net
+        return t_net
 
     def replica_consistent(self) -> bool:
-        ok_v = bool(jnp.all(self.master["val"] == self.replica["val"]))
-        ok_t = bool(jnp.all(self.master["tid"] == self.replica["tid"]))
-        return ok_v and ok_t
+        return self.store.equals(self.replica_store)
 
     # ------------------------------------------------------------------
     # fault tolerance (§4.5)
@@ -237,18 +293,17 @@ class StarEngine:
         """Simulate node failures mid-epoch: optionally scribble uncommitted
         writes into the working version, then run detection + revert."""
         if dirty:
-            self.master = {
-                "val": self.master["val"].at[:, 0, 0].add(12345),
-                "tid": self.master["tid"].at[:, 0].add(jnp.uint32(2)),
-            }
+            self.store.val = self.store.val.at[:, 0, 0].add(12345)
+            self.store.tid = self.store.tid.at[:, 0].add(jnp.uint32(2))
         plan = make_recovery_plan(self.cluster, failed, self.epoch - 1)
-        # revert to last committed epoch (two-version records, §4.5.2)
-        self.master = {"val": self.snapshot["val"], "tid": self.snapshot["tid"]}
-        self.replica = {"val": self.snapshot["val"], "tid": self.snapshot["tid"]}
+        # revert to last committed epoch (two-version records, §4.5.2 —
+        # indexes roll back with the records they point at)
+        self.store.revert_to_snapshot()
+        self.replica_store.load_state(self.store.snapshot)
         return plan
 
     def recover_node(self, plan):
         """Case-1 recovery: copy + Thomas-rule catch-up (here: resync from the
         committed snapshot, which the donor streams guarantee)."""
-        self.replica = {"val": self.snapshot["val"], "tid": self.snapshot["tid"]}
+        self.replica_store.load_state(self.store.snapshot)
         return True

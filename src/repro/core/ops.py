@@ -9,16 +9,53 @@ Kinds:
                 (col0 = hash-combine, col1 = capped length) — the TPC-C
                 Payment c_data op that operation-replication ships cheaply.
 
+Index/scan kinds (params in delta columns, see IX_* layout; these must
+occupy the first IDX_OPS op slots of a transaction so the executors'
+searchsorted gathers stay bounded):
+  6 SCAN_READ    — range-scan an ordered index (delta: lo, hi keys); reads
+                   up to SCAN_L index slots + the next-key boundary slot —
+                   the scanned range joins the OCC read set (phantoms).
+  7 SCAN_CONSUME — scan [lo, hi), validate the first live key equals the
+                   declared EXPECT key, delete that index entry and
+                   tombstone (zero) its primary row (TPC-C Delivery's
+                   oldest-undelivered NEW-ORDER consume).  A mismatch
+                   aborts the whole transaction.
+  8 INSERT_IDX   — insert (key -> prow) into an index; locks the insertion
+                   position (= next-key lock, what scanners validate).
+  9 DELETE_IDX   — delete key from an index (no-op when absent).
+
 The same functions implement *operation replay* on replicas: value
 replication ships the post-image; operation replication ships (kind, delta)
-and recomputes — exactly the paper's §5 distinction.
+and recomputes — exactly the paper's §5 distinction.  Index maintenance
+replays through ``storage.index.apply_index_ops`` on both sides.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 READ, SET, ADD, APPEND, STOCK_DECR, PAY_CUST = 0, 1, 2, 3, 4, 5
+SCAN_READ, SCAN_CONSUME, INSERT_IDX, DELETE_IDX = 6, 7, 8, 9
 APPEND_CAP = 500
+
+# index-op delta column layout (int32 words of the op's delta row)
+IX_KEY = 0       # insert/delete: full (partition-prefixed) key
+IX_LO = 0        # scans: range lo key (shares col 0 — always the key col)
+IX_HI = 1        # scans: range hi key (exclusive)
+IX_PROW = 1      # insert: partition-local primary row payload
+IX_EXPECT = 2    # consume: expected (host-predicted) oldest key
+IX_ID = 3        # all index ops: which index (position in the spec list)
+
+IDX_OPS = 12     # index/scan ops live in op slots [0, IDX_OPS)
+
+# Op groups (TPC-C Delivery "skip empty district" semantics): any op may
+# declare a guard in its delta's LAST column (GUARD_COL for the standard
+# C=10 layout; executors index -1) — 0 = unguarded, g > 0 = the op applies
+# only if the SCAN_CONSUME at op slot g-1 validated.  A failed consume
+# therefore skips its district's dependent updates (and its own delete/
+# tombstone) without aborting the rest of the transaction.  Guards are only
+# interpreted when an index is attached (index-enabled workloads own the
+# last delta column; plain workloads keep full-width deltas).
+GUARD_COL = 9
 
 # Invariant (enforced by the workload generators, relied on by both
 # executors' gather-once/scatter-once semantics): a transaction touches each
@@ -57,8 +94,52 @@ def apply_op(kind, old, delta):
     new = jnp.where(k == APPEND, app_v, new)
     new = jnp.where(k == STOCK_DECR, stk, new)
     new = jnp.where(k == PAY_CUST, pay, new)
+    new = jnp.where(k == SCAN_CONSUME, jnp.zeros_like(old), new)  # tombstone
     return new
 
 
+def writes_primary(kind):
+    """Op scatters a post-image into its primary row (consume tombstones)."""
+    return ((kind > READ) & (kind <= PAY_CUST)) | (kind == SCAN_CONSUME)
+
+
+def writes_index(kind):
+    """Op mutates an ordered index (claims an index-slot lock)."""
+    return kind >= SCAN_CONSUME
+
+
+def reads_index(kind):
+    """Op's read set includes a scanned index range (phantom validation)."""
+    return (kind == SCAN_READ) | (kind == SCAN_CONSUME)
+
+
+def is_index_kind(kind):
+    """Any index/scan op — the primary `row` field is ignored for these
+    except SCAN_CONSUME (which tombstones its primary row)."""
+    return kind >= SCAN_READ
+
+
 def is_write_kind(kind):
-    return kind > READ
+    """Op needs an OCC lock claim (primary row and/or index slot)."""
+    return writes_primary(kind) | writes_index(kind)
+
+
+def resolve_op_guards(kind, delta, consume_ok, wmask):
+    """Apply op-group guards + consume self-masking to one round/slot.
+
+    kind: (..., M); delta: (..., M, C); consume_ok: (..., K) per index-op
+    slot; wmask: (..., M) primary-write mask.  Returns (wmask', iwrite_ok)
+    where ``iwrite_ok (..., K)`` is the factor to AND into the index-
+    maintenance mask.  Shared by both executors AND therefore by both
+    replication streams — guard semantics must stay bit-identical on the
+    replica for ``replica_consistent()`` to hold.
+    """
+    K = consume_ok.shape[-1]
+    guard = delta[..., -1] * is_write_kind(kind)              # (..., M)
+    gok = jnp.take_along_axis(consume_ok,
+                              jnp.clip(guard - 1, 0, K - 1), axis=-1)
+    guard_ok = jnp.where(guard > 0, gok, True)
+    consume_live = jnp.where(kind[..., :K] == SCAN_CONSUME, consume_ok, True)
+    wmask = wmask & guard_ok
+    wmask = wmask.at[..., :K].set(wmask[..., :K] & consume_live)
+    return wmask, consume_live & guard_ok[..., :K]

@@ -9,6 +9,17 @@ cross-partition fraction; e the iteration time.  Solving:
     tau_s = e * P*t_p / ((1-P)*t_s + P*t_p),    tau_p = e - tau_s
 
 with the paper's edge case P = 0 -> (tau_p, tau_s) = (e, 0).
+
+Adaptive epoch length (SCAR/Lion-style reaction to the observed mix): with
+``adaptive=True`` the controller drives ``e_ms`` from the measured
+enqueue→formation queue-delay EMA the service layer feeds in through
+``observe_latency``.  Under epoch group commit the ideal queue delay is
+~e/2 (arrivals wait half an epoch on average), so the controller steers
+``e_ms`` toward ``2 * queue_delay`` — longer epochs when measured delay
+says batches form slower than the epoch turns (amortize fences), shorter
+when the system is underloaded (cut latency) — clamped to
+[e_min_ms, e_max_ms] and EMA-smoothed so a burst cannot whipsaw the epoch.
+The flag defaults to OFF: fig12's fixed 10 ms epochs stay reproducible.
 """
 from __future__ import annotations
 
@@ -38,6 +49,10 @@ class PhaseController:
     frac_cross: float = 0.0
     queue_delay_ms: float = 0.0    # measured enqueue→batch-formation (EMA)
     measured_commit_ms: float = 0.0  # measured enqueue→commit-fence (EMA)
+    adaptive: bool = False         # drive e_ms from the queue-delay EMA
+    e_min_ms: float = 2.0
+    e_max_ms: float = 50.0
+    adapt_gain: float = 0.25       # per-observation step toward the target
     history: list = field(default_factory=list)
 
     def observe(self, phase: str, n_txns: int, elapsed_s: float,
@@ -69,6 +84,12 @@ class PhaseController:
                 if self.measured_commit_ms == 0 \
                 else (self.ema * commit_latency_ms
                       + (1 - self.ema) * self.measured_commit_ms)
+        if self.adaptive and self.queue_delay_ms > 0:
+            # group-commit ideal: queue delay ≈ e/2 -> steer e toward
+            # 2 * measured delay, bounded and low-pass filtered
+            target = min(max(2.0 * self.queue_delay_ms, self.e_min_ms),
+                         self.e_max_ms)
+            self.e_ms += self.adapt_gain * (target - self.e_ms)
 
     def plan(self):
         tau_p, tau_s = solve_phase_times(self.e_ms, self.t_p, self.t_s,

@@ -11,6 +11,13 @@
   phase (§5): a single writer per partition makes the stream order-correct, so
   replicas re-execute (kind, delta) instead of shipping post-images.
 
+* index replication — ordered-index maintenance (INSERT_IDX/DELETE_IDX/
+  SCAN_CONSUME) replays through the SAME ``storage.index.apply_index_ops``
+  batches the executors installed: per queue slot for the partitioned
+  phase's ordered stream (``replay_partitioned``), per OCC round for the
+  single-master stream (``replay_index_rounds``) — so master and replica
+  index arrays stay bit-equal and ``replica_consistent()`` covers indexes.
+
 * byte accounting — value bytes use real row sizes, operation bytes the
   operand sizes, reproducing the paper's ~10x TPC-C saving (Fig. 15).
 """
@@ -19,7 +26,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.ops import apply_op
+from repro.core.ops import IDX_OPS, apply_op
+from repro.storage.index import apply_index_ops
 
 KEY_BYTES = 8
 TID_BYTES = 8
@@ -72,6 +80,64 @@ def replay_operations(val, tidw, log):
 
     (val, tidw), _ = jax.lax.scan(step, (val, tidw), log)
     return val, tidw
+
+
+def replay_partitioned(val, tidw, log, index=None):
+    """Ordered replay of the whole partitioned-phase stream, all partitions
+    at once (the vectorized form of ``replay_operations``), with optional
+    index maintenance.
+
+    val: (P, R, C); tidw: (P, R); log: {'row','kind','delta','tid','write'}
+    each (P, T, M, ...) plus 'iwrite' (P, T, K) when index ops were logged.
+    index: list of {"key","prow","tid"} (P, cap_i) pytrees.
+    """
+    P, T, M = log["row"].shape
+    K = min(IDX_OPS, M)
+
+    def step(carry, slot):
+        val, tidw, index = carry
+        old = jnp.take_along_axis(val, slot["row"][..., None], axis=1)
+        new = apply_op(slot["kind"], old, slot["delta"])
+        R = val.shape[1]
+        rows_w = jnp.where(slot["write"], slot["row"], R)
+
+        def commit(v, t, r, n, nt):
+            v = jnp.concatenate([v, jnp.zeros((1, v.shape[1]), v.dtype)])
+            t = jnp.concatenate([t, jnp.zeros((1,), t.dtype)])
+            return v.at[r].set(n)[:R], t.at[r].set(nt)[:R]
+
+        val, tidw = jax.vmap(commit)(val, tidw, rows_w, new, slot["tid"])
+        if index is not None:
+            index = apply_index_ops(
+                index, slot["kind"][:, :K], slot["delta"][:, :K],
+                slot["iwrite"], slot["tid"][:, :K])
+        return (val, tidw, index), None
+
+    slots = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), log)   # (T, P, …)
+    (val, tidw, index), _ = jax.lax.scan(step, (val, tidw, index), slots)
+    return val, tidw, index
+
+
+def replay_index_rounds(index, kinds, delta, iwrite, tids):
+    """Replay the single-master phase's index-maintenance stream.
+
+    Within one OCC round committed index ops hold disjoint position locks,
+    so each round's batch commutes internally and rounds are ordered — the
+    replica applies the identical per-round ``apply_index_ops`` batches the
+    master installed, producing bit-equal index arrays.
+
+    kinds/delta: (B, K≥) static op arrays (same every round);
+    iwrite: (rounds, B, K) committed-index-op masks; tids: (rounds, B, M).
+    """
+    K = iwrite.shape[-1]
+
+    def step(index, per_round):
+        iw, tid_r = per_round
+        return apply_index_ops(index, kinds[:, :K], delta[:, :K], iw,
+                               tid_r[:, :K]), None
+
+    index, _ = jax.lax.scan(step, index, (iwrite, tids))
+    return index
 
 
 # ---------------------------------------------------------------------------

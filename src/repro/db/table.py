@@ -1,80 +1,9 @@
-"""Array-resident tables with two record versions (fault tolerance, §4.5.2).
+"""Compatibility shim — the table machinery moved to ``repro.storage``.
 
-A table is partition-major: ``val (P, cap, C) int32``, ``tid (P, cap) uint32``.
-``*_prev`` hold the last *committed epoch* snapshot; at every replication
-fence ``snapshot_commit`` promotes the working version, and on failure
-``revert_to_snapshot`` restores it (the paper's two-version revert).
-
-Columns are int32 words — a hardware-friendly stand-in for the paper's byte
-fields (YCSB: 10x10-byte columns -> 10 words + padding; TPC-C rows are
-word-packed per repro.db.tpcc). DESIGN.md logs this adaptation.
+The array-resident two-version tables (§4.5.2) now live in
+``repro.storage.engine`` next to the ordered secondary indexes; this module
+re-exports the original names so existing imports keep working.
 """
-from __future__ import annotations
-
-from dataclasses import dataclass
-
-import jax
-import jax.numpy as jnp
-
-
-@dataclass(frozen=True)
-class TableSpec:
-    name: str
-    capacity: int            # rows per partition
-    n_cols: int              # int32 words per row
-
-
-Database = dict   # {table: {"val","tid","val_prev","tid_prev"}, "_epoch": u32}
-
-
-def make_table(spec: TableSpec, n_partitions: int):
-    val = jnp.zeros((n_partitions, spec.capacity, spec.n_cols), jnp.int32)
-    tid = jnp.zeros((n_partitions, spec.capacity), jnp.uint32)
-    return {"val": val, "tid": tid, "val_prev": val, "tid_prev": tid}
-
-
-def make_database(specs: list[TableSpec], n_partitions: int) -> Database:
-    db = {s.name: make_table(s, n_partitions) for s in specs}
-    db["_epoch"] = jnp.uint32(1)
-    return db
-
-
-def snapshot_commit(db: Database) -> Database:
-    """Promote working version to committed snapshot (runs inside the fence)."""
-    out = {}
-    for k, t in db.items():
-        if k == "_epoch":
-            out[k] = t + jnp.uint32(1)
-        else:
-            out[k] = {"val": t["val"], "tid": t["tid"],
-                      "val_prev": t["val"], "tid_prev": t["tid"]}
-    return out
-
-
-def revert_to_snapshot(db: Database) -> Database:
-    """Failure: discard everything written in the current (uncommitted) epoch."""
-    out = {}
-    for k, t in db.items():
-        if k == "_epoch":
-            out[k] = t
-        else:
-            out[k] = {"val": t["val_prev"], "tid": t["tid_prev"],
-                      "val_prev": t["val_prev"], "tid_prev": t["tid_prev"]}
-    return out
-
-
-# ---------------------------------------------------------------------------
-# flat views (single-master phase sees one address space)
-# ---------------------------------------------------------------------------
-def flat_val(table):
-    P, cap, C = table["val"].shape
-    return table["val"].reshape(P * cap, C)
-
-
-def flat_tid(table):
-    P, cap = table["tid"].shape
-    return table["tid"].reshape(P * cap)
-
-
-def global_key(partition, idx, capacity):
-    return partition * capacity + idx
+from repro.storage.engine import (Database, TableSpec, flat_tid, flat_val,  # noqa: F401
+                                  global_key, make_database, make_table,
+                                  snapshot_commit, revert_to_snapshot)

@@ -1,0 +1,23 @@
+"""Storage subsystem: array-resident tables + ordered secondary indexes.
+
+``StorageEngine`` owns the two-version record arrays (absorbed from
+``db/table.py``) and the ``storage.index`` ordered secondary indexes, and
+exposes batched ``point_read`` / ``point_write`` / ``range_scan`` ops.  The
+phase executors (``core.single_master`` / ``core.partitioned``) validate
+scanned ranges via index-slot TIDs and next-key locking — see DESIGN.md.
+"""
+from repro.storage.engine import (Database, StorageEngine, TableSpec,
+                                  flat_tid, flat_val, global_key,
+                                  make_database, make_table, snapshot_commit,
+                                  revert_to_snapshot)
+from repro.storage.index import (IndexSpec, PART_SHIFT, SCAN_L, SENTINEL,
+                                 apply_index_ops, full_key, key_partition,
+                                 make_index, segment_apply, segment_scan)
+
+__all__ = [
+    "Database", "StorageEngine", "TableSpec", "IndexSpec",
+    "flat_tid", "flat_val", "global_key", "make_database", "make_table",
+    "snapshot_commit", "revert_to_snapshot",
+    "PART_SHIFT", "SCAN_L", "SENTINEL", "apply_index_ops", "full_key",
+    "key_partition", "make_index", "segment_apply", "segment_scan",
+]

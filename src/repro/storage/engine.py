@@ -1,0 +1,184 @@
+"""StorageEngine: array-resident tables + ordered secondary indexes.
+
+The storage layer owns what ``db/table.py`` used to carry — partition-major
+``val (P, cap, C) int32`` / ``tid (P, cap) uint32`` record arrays with two
+record versions (working + last committed epoch, the paper's §4.5.2 revert
+machinery) — plus the ordered secondary indexes of ``storage.index``, and
+exposes the batched storage ops the execution stack is written against:
+
+  point_read(parts, rows)          — batched gather of values + TIDs
+  point_write(parts, rows, ...)    — batched scatter of post-images + TIDs
+  range_scan(index, part, lo, hi)  — searchsorted window over one segment
+
+``snapshot_commit`` / ``revert_to_snapshot`` cover tables AND indexes, so a
+failed epoch rolls index maintenance back with the records it indexed.
+
+State is functional JAX pytrees: the mutating methods rebind attributes on
+the Python object, while ``state()``/``load_state()`` expose the pytree for
+jitted executors (which thread it through ``lax.scan`` carries).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.storage.index import IndexSpec, make_index, segment_scan
+
+
+@dataclass(frozen=True)
+class TableSpec:
+    name: str
+    capacity: int            # rows per partition
+    n_cols: int              # int32 words per row
+
+
+Database = dict   # {table: {"val","tid","val_prev","tid_prev"}, "_epoch": u32}
+
+
+def make_table(spec: TableSpec, n_partitions: int):
+    val = jnp.zeros((n_partitions, spec.capacity, spec.n_cols), jnp.int32)
+    tid = jnp.zeros((n_partitions, spec.capacity), jnp.uint32)
+    return {"val": val, "tid": tid, "val_prev": val, "tid_prev": tid}
+
+
+def make_database(specs: list[TableSpec], n_partitions: int) -> Database:
+    db = {s.name: make_table(s, n_partitions) for s in specs}
+    db["_epoch"] = jnp.uint32(1)
+    return db
+
+
+def snapshot_commit(db: Database) -> Database:
+    """Promote working version to committed snapshot (runs inside the fence)."""
+    out = {}
+    for k, t in db.items():
+        if k == "_epoch":
+            out[k] = t + jnp.uint32(1)
+        else:
+            out[k] = {"val": t["val"], "tid": t["tid"],
+                      "val_prev": t["val"], "tid_prev": t["tid"]}
+    return out
+
+
+def revert_to_snapshot(db: Database) -> Database:
+    """Failure: discard everything written in the current (uncommitted) epoch."""
+    out = {}
+    for k, t in db.items():
+        if k == "_epoch":
+            out[k] = t
+        else:
+            out[k] = {"val": t["val_prev"], "tid": t["tid_prev"],
+                      "val_prev": t["val_prev"], "tid_prev": t["tid_prev"]}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# flat views (single-master phase sees one address space)
+# ---------------------------------------------------------------------------
+def flat_val(table):
+    P, cap, C = table["val"].shape
+    return table["val"].reshape(P * cap, C)
+
+
+def flat_tid(table):
+    P, cap = table["tid"].shape
+    return table["tid"].reshape(P * cap)
+
+
+def global_key(partition, idx, capacity):
+    return partition * capacity + idx
+
+
+# ---------------------------------------------------------------------------
+# the storage engine
+# ---------------------------------------------------------------------------
+class StorageEngine:
+    """One replica's storage: record arrays + secondary indexes, two-version."""
+
+    def __init__(self, n_partitions: int, rows_per_partition: int,
+                 n_cols: int = 10, init_val=None,
+                 index_specs: list[IndexSpec] | None = None):
+        P, R, C = n_partitions, rows_per_partition, n_cols
+        self.P, self.R, self.C = P, R, C
+        self.val = (jnp.asarray(init_val, jnp.int32) if init_val is not None
+                    else jnp.zeros((P, R, C), jnp.int32))
+        self.tid = jnp.zeros((P, R), jnp.uint32)
+        self.index_specs = list(index_specs or [])
+        self.indexes = [make_index(s, P) for s in self.index_specs]
+        self._snap = self.state()
+
+    # -- pytree plumbing for jitted executors ---------------------------
+    def state(self):
+        # shallow-copy the containers: snapshots must not alias the live
+        # index dicts (the arrays themselves are immutable jax values)
+        return {"val": self.val, "tid": self.tid,
+                "indexes": [dict(ix) for ix in self.indexes]}
+
+    def load_state(self, state):
+        self.val, self.tid = state["val"], state["tid"]
+        self.indexes = [dict(ix) for ix in state["indexes"]]
+
+    # -- two-version records (§4.5.2), indexes included -----------------
+    def snapshot_commit(self):
+        self._snap = self.state()
+
+    def revert_to_snapshot(self):
+        self.load_state(self._snap)
+
+    @property
+    def snapshot(self):
+        return self._snap
+
+    # -- batched point ops ----------------------------------------------
+    def point_read(self, parts, rows):
+        """parts/rows: (...,) int32 -> (vals (..., C), tids (...,))."""
+        flat = jnp.asarray(parts) * self.R + jnp.asarray(rows)
+        return (self.val.reshape(-1, self.C)[flat],
+                self.tid.reshape(-1)[flat])
+
+    def point_write(self, parts, rows, vals, tids):
+        """Batched scatter of post-images + TIDs (caller resolves conflicts)."""
+        flat = (jnp.asarray(parts) * self.R + jnp.asarray(rows)).reshape(-1)
+        self.val = self.val.reshape(-1, self.C).at[flat].set(
+            jnp.asarray(vals).reshape(-1, self.C)).reshape(self.P, self.R,
+                                                           self.C)
+        self.tid = self.tid.reshape(-1).at[flat].set(
+            jnp.asarray(tids).reshape(-1)).reshape(self.P, self.R)
+
+    # -- range scan over one index segment ------------------------------
+    def index_id(self, name: str) -> int:
+        for i, s in enumerate(self.index_specs):
+            if s.name == name:
+                return i
+        raise KeyError(name)
+
+    def range_scan(self, index: str | int, part: int, lo, hi,
+                   limit: int = None):
+        """Scan index ``index`` on partition ``part`` for keys in [lo, hi).
+
+        Returns (keys, prows, tids, mask): fixed-width ``limit`` result
+        slots, ``mask`` marking live in-range hits.  ``lo``/``hi`` are full
+        (partition-prefixed) keys.
+        """
+        from repro.storage.index import SCAN_L
+        limit = SCAN_L if limit is None else limit
+        i = index if isinstance(index, int) else self.index_id(index)
+        idx = self.indexes[i]
+        seg_k, seg_p, seg_t = idx["key"][part], idx["prow"][part], \
+            idx["tid"][part]
+        slots, keys_at, in_range = segment_scan(seg_k, jnp.int32(lo),
+                                                jnp.int32(hi), limit + 1)
+        res = slice(0, limit)
+        return (keys_at[res], seg_p[slots][res], seg_t[slots][res],
+                in_range[res])
+
+    # -- consistency ------------------------------------------------------
+    def equals(self, other: "StorageEngine") -> bool:
+        if not (bool(jnp.all(self.val == other.val))
+                and bool(jnp.all(self.tid == other.tid))):
+            return False
+        for a, b in zip(self.indexes, other.indexes):
+            for f in ("key", "prow", "tid"):
+                if not bool(jnp.all(a[f] == b[f])):
+                    return False
+        return True

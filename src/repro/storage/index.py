@@ -1,0 +1,190 @@
+"""Ordered secondary indexes over the array-resident tables.
+
+Each index is a partition-major sorted-key array: ``key (P, cap) int32``
+ascending with SENTINEL-padded free slots, a parallel primary-row payload
+``prow (P, cap) int32`` (partition-local row the entry points at) and a
+per-slot ``tid (P, cap) uint32`` stamped by the transaction that last
+created the entry.  Everything is fixed-shape and scan/jit-compatible:
+
+* lookups/range scans are ``jnp.searchsorted`` + a bounded window gather
+  (``SCAN_L`` result slots + 1 next-key slot for phantom validation);
+* maintenance is a vectorized delete-scatter (searchsorted position, hit
+  test, sentinelize) followed by an insert merge (concat + stable argsort,
+  keep first ``cap``) — free slots are canonical (key=SENTINEL, prow=0,
+  tid=0) so master and replica arrays stay bit-equal under replay.
+
+Key encoding: the partition id lives in the high bits
+(``full_key = partition << PART_SHIFT | local_key``), so each partition's
+segment is independently sorted *and* the segment is selectable from the
+key alone — the single-master phase (which sees the flat global address
+space) recovers the segment as ``key >> PART_SHIFT``.
+
+OCC integration (next-key locking): an insert's lock target is the slot
+``searchsorted(seg, key)`` — the current *successor* of the inserted key —
+and a scan's read set is the window ``[searchsorted(seg, lo), +SCAN_L]``
+slots.  Any insert/delete landing inside a concurrently scanned range
+therefore claims a slot the scanner read, and Silo validation aborts the
+scanner: phantom protection in the same scatter-min lock discipline as row
+writes (see core/single_master.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = np.int32(0x7FFFFFFF)
+PART_SHIFT = 24                    # full key = partition << 24 | local key
+SCAN_L = 8                         # result slots per scan op (+1 next-key)
+
+
+@dataclass(frozen=True)
+class IndexSpec:
+    name: str
+    capacity: int                  # slots per partition (fixed)
+
+
+def make_index(spec: IndexSpec, n_partitions: int):
+    P, cap = n_partitions, spec.capacity
+    return {"key": jnp.full((P, cap), SENTINEL, jnp.int32),
+            "prow": jnp.zeros((P, cap), jnp.int32),
+            "tid": jnp.zeros((P, cap), jnp.uint32)}
+
+
+def full_key(partition, local_key):
+    return (jnp.asarray(partition, jnp.int32) << PART_SHIFT) | \
+        jnp.asarray(local_key, jnp.int32)
+
+
+def key_partition(key):
+    return jnp.asarray(key, jnp.int32) >> PART_SHIFT
+
+
+# ---------------------------------------------------------------------------
+# one-segment primitives (vmap over partitions / ops at the call sites)
+# ---------------------------------------------------------------------------
+def segment_apply(key, prow, tid, del_key, ins_key, ins_prow, ins_tid):
+    """Apply one batch of deletes + inserts to one sorted segment.
+
+    key/prow/tid: (cap,).  del_key: (Kd,) with SENTINEL = masked out.
+    ins_key: (Ki,) with SENTINEL = masked out; ins_prow/ins_tid payloads.
+    Deletes resolve against the *pre-batch* segment; inserts merge after.
+    Returns the re-sorted canonical segment.  Entries beyond ``cap`` after
+    the merge are dropped largest-key-first (capacity is the caller's
+    sizing responsibility — see IndexSpec).
+    """
+    cap = key.shape[0]
+    # -- deletes: searchsorted position, exact-match test, sentinelize
+    pos = jnp.clip(jnp.searchsorted(key, del_key), 0, cap - 1)
+    hit = (key[pos] == del_key) & (del_key != SENTINEL)
+    tgt = jnp.where(hit, pos, cap)
+    key = jnp.concatenate([key, jnp.array([SENTINEL], jnp.int32)]
+                          ).at[tgt].set(SENTINEL)[:cap]
+    # -- inserts: merge + stable sort, keep the cap smallest keys
+    k2 = jnp.concatenate([key, ins_key])
+    p2 = jnp.concatenate([prow, ins_prow])
+    t2 = jnp.concatenate([tid, ins_tid])
+    order = jnp.argsort(k2)[:cap]                     # jax sorts are stable
+    k2, p2, t2 = k2[order], p2[order], t2[order]
+    live = k2 != SENTINEL                             # canonical free slots
+    return k2, jnp.where(live, p2, 0), jnp.where(live, t2, jnp.uint32(0))
+
+
+def segment_scan(key, lo, hi, n_slots: int = SCAN_L + 1):
+    """Bounded range scan of one sorted segment: the first ``n_slots`` slots
+    at/after ``lo`` (the last one is the next-key/boundary slot).
+
+    Returns (slots (n_slots,) int32 positions clipped to cap-1,
+             keys_at (n_slots,), in_range (n_slots,) bool) where ``in_range``
+    marks live keys in [lo, hi) among the first n_slots-1 result slots.
+    """
+    cap = key.shape[0]
+    pos0 = jnp.searchsorted(key, lo)
+    raw = pos0 + jnp.arange(n_slots, dtype=jnp.int32)
+    slots = jnp.clip(raw, 0, cap - 1)
+    keys_at = key[slots]
+    is_result = jnp.arange(n_slots) < (n_slots - 1)   # last slot = next-key
+    in_range = (raw < cap) & is_result & (keys_at >= lo) & (keys_at < hi) \
+        & (keys_at != SENTINEL)
+    return slots, keys_at, in_range
+
+
+# ---------------------------------------------------------------------------
+# batched maintenance shared by executors and replica replay
+# ---------------------------------------------------------------------------
+def apply_index_ops(indexes, kinds, delta, win, tids):
+    """Apply one batch of committed index-maintenance ops to every index.
+
+    indexes: list of {"key","prow","tid"} (P, cap_i) pytrees.
+    kinds: (..., K) int32 op kinds; delta: (..., K, C) op params
+    (IX_* column layout, see core.ops); win: (..., K) bool — the op
+    committed in this round/step; tids: (..., K) uint32 commit TIDs.
+
+    The SAME function runs in the executors' install phase and in replica
+    replay, so both sides evolve bit-equal index arrays from the same
+    logical op stream (round/step-ordered; within a batch, lock-disjoint).
+    """
+    from repro.core.ops import (DELETE_IDX, INSERT_IDX, IX_EXPECT, IX_ID,
+                                IX_KEY, IX_PROW, SCAN_CONSUME)
+    P = indexes[0]["key"].shape[0]
+    kinds = kinds.reshape(-1)
+    win = win.reshape(-1)
+    delta = delta.reshape(kinds.shape[0], -1)
+    iid = delta[:, IX_ID]
+    part = key_partition(delta[:, IX_KEY])
+    parts_col = jnp.arange(P, dtype=jnp.int32)[:, None]          # (P, 1)
+
+    out = []
+    for i, idx in enumerate(indexes):
+        sel_i = win & (iid == i)
+        is_del = sel_i & ((kinds == DELETE_IDX) | (kinds == SCAN_CONSUME))
+        is_ins = sel_i & (kinds == INSERT_IDX)
+        dkey = jnp.where(kinds == SCAN_CONSUME, delta[:, IX_EXPECT],
+                         delta[:, IX_KEY])
+        del_key = jnp.where(is_del, dkey, SENTINEL)
+        ins_key = jnp.where(is_ins, delta[:, IX_KEY], SENTINEL)
+        ins_prow = jnp.where(is_ins, delta[:, IX_PROW], 0)
+        ins_tid = jnp.where(is_ins, tids.reshape(-1), jnp.uint32(0))
+        # partition-align the candidate batch: (P, Q) masked per segment
+        mine = parts_col == part[None, :]
+        del_pq = jnp.where(mine, del_key[None, :], SENTINEL)
+        ins_pq = jnp.where(mine, ins_key[None, :], SENTINEL)
+        prow_pq = jnp.where(mine, ins_prow[None, :], 0)
+        tid_pq = jnp.where(mine, ins_tid[None, :], jnp.uint32(0))
+        k, p, t = jax.vmap(segment_apply)(
+            idx["key"], idx["prow"], idx["tid"], del_pq, ins_pq, prow_pq,
+            tid_pq)
+        out.append({"key": k, "prow": p, "tid": t})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# numpy reference (tests): the oracle the jnp index must agree with
+# ---------------------------------------------------------------------------
+class ReferenceIndex:
+    """Sorted-dict semantics in plain numpy for property tests."""
+
+    def __init__(self):
+        self.entries = {}              # key -> (prow, tid)
+
+    def insert(self, key, prow, tid):
+        self.entries[int(key)] = (int(prow), int(tid))
+
+    def delete(self, key):
+        self.entries.pop(int(key), None)
+
+    def range_scan(self, lo, hi, limit):
+        ks = sorted(k for k in self.entries if lo <= k < hi)[:limit]
+        return [(k, *self.entries[k]) for k in ks]
+
+    def as_arrays(self, cap):
+        ks = sorted(self.entries)[:cap]
+        key = np.full(cap, SENTINEL, np.int32)
+        prow = np.zeros(cap, np.int32)
+        tid = np.zeros(cap, np.uint32)
+        for i, k in enumerate(ks):
+            key[i] = k
+            prow[i], tid[i] = self.entries[k]
+        return key, prow, tid

@@ -86,3 +86,26 @@ def test_failure_case_enumeration_f2_k6():
     assert classify_failure(cfg, set(range(2, 8))) == RecoveryCase.FULL_ONLY
     # one partial fails, its partition still has a live secondary -> case 1
     assert classify_failure(cfg, {3}) == RecoveryCase.PHASE_SWITCHING
+
+
+def test_fence_models_network_lag(ycsb_engine):
+    """The replication fence ships the epoch's stream bytes through the
+    cost-model Network envelope: t_fence_net_s > 2 barrier RTTs whenever
+    bytes moved, and it accumulates in the engine stats."""
+    from repro.baselines.cost_model import Network
+    net = Network()
+    cfg = ycsb.YCSBConfig(n_partitions=2, records_per_partition=200)
+    eng = StarEngine(2, 200, net=net)
+    m = eng.run_epoch(ycsb.make_batch(cfg, 128, seed=3))
+    floor = 2 * 2 * net.rtt_s                  # two fences, 2 RTTs each
+    assert m["t_fence_net_s"] >= floor
+    assert m["t_fence_net_s"] > floor, "stream bytes must add transfer time"
+    assert eng.stats.fence_net_s >= m["t_fence_net_s"]
+
+
+def test_engine_adaptive_epoch_flag():
+    eng = StarEngine(2, 64, adaptive_epoch=True, iteration_ms=10.0)
+    assert eng.controller.adaptive
+    for _ in range(40):
+        eng.controller.observe_latency(30.0, 35.0)
+    assert eng.controller.e_ms > 15.0

@@ -67,6 +67,9 @@ def test_moe_expert_parallel_8dev_matches_single():
     assert "OK" in out
 
 
+@pytest.mark.skipif(
+    not hasattr(__import__("jax"), "shard_map"),
+    reason="needs jax.shard_map (newer jax than the pinned container)")
 def test_star_partitioned_phase_shard_map_8dev():
     """Partitioned phase via shard_map over 8 device-partitions == vmap."""
     out = _run("""

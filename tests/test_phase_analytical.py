@@ -53,3 +53,27 @@ def test_consistency_eq3_eq5():
     assert np.isclose(ratio, an.improvement_over_partitioning(n, P, K))
     ratio2 = an.t_nonpartitioned(n, n_s, n_c, t_s) / an.t_star(n, n_s, n_c, t_s)
     assert np.isclose(ratio2, an.improvement_over_nonpartitioned(n, P))
+
+
+def test_adaptive_epoch_tracks_queue_delay():
+    """adaptive=True: e_ms steers toward 2x the measured queue-delay EMA
+    (group-commit ideal: delay ~ e/2), clamped and smoothed."""
+    from repro.core.phase_switch import PhaseController
+    c = PhaseController(e_ms=10.0, adaptive=True)
+    for _ in range(50):
+        c.observe_latency(20.0)            # overloaded: 20 ms queue delay
+    assert c.e_ms > 25.0, "epoch must grow toward 2 * 20 ms"
+    assert c.e_ms <= c.e_max_ms
+    for _ in range(80):
+        c.observe_latency(0.5)             # underloaded: sub-ms delay
+    assert c.e_ms < 5.0, "epoch must shrink when delay collapses"
+    assert c.e_ms >= c.e_min_ms
+
+
+def test_adaptive_epoch_off_by_default():
+    """fig12 reproducibility: the fixed 10 ms default must not drift."""
+    from repro.core.phase_switch import PhaseController
+    c = PhaseController(e_ms=10.0)
+    for _ in range(20):
+        c.observe_latency(25.0, 30.0)
+    assert c.e_ms == 10.0

@@ -124,6 +124,39 @@ def test_tpcc_open_loop():
     assert eng.replica_consistent()
 
 
+def test_tpcc_full_mix_through_service():
+    """The five-transaction mix served online: the service layer needs no
+    changes — scan/index ops ride the same request arrays — and the replica
+    (records + indexes) stays bit-equal at the end of the run."""
+    cfg = tpcc.TPCCConfig(n_partitions=2, n_items=200, cust_per_district=20,
+                          order_ring=64, mix="full", delivery_gen_lag=64)
+    state = tpcc.TPCCState(cfg)
+    rng = np.random.default_rng(0)
+    init = tpcc.init_values(cfg, rng, state=state)
+    eng = StarEngine(2, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg))
+    client = OpenLoopClient(TPCCSource(cfg, state=state, seed=2),
+                            rate_txn_s=400.0)
+    svc = TxnService(eng, [client], AdmissionConfig(64, 64),
+                     slots_per_partition=8, master_lanes=8)
+    from repro.storage import SENTINEL
+
+    def live_entries():
+        return (np.asarray(eng.store.indexes[tpcc.OID_IDX]["key"])
+                != SENTINEL).sum()
+
+    out = svc.run(duration_s=0.5)
+    # under heavy host load a 0.5 s window may drain few epochs — keep
+    # serving until a NewOrder has maintained the index (bounded retries)
+    for _ in range(3):
+        if live_entries() > 0:
+            break
+        out = svc.run(duration_s=0.4, warmup_epochs=0)
+    assert out["committed"] > 0
+    assert eng.replica_consistent()
+    assert live_entries() > 0, "NewOrders maintained the orders index online"
+
+
 # ---------------------------------------------------------------------------
 # router: vectorized + re-route path
 # ---------------------------------------------------------------------------

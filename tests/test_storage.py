@@ -1,0 +1,255 @@
+"""Storage subsystem: ordered-index properties + range-scan OCC (phantoms).
+
+Property tests (hypothesis via tests/_hyp.py): the jnp sorted-key index must
+agree with a plain-python sorted-dict reference under random insert/delete
+interleavings, and ``range_scan`` must return exactly the reference's range
+answers.  OCC tests drive ``run_single_master`` directly: a scanned range
+dirtied by a concurrent committed insert must abort the scanner (next-key
+validation = phantom protection), and a consumed entry can be consumed once.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hyp import given, settings, st
+
+from repro.core.ops import (DELETE_IDX, INSERT_IDX, IX_EXPECT, IX_HI, IX_ID,
+                            IX_KEY, IX_PROW, READ, SCAN_CONSUME, SCAN_READ,
+                            SET)
+from repro.core.single_master import run_single_master
+from repro.storage import (IndexSpec, SENTINEL, StorageEngine, make_index,
+                           segment_apply, segment_scan)
+from repro.storage.index import ReferenceIndex
+
+C = 10
+M = 16
+
+
+def _apply_batch(key, prow, tid, dels, ins):
+    """One segment_apply call from python-level batches (masked to width 8)."""
+    W = 8
+    dk = np.full(W, SENTINEL, np.int32)
+    ik = np.full(W, SENTINEL, np.int32)
+    ip = np.zeros(W, np.int32)
+    it = np.zeros(W, np.uint32)
+    dk[:len(dels)] = dels
+    for j, (k, p, t) in enumerate(ins):
+        ik[j], ip[j], it[j] = k, p, t
+    return segment_apply(key, prow, tid, jnp.asarray(dk), jnp.asarray(ik),
+                         jnp.asarray(ip), jnp.asarray(it))
+
+
+@given(st.integers(0, 10_000), st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_index_matches_reference_under_interleaving(seed, n_batches):
+    """Random insert/delete batches: jnp index == numpy sorted reference."""
+    rng = np.random.default_rng(seed)
+    cap = 64
+    key = jnp.full((cap,), SENTINEL, jnp.int32)
+    prow = jnp.zeros((cap,), jnp.int32)
+    tid = jnp.zeros((cap,), jnp.uint32)
+    ref = ReferenceIndex()
+    next_tid = 1
+    for _ in range(n_batches):
+        live = sorted(ref.entries)
+        # deletes of existing + missing keys; inserts of fresh keys
+        dels = []
+        if live and rng.random() < 0.6:
+            dels = [int(k) for k in
+                    rng.choice(live, size=min(len(live), int(rng.integers(1, 4))),
+                               replace=False)]
+        if rng.random() < 0.3:
+            dels.append(int(rng.integers(0, 1000)) + 2000)   # likely missing
+        ins = []
+        n_ins = int(rng.integers(0, 5))
+        fresh = rng.choice(2000, size=n_ins, replace=False)
+        for k in fresh:
+            if int(k) in ref.entries or int(k) in dels:
+                continue
+            if len(ref.entries) - len([d for d in dels if d in ref.entries]) \
+                    + len(ins) >= cap:
+                break
+            ins.append((int(k), int(rng.integers(0, 100)), next_tid))
+            next_tid += 1
+        key, prow, tid = _apply_batch(key, prow, tid, dels, ins)
+        for d in dels:
+            ref.delete(d)
+        for k, p, t in ins:
+            ref.insert(k, p, t)
+        rk, rp, rt = ref.as_arrays(cap)
+        assert np.array_equal(np.asarray(key), rk)
+        assert np.array_equal(np.asarray(prow), rp)
+        assert np.array_equal(np.asarray(tid), rt)
+
+
+@given(st.integers(0, 10_000), st.integers(0, 900), st.integers(1, 200))
+@settings(max_examples=25, deadline=None)
+def test_range_scan_matches_reference(seed, lo, width):
+    rng = np.random.default_rng(seed)
+    cap = 64
+    ref = ReferenceIndex()
+    keys = rng.choice(1000, size=rng.integers(1, 40), replace=False)
+    for i, k in enumerate(keys):
+        ref.insert(int(k), i, i + 1)
+    rk, rp, rt = ref.as_arrays(cap)
+    hi = lo + width
+    slots, keys_at, in_range = segment_scan(jnp.asarray(rk), jnp.int32(lo),
+                                            jnp.int32(hi))
+    got = [(int(keys_at[j]), int(rp[int(slots[j])]), int(rt[int(slots[j])]))
+           for j in range(len(np.asarray(in_range))) if in_range[j]]
+    expect = ref.range_scan(lo, hi, limit=len(np.asarray(slots)) - 1)
+    assert got == expect
+
+
+def test_storage_engine_point_and_range_ops():
+    eng = StorageEngine(2, 8, n_cols=4,
+                        index_specs=[IndexSpec("ix", 16)])
+    parts = jnp.array([0, 1], jnp.int32)
+    rows = jnp.array([3, 5], jnp.int32)
+    vals = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    tids = jnp.array([2, 4], jnp.uint32)
+    eng.point_write(parts, rows, vals, tids)
+    v, t = eng.point_read(parts, rows)
+    assert np.array_equal(np.asarray(v), np.asarray(vals))
+    assert np.array_equal(np.asarray(t), np.asarray(tids))
+    # index round trip through segment arrays + range_scan
+    idx = eng.indexes[0]
+    idx["key"] = idx["key"].at[1, 0].set((1 << 24) | 7)
+    idx["prow"] = idx["prow"].at[1, 0].set(5)
+    idx["tid"] = idx["tid"].at[1, 0].set(4)
+    keys, prows, tids_, mask = eng.range_scan("ix", 1, (1 << 24) | 0,
+                                              (1 << 24) | 100)
+    assert bool(mask[0]) and int(keys[0]) == ((1 << 24) | 7) \
+        and int(prows[0]) == 5
+    assert not bool(mask[1:].any())
+
+
+def test_snapshot_revert_covers_indexes():
+    eng = StorageEngine(1, 4, n_cols=4, index_specs=[IndexSpec("ix", 8)])
+    eng.snapshot_commit()
+    eng.val = eng.val.at[0, 0, 0].set(99)
+    eng.indexes[0]["key"] = eng.indexes[0]["key"].at[0, 0].set(17)
+    eng.revert_to_snapshot()
+    assert int(eng.val[0, 0, 0]) == 0
+    assert int(eng.indexes[0]["key"][0, 0]) == SENTINEL
+
+
+# ---------------------------------------------------------------------------
+# range-scan OCC: phantom protection in the single-master executor
+# ---------------------------------------------------------------------------
+def _txn_arrays(B):
+    return (np.zeros((B, M), np.int32), np.full((B, M), READ, np.int32),
+            np.zeros((B, M, C), np.int32))
+
+
+def _run(txns, index, val=None, tid=None, n=64, max_rounds=4):
+    val = val if val is not None else jnp.zeros((n, C), jnp.int32)
+    tid = tid if tid is not None else jnp.zeros((n,), jnp.uint32)
+    return run_single_master(val, tid, jax.tree.map(jnp.asarray, txns),
+                             jnp.uint32(1), max_rounds=max_rounds,
+                             index=index)
+
+
+def test_phantom_insert_aborts_scanner():
+    """A scanned range dirtied by a concurrent committed insert aborts the
+    scanning transaction (next-key validation)."""
+    index = [make_index(IndexSpec("ix", 16), 1)]
+    rows, kinds, deltas = _txn_arrays(2)
+    kinds[0, 0] = INSERT_IDX
+    deltas[0, 0, IX_KEY] = 50
+    deltas[0, 0, IX_PROW] = 3
+    kinds[1, 0] = SCAN_READ
+    deltas[1, 0, IX_KEY] = 0
+    deltas[1, 0, IX_HI] = 100
+    txns = {"valid": np.ones(2, bool), "row": rows, "kind": kinds,
+            "delta": deltas, "user_abort": np.zeros(2, bool)}
+    # one round only: the scanner must NOT commit alongside the insert
+    _, _, out, _ = _run(txns, index, max_rounds=1)
+    assert bool(out["committed"][0]) and not bool(out["committed"][1])
+    # with retries allowed it commits in a later round, seeing the insert
+    _, _, out, stats = _run(txns, index, max_rounds=4)
+    assert np.asarray(out["committed"]).all()
+    assert int(np.asarray(out["committed_round"])[1]) > 0
+    assert int(stats["retries"]) >= 1
+
+
+def test_scan_outside_range_no_conflict():
+    """An insert beyond the scanned range does not abort the scanner."""
+    index = [make_index(IndexSpec("ix", 16), 1)]
+    # pre-populate keys 10, 20 so the scan window has a real boundary
+    rows, kinds, deltas = _txn_arrays(1)
+    kinds[0, 0] = INSERT_IDX
+    deltas[0, 0, IX_KEY] = 10
+    kinds[0, 1] = INSERT_IDX
+    deltas[0, 1, IX_KEY] = 20
+    setup = {"valid": np.ones(1, bool), "row": rows, "kind": kinds,
+             "delta": deltas, "user_abort": np.zeros(1, bool)}
+    _, _, out, _ = _run(setup, index, max_rounds=1)
+    index = out["index"]
+    rows, kinds, deltas = _txn_arrays(2)
+    kinds[0, 0] = INSERT_IDX                  # insert key 500: outside scan
+    deltas[0, 0, IX_KEY] = 500
+    kinds[1, 0] = SCAN_READ                   # scan [0, 15): sees 10 only
+    deltas[1, 0, IX_KEY] = 0
+    deltas[1, 0, IX_HI] = 15
+    txns = {"valid": np.ones(2, bool), "row": rows, "kind": kinds,
+            "delta": deltas, "user_abort": np.zeros(2, bool)}
+    _, _, out, _ = _run(txns, index, max_rounds=1)
+    assert np.asarray(out["committed"]).all(), \
+        "disjoint insert+scan must both commit in one round"
+
+
+def test_consume_is_exclusive_and_ordered():
+    """Two concurrent consumes of the same entry: exactly one wins per
+    round; the loser retries and (strict oldest-first) skips once the entry
+    is gone."""
+    index = [make_index(IndexSpec("ix", 16), 1)]
+    rows, kinds, deltas = _txn_arrays(1)
+    kinds[0, 0] = INSERT_IDX
+    deltas[0, 0, IX_KEY] = 7
+    deltas[0, 0, IX_PROW] = 2
+    setup = {"valid": np.ones(1, bool), "row": rows, "kind": kinds,
+             "delta": deltas, "user_abort": np.zeros(1, bool)}
+    _, _, out, _ = _run(setup, index, max_rounds=1)
+    index = out["index"]
+
+    rows, kinds, deltas = _txn_arrays(2)
+    for b in range(2):
+        kinds[b, 0] = SCAN_CONSUME
+        deltas[b, 0, IX_KEY] = 0
+        deltas[b, 0, IX_HI] = 100
+        deltas[b, 0, IX_EXPECT] = 7
+        rows[b, 0] = 2
+    txns = {"valid": np.ones(2, bool), "row": rows, "kind": kinds,
+            "delta": deltas, "user_abort": np.zeros(2, bool)}
+    _, _, out, stats = _run(txns, index, max_rounds=3)
+    committed = np.asarray(out["committed"])
+    assert committed.all()                    # loser commits with a skip
+    assert int(np.asarray(out["index"][0]["key"])[0, 0]) == SENTINEL
+    assert int(stats["consume_skips"]) == 1   # second consume found nothing
+
+
+def test_insert_scan_consume_roundtrip_with_primary():
+    """Insert + primary write, then consume tombstones the primary row."""
+    index = [make_index(IndexSpec("ix", 16), 1)]
+    rows, kinds, deltas = _txn_arrays(1)
+    kinds[0, 0] = INSERT_IDX
+    deltas[0, 0, IX_KEY] = 9
+    deltas[0, 0, IX_PROW] = 4
+    kinds[0, 12] = SET
+    rows[0, 12] = 4
+    deltas[0, 12, :5] = 6
+    t1 = {"valid": np.ones(1, bool), "row": rows, "kind": kinds,
+          "delta": deltas, "user_abort": np.zeros(1, bool)}
+    val, tidw, out, _ = _run(t1, index, max_rounds=1)
+    assert int(val[4, 0]) == 6
+    rows, kinds, deltas = _txn_arrays(1)
+    kinds[0, 0] = SCAN_CONSUME
+    deltas[0, 0, IX_KEY] = 0
+    deltas[0, 0, IX_HI] = 100
+    deltas[0, 0, IX_EXPECT] = 9
+    rows[0, 0] = 4
+    t2 = {"valid": np.ones(1, bool), "row": rows, "kind": kinds,
+          "delta": deltas, "user_abort": np.zeros(1, bool)}
+    val, tidw, out, _ = _run(t2, out["index"], val=val, tid=tidw, max_rounds=1)
+    assert bool(out["committed"][0])
+    assert int(val[4, 0]) == 0, "consume tombstones the primary row"

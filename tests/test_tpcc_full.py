@@ -1,0 +1,131 @@
+"""Full five-transaction TPC-C mix end-to-end (45/43/4/4/4).
+
+The acceptance bar for the storage-engine refactor: the full mix runs
+through ``StarEngine.run_epoch`` with ``replica_consistent()`` (records AND
+indexes) holding at every fence; Delivery consumes the oldest undelivered
+NEW-ORDER through an index range scan (device/host undelivered sets stay
+equal, oldest-first); and the money adds up — every customer balance delta
+equals delivered order amounts minus payment debits (an economic invariant
+that fails if any scan consumed the wrong order or any guard misfired).
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import StarEngine
+from repro.core.ops import PAY_CUST
+from repro.db import tpcc
+from repro.storage import SENTINEL
+
+
+def _mk(n_partitions, **kw):
+    cfg = tpcc.TPCCConfig(n_partitions=n_partitions, n_items=400,
+                          cust_per_district=40, order_ring=64, mix="full",
+                          delivery_gen_lag=256, **kw)
+    state = tpcc.TPCCState(cfg)
+    rng = np.random.default_rng(7)
+    init = tpcc.init_values(cfg, rng, state=state)
+    eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg))
+    return cfg, state, eng, init
+
+
+def _live(index_arrays):
+    return np.asarray(index_arrays["key"]) != SENTINEL
+
+
+def test_full_mix_replica_consistent_every_fence():
+    cfg, state, eng, _ = _mk(2)
+    for ep in range(5):
+        batch = tpcc.make_batch(cfg, state, 192, seed=ep)
+        m = eng.run_epoch(batch)
+        assert eng.replica_consistent(), f"replica diverged at epoch {ep}"
+        assert m["committed_single"] > 0
+    assert eng.stats.committed_cross > 0, "cross NewOrder/Payment exercised"
+    # all three indexes were populated and maintained
+    for i in range(3):
+        assert _live(eng.store.indexes[i]).sum() > 0
+
+
+def test_delivery_consumes_oldest_via_index():
+    """Device undelivered set == host queue, oldest-first, per district."""
+    cfg, state, eng, _ = _mk(1)      # P=1: generation order == commit order
+    for ep in range(6):
+        eng.run_epoch(tpcc.make_batch(cfg, state, 256, seed=100 + ep))
+        assert eng.replica_consistent()
+    assert eng.stats.consume_skips == 0, \
+        "single-partition full mix must never mispredict a consume"
+    no = eng.store.indexes[tpcc.NO_IDX]
+    keys = np.asarray(no["key"])[0]
+    live = keys[keys != SENTINEL]
+    host = []
+    for d in range(tpcc.N_DIST):
+        q = state.undelivered[0][d]
+        # host queues are oldest-first: Delivery pops index 0
+        assert [e[0] for e in q] == sorted(e[0] for e in q)
+        host += [tpcc._key_no(0, d, o % (1 << tpcc.D_SHIFT))
+                 for o, *_ in q]
+    assert sorted(host) == sorted(int(k) for k in live), \
+        "device undelivered index == host undelivered queues"
+    n_orders = int(state.next_o_id.sum()) - 3001 * tpcc.N_DIST
+    assert 0 < len(live) < n_orders, "some orders delivered, some pending"
+
+
+def test_full_mix_money_conserved():
+    """Σ customer balance deltas = Σ delivered amounts − Σ payment debits
+    (P=1, so every transaction commits in generation order)."""
+    cfg, state, eng, init = _mk(1)
+    pay_total = 0
+    for ep in range(6):
+        raw = tpcc.make_raw(cfg, state, 256, np.random.default_rng(200 + ep))
+        pay = raw["kinds"] == PAY_CUST
+        pay_total += int(raw["deltas"][..., 3][pay].sum())   # ytd = +amount
+        eng.run_epoch(tpcc.make_batch(cfg, state, 0, raw=raw))
+        assert eng.replica_consistent()
+    assert eng.stats.consume_skips == 0
+    remaining = sum(a for wq in state.undelivered for q in wq
+                    for _, _, a, _, _ in q)
+    delivered = state.pushed_amount - remaining - state.evicted_amount
+    cust = slice(cfg.off_customer,
+                 cfg.off_customer + tpcc.N_DIST * cfg.cust_per_district)
+    bal = np.asarray(eng.store.val)[0, cust, 2].astype(np.int64)
+    init_bal = np.asarray(init)[0, cust, 2].astype(np.int64)
+    assert int((bal - init_bal).sum()) == delivered - pay_total
+
+
+def test_order_status_scan_finds_latest_order():
+    cfg, state, eng, _ = _mk(1)
+    for ep in range(3):
+        eng.run_epoch(tpcc.make_batch(cfg, state, 256, seed=300 + ep))
+    # pick a customer the host knows ordered recently (and not yet evicted)
+    w = 0
+    ring = cfg.order_ring
+    cand = np.argwhere(state.last_o[w] >= 0)
+    assert cand.size, "some customer ordered"
+    d = c = o = None
+    for dd, cc in cand:
+        oo = int(state.last_o[w, dd, cc])
+        if oo >= int(state.next_o_id[w, dd]) - ring:
+            d, c, o = int(dd), int(cc), oo
+    assert o is not None
+    slot = o % ring
+    keys, prows, tids, mask = eng.store.range_scan(
+        "orders_by_cust", w, tpcc._key_cust(w, d, c, 0),
+        tpcc._key_cust(w, d, c + 1, 0))
+    m = np.asarray(mask)
+    assert m.any(), "customer's retained orders are indexed"
+    got_keys = set(int(k) for k in np.asarray(keys)[m])
+    assert tpcc._key_cust(w, d, c, slot) in got_keys, \
+        "the latest order's index entry is in the scanned range"
+    i = list(np.asarray(keys)).index(tpcc._key_cust(w, d, c, slot))
+    assert int(np.asarray(prows)[i]) == cfg.off_orders + d * ring + slot, \
+        "scan resolves to the order's primary row"
+
+
+def test_full_mix_failure_revert_keeps_indexes_consistent():
+    cfg, state, eng, _ = _mk(2)
+    eng.run_epoch(tpcc.make_batch(cfg, state, 192, seed=400))
+    snap_keys = np.asarray(eng.store.indexes[0]["key"]).copy()
+    eng.inject_failure({1})
+    assert np.array_equal(np.asarray(eng.store.indexes[0]["key"]), snap_keys)
+    eng.run_epoch(tpcc.make_batch(cfg, state, 192, seed=401))
+    assert eng.replica_consistent()
