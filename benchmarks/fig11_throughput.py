@@ -22,11 +22,13 @@ from repro.baselines.cost_model import (dist_throughput, pb_occ_throughput,
 
 
 def measure_tpcc_mix(mix: str, n_txns: int = 512, epochs: int = 4,
-                     smoke: bool = False):
+                     smoke: bool = False, kernel: str = "jnp"):
     """Run the REAL engine over `mix` and return measured throughput rows.
 
     Wall clock covers the two device phases + fences (jit warm); throughput
     is committed transactions per second of engine time on this host.
+    ``kernel`` selects the executor dispatch: "jnp" (reference) or "pallas"
+    (fused OCC kernels — interpreted off-TPU, bit-identical results).
     """
     import numpy as np
     from repro.core.engine import StarEngine
@@ -41,35 +43,49 @@ def measure_tpcc_mix(mix: str, n_txns: int = 512, epochs: int = 4,
     rng = np.random.default_rng(0)
     init = tpcc.init_values(cfg, rng, state=state)
     eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
-                     indexes=tpcc.index_specs(cfg) if mix == "full" else None)
-    eng.run_epoch(tpcc.make_batch(cfg, state, n_txns, seed=1000))  # warm jit
+                     indexes=tpcc.index_specs(cfg) if mix == "full" else None,
+                     kernel=kernel)
+    wb = tpcc.make_batch(cfg, state, n_txns, seed=1000)
+    wm = eng.run_epoch(wb)                               # warm jit
+    if mix == "full":      # resolve the warm batch's Delivery claims too
+        tpcc.apply_consume_feedback(state, wb, wm)
     warm = eng.stats.part_time_s + eng.stats.sm_time_s   # exclude jit compile
+    warm_sm, warm_rounds = eng.stats.sm_time_s, eng.stats.sm_rounds
     t0 = time.perf_counter()
     committed = 0
     for ep in range(epochs):
-        m = eng.run_epoch(tpcc.make_batch(cfg, state, n_txns, seed=ep))
+        batch = tpcc.make_batch(cfg, state, n_txns, seed=ep)
+        m = eng.run_epoch(batch)
         committed += m["committed_single"] + m["committed_cross"]
+        if mix == "full":        # consume feedback: re-queue skipped districts
+            tpcc.apply_consume_feedback(state, batch, m)
     elapsed = eng.stats.part_time_s + eng.stats.sm_time_s - warm
     wall = time.perf_counter() - t0
     assert eng.replica_consistent(), "replica diverged under measurement"
     thr = committed / max(elapsed, 1e-9)
-    return [
-        (f"fig11/tpcc_measured_mix_{mix}_txn_s", 1e6 * wall / max(committed, 1),
+    tag = f"{mix}_{kernel}"
+    rows = [
+        (f"fig11/tpcc_measured_mix_{tag}_txn_s", 1e6 * wall / max(committed, 1),
          round(thr)),
-        (f"fig11/tpcc_measured_mix_{mix}_committed", 0.0, committed),
-        (f"fig11/tpcc_measured_mix_{mix}_consume_skips", 0.0,
+        (f"fig11/tpcc_measured_mix_{tag}_committed", 0.0, committed),
+        (f"fig11/tpcc_measured_mix_{tag}_consume_skips", 0.0,
          eng.stats.consume_skips),
     ]
+    if eng.stats.sm_rounds > warm_rounds:     # per-round OCC kernel time
+        rows.append((f"fig11/tpcc_measured_mix_{tag}_sm_round_us",
+                     1e6 * (eng.stats.sm_time_s - warm_sm)
+                     / (eng.stats.sm_rounds - warm_rounds), 0))
+    return rows
 
 
-def run(mix: str | None = None, smoke: bool = False):
+def run(mix: str | None = None, smoke: bool = False, kernel: str = "jnp"):
     rows = []
     if mix is not None:
         # measure the requested mix; "full" also measures the paper's
         # NewOrder+Payment mix alongside for direct comparison
-        rows += measure_tpcc_mix(mix, smoke=smoke)
+        rows += measure_tpcc_mix(mix, smoke=smoke, kernel=kernel)
         if mix == "full":
-            rows += measure_tpcc_mix("standard2", smoke=smoke)
+            rows += measure_tpcc_mix("standard2", smoke=smoke, kernel=kernel)
     if smoke:
         return rows
     n = 4
@@ -129,12 +145,16 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mix", choices=["full", "standard2"], default=None,
                     help="also MEASURE this TPC-C mix through the engine")
+    ap.add_argument("--kernel", choices=["jnp", "pallas"], default="jnp",
+                    help="executor dispatch for the measured mixes: jnp "
+                    "reference or the fused Pallas OCC kernels "
+                    "(interpret mode off-TPU; bit-identical)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny scale, measured rows only; fails the build "
                     "when throughput collapses (CI regression gate)")
     args = ap.parse_args()
     rows = run(mix=args.mix or ("full" if args.smoke else None),
-               smoke=args.smoke)
+               smoke=args.smoke, kernel=args.kernel)
     print("name,us_per_call,derived")
     emit(rows)
     if args.smoke:

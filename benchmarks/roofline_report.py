@@ -1,10 +1,34 @@
 """Roofline summary rows from the dry-run artifacts (EXPERIMENTS.md §Roofline
-reads the full JSONs; this emits the headline terms per cell)."""
+reads the full JSONs; this emits the headline terms per cell) plus the OCC
+round traffic model: bytes touched per single-master round for the jnp
+reference vs the fused Pallas layout (repro.kernels.occ.ops.occ_round_bytes)
+at paper-scale TPC-C shapes — the memory-bandwidth argument for the fusion."""
 import glob
 import json
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def occ_rows():
+    from repro.db import tpcc
+    from repro.kernels.occ.ops import occ_round_bytes
+    from repro.launch.roofline import HBM_BW
+
+    rows = []
+    for label, P, B in (("tpcc_p4_b128", 4, 128), ("tpcc_p16_b512", 16, 512)):
+        cfg = tpcc.TPCCConfig(n_partitions=P, mix="full")
+        caps = [s.capacity for s in tpcc.index_specs(cfg)]
+        bts = occ_round_bytes(B=B, M=tpcc.M, K=12, C=tpcc.C,
+                              n_rows=P * cfg.rows_per_partition,
+                              index_caps=caps, n_indexes_P=P)
+        for k in ("jnp", "pallas"):
+            rows.append((f"roofline/occ_round/{label}/{k}",
+                         bts[k] / HBM_BW * 1e6,          # us at v5e HBM bw
+                         f"{bts[k] / 1e6:.1f}MB"))
+        rows.append((f"roofline/occ_round/{label}/fusion_traffic_x", 0.0,
+                     round(bts["jnp"] / max(bts["pallas"], 1), 1)))
+    return rows
 
 
 def run():
@@ -19,4 +43,5 @@ def run():
         dom = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
         rows.append((f"roofline/{cell}/{ro['bottleneck']}", 0.0,
                      f"{dom * 1e3:.1f}ms useful={ro['useful_flops_ratio']:.2f}"))
+    rows += occ_rows()
     return rows

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import replication as repl
 from repro.core.partitioned import run_partitioned
 from repro.core.single_master import run_single_master
@@ -71,22 +72,20 @@ class ClusterStarEngine:
         pspec = P("part")
         txn_spec = {k: P("part") for k in
                     ("valid", "row", "kind", "delta", "user_abort")}
-        self._part = jax.jit(jax.shard_map(
-            part_phase, mesh=mesh,
+        self._part = jax.jit(shard_map(
+            part_phase, mesh,
             in_specs=(pspec, pspec, txn_spec, P()),
             out_specs=(pspec, pspec,
                        {k: P("part") for k in
                         ("row", "val", "tid", "write", "kind", "delta")},
-                       P("part")),
-            check_vma=False))
+                       P("part"))))
 
         def fence(commit_counts):
             # §4.3: nodes exchange commit statistics; the psum is the barrier
             return jax.lax.psum(commit_counts, "part")
 
-        self._fence = jax.jit(jax.shard_map(
-            fence, mesh=mesh, in_specs=(P("part"),), out_specs=P(),
-            check_vma=False))
+        self._fence = jax.jit(shard_map(
+            fence, mesh, in_specs=(P("part"),), out_specs=P()))
 
         # single-master phase runs on the replicated full copy (master's
         # view); jit with replicated shardings — no 2PC, no cross-device
@@ -109,10 +108,10 @@ class ClusterStarEngine:
                                         vals, tids)
             return v[None], t[None]
 
-        self._scatter = jax.jit(jax.shard_map(
-            scatter_back, mesh=mesh,
+        self._scatter = jax.jit(shard_map(
+            scatter_back, mesh,
             in_specs=(pspec, pspec, P(), P(), P()),
-            out_specs=(pspec, pspec), check_vma=False))
+            out_specs=(pspec, pspec)))
 
     # ------------------------------------------------------------------
     def run_epoch(self, batch) -> dict:

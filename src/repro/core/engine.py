@@ -44,6 +44,7 @@ class EngineStats:
     committed_cross: int = 0
     user_aborts: int = 0
     consume_skips: int = 0          # Delivery districts skipped (stale scan)
+    index_overflow: int = 0         # live index keys dropped at capacity
     retries: int = 0
     fences: int = 0
     value_bytes: int = 0
@@ -51,6 +52,7 @@ class EngineStats:
     value_bytes_if_not_hybrid: int = 0
     part_time_s: float = 0.0
     sm_time_s: float = 0.0
+    sm_rounds: int = 0              # OCC rounds executed (kernel launches)
     fence_time_s: float = 0.0
     fence_net_s: float = 0.0
 
@@ -61,9 +63,18 @@ class StarEngine:
                  max_rounds=16, cluster: ClusterConfig | None = None,
                  iteration_ms: float = 10.0,
                  indexes: list[IndexSpec] | None = None,
-                 net: Network | None = None, adaptive_epoch: bool = False):
+                 net: Network | None = None, adaptive_epoch: bool = False,
+                 kernel: str = "jnp", strict_index: bool = False):
+        """kernel: "jnp" (reference executors) or "pallas" (fused OCC
+        kernels, interpreted off-TPU) — bit-identical results either way.
+        strict_index: raise instead of counting when an ordered-index
+        segment overflows its capacity (silently dropping the largest key
+        otherwise — see storage.index.segment_apply)."""
         P, R, C = n_partitions, rows_per_partition, n_cols
         self.P, self.R, self.C = P, R, C
+        assert kernel in ("jnp", "pallas"), kernel
+        self.kernel = kernel
+        self.strict_index = strict_index
         self.store = StorageEngine(P, R, C, init_val=init_val,
                                    index_specs=indexes)
         self.replica_store = StorageEngine(P, R, C, init_val=init_val,
@@ -80,9 +91,11 @@ class StarEngine:
                                           adaptive=adaptive_epoch)
         self.net = net or Network()
         self.stats = EngineStats()
-        self._jit_part = jax.jit(run_partitioned, static_argnames=())
+        self._jit_part = jax.jit(run_partitioned,
+                                 static_argnames=("kernel",))
         self._jit_sm = jax.jit(run_single_master,
-                               static_argnames=("max_rounds", "deterministic"))
+                               static_argnames=("max_rounds", "deterministic",
+                                                "kernel"))
         self._jit_thomas = jax.jit(repl.thomas_apply_batch)
         self._jit_replay = jax.jit(repl.replay_partitioned)
         self._jit_replay_idx = jax.jit(repl.replay_index_rounds)
@@ -134,7 +147,7 @@ class StarEngine:
         t0 = time.perf_counter()
         val, tidw, part_out, pstats = self._jit_part(
             self.store.val, self.store.tid, ptxn, epoch_u,
-            self.part_seq, index)
+            self.part_seq, index, kernel=self.kernel)
         t_ingest = 0.0
         if ingest is not None:       # overlap host ingest with device exec
             ti = time.perf_counter()
@@ -192,7 +205,8 @@ class StarEngine:
             fval, ftid, sm_out, sstats = self._jit_sm(
                 flat_val, flat_tid, cross, epoch_u + jnp.uint32(0),
                 max_rounds=self.max_rounds,
-                index=self.store.indexes if self.has_index else None)
+                index=self.store.indexes if self.has_index else None,
+                kernel=self.kernel)
             jax.block_until_ready(fval)
             self.store.val = fval.reshape(self.P, self.R, self.C)
             self.store.tid = ftid.reshape(self.P, self.R)
@@ -214,6 +228,9 @@ class StarEngine:
                       "user_aborts": jnp.int32(0), "starved": jnp.int32(0),
                       "writes": jnp.int32(0)}
         t_sm = time.perf_counter() - t0
+        # per-round kernel time: the single-master phase is max_rounds
+        # identical fused-round launches (one per OCC round)
+        t_sm_round = t_sm / self.max_rounds if B > 0 else 0.0
 
         # ---- byte accounting, single-master value stream ----------------
         if B > 0:
@@ -247,9 +264,17 @@ class StarEngine:
         s.user_aborts += int(pstats["user_aborts"]) + int(sstats["user_aborts"])
         s.consume_skips += int(pstats.get("consume_skips", 0)) \
             + int(sstats.get("consume_skips", 0))
+        overflow = int(pstats.get("index_overflow", 0)) \
+            + int(sstats.get("index_overflow", 0))
+        s.index_overflow += overflow
+        if self.strict_index and overflow:
+            raise RuntimeError(
+                f"ordered-index segment overflow: {overflow} live keys "
+                f"dropped this epoch (IndexSpec capacity too small)")
         s.retries += int(sstats["retries"])
         s.part_time_s += t_part
         s.sm_time_s += t_sm
+        s.sm_rounds += self.max_rounds if B > 0 else 0
         s.fence_time_s += t_f1 + t_f2
         s.value_bytes += vb
         s.op_bytes_hybrid += ob if self.hybrid else vb_alt
@@ -259,14 +284,23 @@ class StarEngine:
         p_committed = np.asarray(part_out["committed"])          # (P, T_pad)
         c_committed = (np.asarray(sm_out["committed"]) if B > 0
                        else np.zeros(B, bool))                   # (B_pad,)
-        return {"committed_single": ns, "committed_cross": nc,
-                "tau_p_ms": tau_p, "tau_s_ms": tau_s,
-                "t_part_s": t_part, "t_sm_s": t_sm,
-                "t_ingest_s": t_ingest,
-                "t_fence1_s": t_fence1, "t_fence2_s": t_fence2,
-                "t_fence_net_s": t_net1 + t_net2,
-                "p_committed": p_committed, "c_committed": c_committed,
-                "starved": int(sstats["starved"])}
+        m = {"committed_single": ns, "committed_cross": nc,
+             "tau_p_ms": tau_p, "tau_s_ms": tau_s,
+             "t_part_s": t_part, "t_sm_s": t_sm,
+             "t_sm_round_s": t_sm_round,
+             "t_ingest_s": t_ingest,
+             "t_fence1_s": t_fence1, "t_fence2_s": t_fence2,
+             "t_fence_net_s": t_net1 + t_net2,
+             "p_committed": p_committed, "c_committed": c_committed,
+             "index_overflow": overflow,
+             "starved": int(sstats["starved"])}
+        if self.has_index:
+            # which consume ops were skipped on EXPECT mismatch — the host
+            # mirror (tpcc.apply_consume_feedback) re-queues these districts
+            m["p_cskip"] = np.asarray(part_out["log"]["cskip"])  # (P,T,K)
+            m["c_cskip"] = (np.asarray(sm_out["log"]["cskip"]).any(0)
+                            if B > 0 else None)                  # (B_pad,K)
+        return m
 
     # ------------------------------------------------------------------
     def _fence(self, stream_bytes: int = 0) -> float:

@@ -32,6 +32,7 @@ replays through ``storage.index.apply_index_ops`` on both sides.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 READ, SET, ADD, APPEND, STOCK_DECR, PAY_CUST = 0, 1, 2, 3, 4, 5
 SCAN_READ, SCAN_CONSUME, INSERT_IDX, DELETE_IDX = 6, 7, 8, 9
@@ -63,7 +64,8 @@ GUARD_COL = 9
 
 
 def hash_combine(h, x):
-    return (h * jnp.int32(1000003) + x) & jnp.int32(0x7FFFFFFF)
+    # numpy scalar constants trace as literals (Pallas-kernel-safe)
+    return (h * np.int32(1000003) + x) & np.int32(0x7FFFFFFF)
 
 
 def apply_op(kind, old, delta):

@@ -8,12 +8,14 @@ concurrent accesses within a partition (§4.1) — but TIDs are still generated
 and written records tagged, so replication and the Thomas write rule work.
 
 Ordered-index ops execute serially too: scans resolve by ``searchsorted``
-against the partition's own index segments; a SCAN_CONSUME whose first live
-key differs from the host-declared EXPECT key skips its op group (its own
-delete/tombstone plus every op guarded by it — TPC-C Delivery's "skip the
-district" semantics, counted in ``consume_skips``) while the rest of the
-transaction commits — the optimistic host-side sequencing validated
-on-device.
+against the partition's own index segments (``kernel="pallas"`` dispatches
+the probe to the fused scan-window kernel of ``repro.kernels.occ``); a
+SCAN_CONSUME whose first live key differs from the host-declared EXPECT key
+skips its op group (its own delete/tombstone plus every op guarded by it —
+TPC-C Delivery's "skip the district" semantics, counted in
+``consume_skips`` and logged per-op in ``log["cskip"]`` so the host mirror
+can re-queue the district) while the rest of the transaction commits — the
+optimistic host-side sequencing validated on-device.
 
 The executor returns the per-partition ordered write log: the operation-
 replication stream (§5) replays it in order on replicas — index maintenance
@@ -25,40 +27,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tid as tidlib
-from repro.core.ops import (IDX_OPS, IX_EXPECT, IX_HI, IX_ID, IX_LO,
-                            SCAN_CONSUME, apply_op, resolve_op_guards,
-                            writes_index, writes_primary)
-from repro.storage.index import SENTINEL, apply_index_ops
+from repro.core.ops import (IDX_OPS, SCAN_CONSUME, apply_op,
+                            resolve_op_guards, writes_index, writes_primary)
+from repro.storage.index import apply_index_ops
 
 
-def _step_index_ops(index, kinds, delta):
-    """Per-partition searchsorted resolution of one queue slot's index ops.
-
-    kinds: (P, K); delta: (P, K, C).  Returns (consume_ok (P, K),
-    slot_tid (P, K)) — the TID of each op's position slot (criterion a).
-    """
-    lo = delta[..., IX_LO]
-    hi = delta[..., IX_HI]
-    iid = delta[..., IX_ID]
-    P, K = kinds.shape
-    consume_ok = jnp.ones((P, K), bool)
-    slot_tid = jnp.zeros((P, K), jnp.uint32)
-    ss = jax.vmap(lambda seg, ks: jax.vmap(
-        lambda k: jnp.searchsorted(seg, k))(ks))
-    for i, idx in enumerate(index):
-        cap = idx["key"].shape[1]
-        pos0 = jnp.clip(ss(idx["key"], lo), 0, cap - 1)        # (P, K)
-        first_key = jnp.take_along_axis(idx["key"], pos0, axis=1)
-        t_at = jnp.take_along_axis(idx["tid"], pos0, axis=1)
-        mine = iid == i
-        ok = (first_key == delta[..., IX_EXPECT]) & (first_key < hi) \
-            & (first_key != SENTINEL)
-        consume_ok = jnp.where(mine & (kinds == SCAN_CONSUME), ok, consume_ok)
-        slot_tid = jnp.where(mine, t_at, slot_tid)
-    return consume_ok, slot_tid
-
-
-def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None):
+def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None,
+                    kernel: str = "jnp", interpret=None):
     """val: (P, R, C) int32; tidw: (P, R) uint32.
 
     ptxn: {'valid': (P,T) bool, 'row': (P,T,M) int32 (partition-local flat
@@ -69,10 +44,17 @@ def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None):
     (P, cap_i) — enables the SCAN_*/INSERT_IDX/DELETE_IDX op kinds (which
     occupy op slots [0, IDX_OPS)).
 
+    kernel: "jnp" (reference) or "pallas" (fused index probe).
+
     Returns (val', tid', log, stats).  log holds every op slot's post-image
     (P,T,M,...) with a write mask — the replication stream (plus the
     per-slot "iwrite" index-maintenance mask when an index is attached).
     """
+    # deferred: importing repro.kernels.occ.ops runs repro.core.ops, whose
+    # PACKAGE init (repro/core/__init__.py) imports engine -> this module —
+    # a module-level import here breaks `import repro.kernels.occ.ops`
+    from repro.kernels.occ.ops import step_index_ops
+
     P, T, M = ptxn["row"].shape
     K = min(IDX_OPS, M)
     if index is not None:
@@ -81,7 +63,7 @@ def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None):
     seq = seq0 if seq0 is not None else jnp.zeros((P,), jnp.uint32)
 
     def step(carry, slot):
-        val, tidw, seq, index = carry
+        val, tidw, seq, index, overflow = carry
         rows, kind, delta = slot["row"], slot["kind"], slot["delta"]   # (P,M)…
         valid = slot["valid"] & ~slot["user_abort"]                    # (P,)
 
@@ -92,8 +74,9 @@ def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None):
         new = apply_op(kind, old, delta_v)
         wmask = writes_primary(kind) & valid[:, None]                  # (P,M)
         if index is not None:
-            consume_ok, slot_tid = _step_index_ops(
-                index, kind[:, :K], delta[:, :K])
+            consume_ok, slot_tid = step_index_ops(
+                index, kind[:, :K], delta[:, :K], kernel=kernel,
+                interpret=interpret)
             # op groups: a failed consume skips its district's guarded
             # updates and its own delete/tombstone; the txn still commits
             wmask, iwrite_ok = resolve_op_guards(kind, delta, consume_ok,
@@ -125,17 +108,21 @@ def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None):
         skips = jnp.int32(0)
         if index is not None:
             iw = writes_index(kind[:, :K]) & valid[:, None] & iwrite_ok  # (P,K)
-            index = apply_index_ops(
+            index, ov = apply_index_ops(
                 index, kind[:, :K], delta[:, :K], iw,
                 jnp.broadcast_to(new_tid[:, None], (P, K)))
+            overflow = overflow + ov
             log["iwrite"] = iw
-            skips = jnp.sum((kind[:, :K] == SCAN_CONSUME) & ~consume_ok
-                            & valid[:, None])
-        return (val, tidw, seq, index), (log, valid, skips)
+            # per-op skipped-consume mask — the consume-feedback stream the
+            # host mirror uses to re-queue skipped Delivery districts
+            log["cskip"] = (kind[:, :K] == SCAN_CONSUME) & ~consume_ok \
+                & valid[:, None]
+            skips = jnp.sum(log["cskip"])
+        return (val, tidw, seq, index, overflow), (log, valid, skips)
 
     slots = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), ptxn)        # (T,P,…)
-    (val, tidw, seq, index), (log, committed, skips) = jax.lax.scan(
-        step, (val, tidw, seq, index), slots)
+    (val, tidw, seq, index, overflow), (log, committed, skips) = jax.lax.scan(
+        step, (val, tidw, seq, index, jnp.int32(0)), slots)
     log = jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1), log)           # (P,T,…)
     committed = jnp.moveaxis(committed, 0, 1)                          # (P,T)
     stats = {
@@ -143,6 +130,7 @@ def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None):
         "user_aborts": jnp.sum(ptxn["valid"] & ptxn["user_abort"]),
         "consume_skips": jnp.sum(skips),
         "writes": jnp.sum(log["write"]),
+        "index_overflow": overflow,
     }
     out = {"log": log, "committed": committed}
     if index is not None:

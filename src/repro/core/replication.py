@@ -108,7 +108,9 @@ def replay_partitioned(val, tidw, log, index=None):
 
         val, tidw = jax.vmap(commit)(val, tidw, rows_w, new, slot["tid"])
         if index is not None:
-            index = apply_index_ops(
+            # overflow is identical to the master's (same batches) — the
+            # executors already counted it
+            index, _ = apply_index_ops(
                 index, slot["kind"][:, :K], slot["delta"][:, :K],
                 slot["iwrite"], slot["tid"][:, :K])
         return (val, tidw, index), None
@@ -134,7 +136,7 @@ def replay_index_rounds(index, kinds, delta, iwrite, tids):
     def step(index, per_round):
         iw, tid_r = per_round
         return apply_index_ops(index, kinds[:, :K], delta[:, :K], iw,
-                               tid_r[:, :K]), None
+                               tid_r[:, :K])[0], None
 
     index, _ = jax.lax.scan(step, index, (iwrite, tids))
     return index

@@ -22,6 +22,13 @@ of Silo worker threads).  Rounds proceed over a shared snapshot:
               post-images + TIDs, and merge their index maintenance
               (inserts/deletes/consumes) via storage.index.apply_index_ops.
 
+The round body itself lives in ``repro.kernels.occ``: ``kernel="jnp"`` runs
+the reference jnp implementation (ref.py, the parity oracle — the code that
+used to be inline here), ``kernel="pallas"`` runs the fused Pallas kernels
+(one launch per round for lock/validate/install, plus the fused
+searchsorted+window probe) — bit-identical by the parity suite, interpreted
+on CPU.
+
 With ``deterministic=True`` the same machinery becomes the Calvin baseline:
 lock-order is the pre-assigned global order and read validation is skipped
 (deterministic execution never aborts; §7.3).
@@ -31,85 +38,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import tid as tidlib
-from repro.core.ops import (IDX_OPS, IX_EXPECT, IX_HI, IX_ID, IX_LO,
-                            SCAN_CONSUME, apply_op, is_index_kind,
-                            reads_index, resolve_op_guards, writes_index,
-                            writes_primary)
-from repro.storage.index import SCAN_L, SENTINEL, apply_index_ops, \
-    key_partition
-
-
-def _locate_index_ops(index, kinds, delta, n_rows):
-    """Resolve index/scan ops of one round against the current index state.
-
-    kinds: (B, K) int32; delta: (B, K, C).  Returns per-op claim addresses,
-    scan-window addresses/validity, gathered TIDs and the first in-range key
-    (consume validation), all in the flat row+index address space
-    [0, n_rows + sum(P * cap_i)) with `no_addr` = the dump slot.
-    """
-    B, K = kinds.shape
-    P = index[0]["key"].shape[0]
-    caps = [idx["key"].shape[1] for idx in index]
-    no_addr = n_rows + sum(P * c for c in caps)
-
-    lo = delta[..., IX_LO]                                     # (B, K)
-    hi = delta[..., IX_HI]
-    iid = delta[..., IX_ID]
-    p_of = jnp.clip(key_partition(lo), 0, P - 1)
-
-    is_idx = is_index_kind(kinds)
-    claim_addr = jnp.full((B, K), no_addr, jnp.int32)
-    claim_tid = jnp.zeros((B, K), jnp.uint32)
-    scan_addr = jnp.full((B, K, SCAN_L + 1), no_addr, jnp.int32)
-    scan_tid = jnp.zeros((B, K, SCAN_L + 1), jnp.uint32)
-    scan_valid = jnp.zeros((B, K, SCAN_L + 1), bool)
-    first_key = jnp.full((B, K), SENTINEL, jnp.int32)
-
-    base = n_rows
-    ss = jax.vmap(jax.vmap(jnp.searchsorted))
-    for i, idx in enumerate(index):
-        cap = caps[i]
-        mine = is_idx & (iid == i)
-        p_g = jnp.where(mine, p_of, 0)
-        segk = idx["key"][p_g]                                 # (B, K, cap)
-        segt = idx["tid"][p_g]
-        pos0 = ss(segk, lo)                                    # (B, K)
-        window = pos0[..., None] + jnp.arange(SCAN_L + 1, dtype=jnp.int32)
-        slots = jnp.clip(window, 0, cap - 1)
-        keys_at = jnp.take_along_axis(segk, slots, axis=-1)    # (B, K, L+1)
-        tids_at = jnp.take_along_axis(segt, slots, axis=-1)
-        addr0 = base + p_of * cap
-        # claim the position slot (insert/delete/consume): next-key locking
-        cmask = mine & writes_index(kinds)
-        cpos = jnp.clip(pos0, 0, cap - 1)
-        claim_addr = jnp.where(cmask, addr0 + cpos, claim_addr)
-        claim_tid = jnp.where(
-            cmask, jnp.take_along_axis(segt, cpos[..., None], -1)[..., 0],
-            claim_tid)
-        # scan read set: in-range slots + exactly one boundary slot
-        smask = mine & reads_index(kinds)
-        in_or_boundary = jnp.concatenate(
-            [jnp.ones((B, K, 1), bool), keys_at[..., :-1] < hi[..., None]],
-            axis=-1) & (window < cap)
-        sv = smask[..., None] & in_or_boundary
-        scan_addr = jnp.where(sv, addr0[..., None] + slots, scan_addr)
-        scan_tid = jnp.where(sv, tids_at, scan_tid)
-        scan_valid = scan_valid | sv
-        first_key = jnp.where(mine, keys_at[..., 0], first_key)
-        base += P * cap
-
-    consume_ok = (first_key == delta[..., IX_EXPECT]) & (first_key < hi) \
-        & (first_key != SENTINEL)
-    return {"claim_addr": claim_addr, "claim_tid": claim_tid,
-            "scan_addr": scan_addr, "scan_tid": scan_tid,
-            "scan_valid": scan_valid, "consume_ok": consume_ok,
-            "no_addr": no_addr}
+from repro.core.ops import (IDX_OPS, SCAN_CONSUME, is_index_kind,
+                            resolve_op_guards, writes_index, writes_primary)
+from repro.storage.index import apply_index_ops
 
 
 def run_single_master(val, tidw, txns, epoch, max_rounds: int = 16,
                       deterministic: bool = False, last_tid0=None,
-                      index=None):
+                      index=None, kernel: str = "jnp", interpret=None):
     """val: (N, C) int32 (master's flat view over ALL partitions);
     tidw: (N,) uint32.
 
@@ -120,43 +56,44 @@ def run_single_master(val, tidw, txns, epoch, max_rounds: int = 16,
     (P, cap_i) — enables SCAN_*/INSERT_IDX/DELETE_IDX op kinds (which must
     occupy op slots [0, IDX_OPS)).  Index maintenance is logged per round
     ("iwrite" mask) for the replica's ordered index-op replay.
+
+    kernel: "jnp" (reference) or "pallas" (fused kernels, interpreted when
+    not on TPU).
     """
+    # deferred: importing repro.kernels.occ.ops runs repro.core.ops, whose
+    # PACKAGE init (repro/core/__init__.py) imports engine -> this module —
+    # a module-level import here breaks `import repro.kernels.occ.ops`
+    from repro.kernels.occ.ops import locate_index_ops, occ_round
+
     N, C = val.shape
     B, M = txns["row"].shape
     K = min(IDX_OPS, M)
-    lanes = jnp.arange(B, dtype=jnp.int32)
-    SENTINEL_LANE = jnp.int32(B)
 
     if index is not None:
-        P = index[0]["key"].shape[0]
-        NT = N + sum(P * idx["key"].shape[1] for idx in index)
         assert C > 4, "index ops need IX_* param columns + a free guard col"
-    else:
-        NT = N
 
     runnable = txns["valid"] & ~txns["user_abort"]
     last_tid = last_tid0 if last_tid0 is not None else jnp.zeros((B,), jnp.uint32)
 
     def round_fn(state, round_idx):
         (val, tidw, index, committed, last_tid, retries, committed_round,
-         skipped) = state
+         skipped, overflow) = state
         active = runnable & ~committed                                  # (B,)
         rows, kind, delta = txns["row"], txns["kind"], txns["delta"]
 
-        old = val[rows]                                                 # (B,M,C)
-        rtids = tidw[rows]                                              # (B,M)
         # index-enabled workloads own the last delta column (op guards) —
         # it is metadata, never part of the applied value
         delta_v = delta.at[..., -1].set(0) if index is not None else delta
-        new = apply_op(kind, old, delta_v)
         wmask = writes_primary(kind) & active[:, None]                  # (B,M)
         # pure index ops carry no meaningful primary row — exclude them from
         # the primary read/validation set (consume's row IS its write target)
         prim_live = (kind >= 0) & (~is_index_kind(kind) | (kind == SCAN_CONSUME))
         amask = active[:, None] & prim_live                             # (B,M)
 
+        ix = has_claim = None
         if index is not None:
-            ix = _locate_index_ops(index, kind[:, :K], delta[:, :K], N)
+            ix = locate_index_ops(index, kind[:, :K], delta[:, :K], N,
+                                  kernel=kernel, interpret=interpret)
             has_claim = (ix["claim_addr"] < ix["no_addr"]) & active[:, None]
             # op groups: a guarded op applies only if its consume validated;
             # a failed consume skips its own delete/tombstone too (TPC-C
@@ -164,84 +101,26 @@ def run_single_master(val, tidw, txns, epoch, max_rounds: int = 16,
             wmask, iwrite_ok = resolve_op_guards(kind, delta,
                                                  ix["consume_ok"], wmask)
             iwrite = writes_index(kind[:, :K]) & active[:, None] & iwrite_ok
-        # --- lock acquisition: scatter-min lane id over claimed rows/slots
-        claim_lane = jnp.where(wmask, lanes[:, None], SENTINEL_LANE)
-        lock = jnp.full((NT + 1,), SENTINEL_LANE, jnp.int32)
-        lock = lock.at[jnp.where(wmask, rows, NT)].min(claim_lane)
-        if index is not None:
-            lock = lock.at[jnp.where(has_claim, ix["claim_addr"], NT)].min(
-                jnp.where(has_claim, lanes[:, None], SENTINEL_LANE))
-        holder = lock[rows]                                             # (B,M)
 
-        wins_all = jnp.all(jnp.where(wmask, holder == lanes[:, None], True), axis=1)
-        if index is not None:
-            hold_ic = lock[ix["claim_addr"]]                            # (B,K)
-            wins_all &= jnp.all(
-                jnp.where(has_claim, hold_ic == lanes[:, None], True), axis=1)
-        if deterministic:
-            # Calvin: deterministic order, no read validation; a txn runs when
-            # it holds all its locks (reads included) in global order
-            rlock = jnp.full((NT + 1,), SENTINEL_LANE, jnp.int32)
-            rlock = rlock.at[jnp.where(amask, rows, NT)].min(
-                jnp.where(amask, lanes[:, None], SENTINEL_LANE))
-            if index is not None:
-                sa = jnp.where(ix["scan_valid"] & active[:, None, None],
-                               ix["scan_addr"], NT)
-                rlock = rlock.at[sa].min(
-                    jnp.where(sa < NT, lanes[:, None, None], SENTINEL_LANE))
-                rlock = rlock.at[jnp.where(has_claim, ix["claim_addr"], NT)
-                                 ].min(jnp.where(has_claim, lanes[:, None],
-                                                 SENTINEL_LANE))
-            holder_any = rlock[rows]
-            commit_now = active & jnp.all(
-                jnp.where(amask, holder_any == lanes[:, None], True), axis=1)
-            if index is not None:
-                commit_now &= jnp.all(jnp.where(
-                    ix["scan_valid"] & active[:, None, None],
-                    rlock[ix["scan_addr"]] == lanes[:, None, None], True),
-                    axis=(1, 2))
-                commit_now &= jnp.all(jnp.where(
-                    has_claim, rlock[ix["claim_addr"]] == lanes[:, None],
-                    True), axis=1)
-        else:
-            # Silo validation: abort if an earlier lane writes anything I
-            # read — rows AND scanned index slots (phantom protection)
-            dirty = holder < lanes[:, None]                             # (B,M)
-            read_ok = jnp.all(~(amask & dirty), axis=1)
-            if index is not None:
-                sdirty = ix["scan_valid"] & active[:, None, None] \
-                    & (lock[ix["scan_addr"]] < lanes[:, None, None])
-                read_ok &= ~jnp.any(sdirty, axis=(1, 2))
-            commit_now = active & wins_all & read_ok
-
-        # --- TID generation (criteria a, b, c)
-        obs = jnp.max(jnp.where(amask, rtids, jnp.uint32(0)), axis=1)
-        if index is not None:
-            obs = jnp.maximum(obs, jnp.max(
-                jnp.where(ix["scan_valid"], ix["scan_tid"], jnp.uint32(0)),
-                axis=(1, 2)))
-            obs = jnp.maximum(obs, jnp.max(
-                jnp.where(has_claim, ix["claim_tid"], jnp.uint32(0)), axis=1))
-        new_tid = tidlib.next_tid(epoch, obs, last_tid)                 # (B,)
-
-        # --- install: winners only (unique per row by construction)
-        w = wmask & commit_now[:, None]
-        wrows = jnp.where(w, rows, N)
-        val_pad = jnp.concatenate([val, jnp.zeros((1, C), val.dtype)], 0)
-        val = val_pad.at[wrows.reshape(-1)].set(
-            new.reshape(-1, C))[:N]
-        tid_pad = jnp.concatenate([tidw, jnp.zeros((1,), tidw.dtype)], 0)
-        tidw = tid_pad.at[wrows.reshape(-1)].set(
-            jnp.broadcast_to(new_tid[:, None], (B, M)).reshape(-1))[:N]
+        # --- fused round: gather → lock → validate → TID → install ------
+        val, tidw, commit_now, new_tid, new, w = occ_round(
+            val, tidw, rows, kind, delta_v, wmask, amask, active, epoch,
+            last_tid, ix=ix, has_claim=has_claim,
+            deterministic=deterministic, kernel=kernel, interpret=interpret)
 
         log = {"row": jnp.where(w, rows, -1), "val": new,
                "tid": jnp.broadcast_to(new_tid[:, None], (B, M)), "write": w}
         if index is not None:
             iw = iwrite & commit_now[:, None]                           # (B,K)
-            index = apply_index_ops(
+            index, ov = apply_index_ops(
                 index, kind[:, :K], delta[:, :K], iw,
                 jnp.broadcast_to(new_tid[:, None], (B, K)))
+            overflow = overflow + ov
             log["iwrite"] = iw
+            # which consume ops a COMMITTED txn skipped this round — the
+            # host mirror re-queues these districts (consume feedback)
+            log["cskip"] = (kind[:, :K] == SCAN_CONSUME) \
+                & ~ix["consume_ok"] & commit_now[:, None]
 
         committed_round = jnp.where(commit_now & ~committed, round_idx,
                                     committed_round)
@@ -249,19 +128,17 @@ def run_single_master(val, tidw, txns, epoch, max_rounds: int = 16,
         last_tid = jnp.where(commit_now, new_tid, last_tid)
         retries = retries + jnp.sum(active & ~commit_now)
         if index is not None:
-            skipped = skipped + jnp.sum(
-                (kind[:, :K] == SCAN_CONSUME) & ~ix["consume_ok"]
-                & commit_now[:, None])
+            skipped = skipped + jnp.sum(log["cskip"])
         return (val, tidw, index, committed, last_tid, retries,
-                committed_round, skipped), log
+                committed_round, skipped, overflow), log
 
     committed0 = jnp.zeros((B,), bool)
     cround0 = jnp.full((B,), -1, jnp.int32)
     (val, tidw, index, committed, last_tid, retries, committed_round,
-     skipped), logs = jax.lax.scan(
+     skipped, overflow), logs = jax.lax.scan(
         round_fn,
         (val, tidw, index, committed0, last_tid, jnp.int32(0), cround0,
-         jnp.int32(0)),
+         jnp.int32(0), jnp.int32(0)),
         jnp.arange(max_rounds, dtype=jnp.int32))
 
     stats = {
@@ -271,6 +148,7 @@ def run_single_master(val, tidw, txns, epoch, max_rounds: int = 16,
         "retries": retries,
         "writes": jnp.sum(logs["write"]),
         "consume_skips": skipped,
+        "index_overflow": overflow,
     }
     # logs stacked over rounds: (rounds, B, M, …) — replication consumes the
     # flattened committed-write stream (Thomas rule makes order irrelevant);

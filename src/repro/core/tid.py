@@ -14,14 +14,18 @@ rule needs.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 EPOCH_BITS = 8
 SEQ_BITS = 23
-LOCK_MASK = jnp.uint32(1)
+# numpy scalars (not jnp arrays): they trace as literals, so this module's
+# functions can run inside Pallas kernel bodies (which reject captured
+# device-array constants) — bit-identical arithmetic either way
+LOCK_MASK = np.uint32(1)
 SEQ_SHIFT = 1
 EPOCH_SHIFT = 1 + SEQ_BITS
-SEQ_MASK = jnp.uint32((1 << SEQ_BITS) - 1)
-EPOCH_MASK = jnp.uint32((1 << EPOCH_BITS) - 1)
+SEQ_MASK = np.uint32((1 << SEQ_BITS) - 1)
+EPOCH_MASK = np.uint32((1 << EPOCH_BITS) - 1)
 
 
 def make_tid(epoch, seq, locked=False):
@@ -59,8 +63,8 @@ def next_tid(epoch, observed_max_tid, last_tid):
 
     def seq_in_epoch(t):
         t = tid_unlock(t)
-        return jnp.where(tid_epoch(t) == e, tid_seq(t), jnp.uint32(0))
+        return jnp.where(tid_epoch(t) == e, tid_seq(t), np.uint32(0))
 
     seq = jnp.maximum(seq_in_epoch(observed_max_tid),
-                      seq_in_epoch(last_tid)) + jnp.uint32(1)
+                      seq_in_epoch(last_tid)) + np.uint32(1)
     return make_tid(e, seq)

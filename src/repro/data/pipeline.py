@@ -43,12 +43,37 @@ def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
     return {k: jax.ShapeDtypeStruct(shape, dtype) for k, (shape, dtype) in tree.items()}
 
 
+# affine next-token map: t_{i+1} = (A*t_i + C) mod vocab.  A learnable
+# language — the conditional distribution is a deterministic function of the
+# current token — so train losses genuinely decrease below ln(vocab); i.i.d.
+# uniform tokens (the previous stream) carry zero learnable signal and pin
+# cross-entropy at chance level.
+_AFF_A, _AFF_C = 31, 17
+
+
+def _affine_chain(rng, batch: int, length: int, vocab: int):
+    """(batch, length) token chains + the (batch, length) next-token labels."""
+    toks = np.empty((batch, length + 1), np.int64)
+    toks[:, 0] = rng.integers(0, vocab, batch)
+    for i in range(length):
+        toks[:, i + 1] = (_AFF_A * toks[:, i] + _AFF_C) % vocab
+    return toks[:, :length].astype(np.int32), toks[:, 1:].astype(np.int32)
+
+
 def make_batch(cfg: ArchConfig, kind: str, seq_len: int, batch: int,
                seed: int = 0) -> dict:
     tree = _batch_tree(cfg, kind, seq_len, batch)
     rng = np.random.default_rng(seed)
     out = {}
+    if "tokens" in tree:
+        toks, labels = _affine_chain(rng, tree["tokens"][0][0],
+                                     tree["tokens"][0][1], cfg.vocab_size)
+        out["tokens"] = jnp.asarray(toks)
+        if "labels" in tree:
+            out["labels"] = jnp.asarray(labels)
     for k, (shape, dtype) in tree.items():
+        if k in out:
+            continue
         if dtype == jnp.int32:
             out[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, shape), jnp.int32)
         else:

@@ -125,9 +125,15 @@ class TPCCConfig:
 
     @property
     def index_capacity(self):
-        """Slots per partition per index: every retained order can hold one
-        entry in each index, plus headroom for undelivered backlog."""
-        return 2 * N_DIST * self.order_ring
+        """Slots per partition per index: every retained order holds at most
+        one entry in each index (eviction deletes ride the evicting
+        NewOrder, and user-aborted NewOrders no longer draw an o_id, so
+        they leak nothing).  The small headroom covers the one remaining
+        leak source: a starved cross-partition NewOrder whose eviction
+        delete never applied (offline only — the service re-queues starved
+        lanes).  Was 2x before the abort-leak fix."""
+        return N_DIST * self.order_ring \
+            + max(N_DIST * self.order_ring // 8, 2 * N_DIST)
 
 
 def index_specs(cfg: TPCCConfig) -> list[IndexSpec]:
@@ -185,6 +191,9 @@ class TPCCState:
             self.batch_floor = 0       # txn_gen at the current batch's start
             self.pushed_amount = 0     # ledger: Σ amounts of queued orders
             self.evicted_amount = 0    # ledger: Σ amounts evicted undelivered
+            # Delivery's optimistic pops, keyed by the consume's EXPECT key —
+            # resolved by apply_consume_feedback (delivered vs re-queued)
+            self.pending_claims = {}
 
 
 def init_values(cfg: TPCCConfig, rng: np.random.Generator,
@@ -333,7 +342,15 @@ def _idx_op(kinds, deltas, tables, slot, kind, iid, key, hi_or_prow=0,
 
 def _new_order_full(cfg, state, rng, w):
     """NewOrder with index maintenance: inserts into all three indexes and
-    evicts the retained order that its ring slot overwrites."""
+    evicts the retained order that its ring slot overwrites.
+
+    A user-aborted NewOrder executes NOTHING on device — so it must not
+    consume an o_id or carry index maintenance: its eviction DELETE_IDX ops
+    would be dropped with it, leaking stale entries (the former DESIGN.md
+    "known long-tail desync (a)").  The abort flag is drawn at generation
+    time, so the draw is unwound right here and the next NewOrder of the
+    district re-uses the o_id; the mirror, the device and the indexes all
+    agree that the aborted order never existed."""
     parts, rows, kinds, deltas, is_cross, abort, tables = _new_order(
         cfg, state, rng, w)
     # _new_order laid primary ops into slots 0..49; shift them up by IDX_OPS
@@ -354,6 +371,10 @@ def _new_order_full(cfg, state, rng, w):
     ring = cfg.order_ring
     d_id = int(rows[IDX_OPS + 1] - cfg.off_district)
     o_id = int(state.next_o_id[w, d_id]) - 1      # _new_order just drew it
+    if abort:
+        state.next_o_id[w, d_id] = o_id           # unwind the draw: the
+        return parts, rows, kinds, deltas, is_cross, abort, tables  # aborted
+        # order never existed — no index ops, no eviction, no mirror entry
     slot = o_id % ring
     c_id = int(rows[IDX_OPS + 2] - cfg.off_customer
                - d_id * cfg.cust_per_district)
@@ -397,19 +418,19 @@ def _new_order_full(cfg, state, rng, w):
             _idx_op(kinds, deltas, tables, 5, DELETE_IDX, CUST_IDX,
                     _key_cust(w, d_id, ev_c, slot))
 
-    if not abort:                       # host mirror follows the prediction
-        q = state.undelivered[w][d_id]
-        if q and q[0][0] == evicted:    # evicting a still-undelivered order
-            state.evicted_amount += q.pop(0)[2]
-        state.undelivered[w][d_id].append(
-            (o_id, c_id, amount, state.txn_gen, is_cross))
-        state.pushed_amount += amount
-        state.last_o[w, d_id, c_id] = o_id
-        state.ring_cust[w, d_id, slot] = c_id
-        state.ring_olcnt[w, d_id, slot] = n_lines
-        state.ring_items[w, d_id, slot, :] = -1
-        state.ring_items[w, d_id, slot, :n_lines] = items[:n_lines]
-        state.ring_qty[w, d_id, slot, :n_lines] = qtys[:n_lines]
+    # host mirror follows the prediction (aborts returned early above)
+    q = state.undelivered[w][d_id]
+    if q and q[0][0] == evicted:        # evicting a still-undelivered order
+        state.evicted_amount += q.pop(0)[2]
+    state.undelivered[w][d_id].append(
+        (o_id, c_id, amount, state.txn_gen, is_cross))
+    state.pushed_amount += amount
+    state.last_o[w, d_id, c_id] = o_id
+    state.ring_cust[w, d_id, slot] = c_id
+    state.ring_olcnt[w, d_id, slot] = n_lines
+    state.ring_items[w, d_id, slot, :] = -1
+    state.ring_items[w, d_id, slot, :n_lines] = items[:n_lines]
+    state.ring_qty[w, d_id, slot, :n_lines] = qtys[:n_lines]
     return parts, rows, kinds, deltas, is_cross, abort, tables
 
 
@@ -458,9 +479,22 @@ def _delivery(cfg, state, rng, w):
             # safety regardless of batch size), and in streaming mode also
             # wait delivery_gen_lag generations (chunks != epoch boundaries)
             continue
-        q.pop(0)                           # optimistic host-side claim
+        entry = q.pop(0)                   # optimistic host-side claim
         o_lo = o_id % (1 << D_SHIFT)
         slot = o_id % ring
+        # remember the claim: apply_consume_feedback re-queues it if the
+        # on-device consume validation skips this district.  A key already
+        # claimed means o_id wrapped mod 2^D_SHIFT past an unresolved claim
+        # — that order is long ring-evicted; retire it, never overwrite
+        # silently.  The dict stays bounded even when no feedback consumer
+        # is wired: past a soft cap, stale (ring-evicted) claims retire.
+        key = _key_no(w, d_id, o_lo)
+        old = state.pending_claims.pop(key, None)
+        if old is not None:
+            state.evicted_amount += old[2][2]
+        state.pending_claims[key] = (w, d_id, entry)
+        if len(state.pending_claims) > 1024 + 32 * N_DIST * cfg.n_partitions:
+            _prune_stale_claims(state)
         _idx_op(kinds, deltas, tables, d_id, SCAN_CONSUME, NO_IDX,
                 _key_no(w, d_id, 0), hi_or_prow=_key_no(w, d_id + 1, 0),
                 expect=_key_no(w, d_id, o_lo))
@@ -612,6 +646,12 @@ def make_batch(cfg: TPCCConfig, state: TPCCState, n_txns: int,
         p = home[i]
         t = fill[p]
         if t >= T:
+            # dropped on queue overflow: this txn never reaches the device —
+            # unwind its optimistic Delivery claims right away so the
+            # districts are not stranded waiting for feedback
+            if cfg.mix == "full":
+                _requeue_claims(state, kinds[i, :IDX_OPS],
+                                deltas[i, :IDX_OPS])
             continue
         ptxn["valid"][p, t] = True
         ptxn["row"][p, t] = rows[i]
@@ -637,3 +677,102 @@ def make_batch(cfg: TPCCConfig, state: TPCCState, n_txns: int,
         "p_row_bytes": prow_bytes, "p_op_bytes": pop_bytes,
         "c_row_bytes": row_bytes[cx], "c_op_bytes": op_bytes[cx],
     }
+
+
+# ---------------------------------------------------------------------------
+# consume feedback: resolve Delivery's optimistic claims against the device
+# ---------------------------------------------------------------------------
+def _prune_stale_claims(state):
+    """Retire every claim whose order has been ring-evicted (it can never
+    be delivered) into ``evicted_amount`` — keeps ``pending_claims``
+    bounded for drivers that never call apply_consume_feedback."""
+    ring = state.cfg.order_ring
+    stale = [k for k, (w, d, e) in state.pending_claims.items()
+             if e[0] < int(state.next_o_id[w, d]) - ring]
+    for k in stale:
+        state.evicted_amount += state.pending_claims.pop(k)[2][2]
+
+
+def _requeue_claims(state, kinds_k, deltas_k, skipped_k=None):
+    """Re-queue (or resolve) the pending claims of one txn's consume ops.
+
+    kinds_k/deltas_k: the first IDX_OPS op slots of one transaction.
+    skipped_k (optional bool per slot): True = the device skipped this
+    consume → push the claimed order back to the FRONT of its district's
+    undelivered queue (it is still the oldest); False = it committed →
+    retire the claim.  Without skipped_k every consume is re-queued (the
+    txn never executed).  A claimed order whose ring slot has meanwhile
+    been overwritten can never be delivered — re-queueing it would
+    permanently livelock the district on a dead prediction — so stale
+    claims retire into ``evicted_amount`` instead.  Returns the number of
+    re-queued districts."""
+    ring = state.cfg.order_ring
+    n = 0
+    for k in np.nonzero(kinds_k == SCAN_CONSUME)[0]:
+        key = int(deltas_k[k, IX_EXPECT])
+        claim = state.pending_claims.pop(key, None)
+        if claim is None:      # already resolved (e.g. duplicate feedback)
+            continue
+        w, d_id, entry = claim
+        if skipped_k is not None and not bool(skipped_k[k]):
+            continue           # consume committed: claim retired
+        if entry[0] < int(state.next_o_id[w, d_id]) - ring:
+            state.evicted_amount += entry[2]   # ring-evicted while claimed
+            continue
+        # insert preserving oldest-first order (normally position 0: the
+        # claimed order predates everything still queued)
+        q = state.undelivered[w][d_id]
+        pos = 0
+        while pos < len(q) and q[pos][0] < entry[0]:
+            pos += 1
+        q.insert(pos, entry)
+        n += 1
+    return n
+
+
+def apply_consume_feedback(state: TPCCState, batch: dict, metrics: dict):
+    """Close the consume loop (ROADMAP "service-level consume feedback"):
+    a Delivery district skipped on EXPECT mismatch re-queues its claimed
+    order into ``state.undelivered`` in oldest-first position (normally
+    the front) instead of being only counted — the next Delivery retries
+    it.  A claim whose order was meanwhile ring-evicted retires into
+    ``evicted_amount`` (re-queueing a dead prediction would livelock the
+    district).
+
+    batch: the formed device batch (``make_batch`` output or the service
+    batcher's equivalent — only ``ptxn``/``cross`` kind+delta arrays are
+    read).  metrics: ``StarEngine.run_epoch``'s return value (``p_cskip`` /
+    ``c_cskip`` masks; padded shapes are sliced to the batch's).  Returns
+    the number of re-queued districts.
+    """
+    if not getattr(state, "pending_claims", None):
+        return 0
+    requeued = 0
+    pk = np.asarray(batch["ptxn"]["kind"])            # (P, T, M)
+    pd = np.asarray(batch["ptxn"]["delta"])
+    ps = metrics.get("p_cskip")
+    if ps is not None:
+        P, T, M = pk.shape
+        K = ps.shape[-1]
+        for p in range(P):
+            for t in range(T):                        # slot order == commit
+                if not (pk[p, t, :K] == SCAN_CONSUME).any():
+                    continue
+                requeued += _requeue_claims(state, pk[p, t, :K],
+                                            pd[p, t, :K], ps[p, t, :K])
+    ck = np.asarray(batch["cross"]["kind"])           # (B, M)
+    cd = np.asarray(batch["cross"]["delta"])
+    cs = metrics.get("c_cskip")
+    if cs is not None and ck.shape[0]:
+        B = ck.shape[0]
+        K = cs.shape[-1]
+        committed = np.asarray(metrics["c_committed"])
+        for b in range(B):
+            if not (ck[b, :K] == SCAN_CONSUME).any():
+                continue
+            if not committed[b]:
+                continue   # starved lane: its claim stays pending (the
+                # service re-queues the txn; it resolves on commit)
+            requeued += _requeue_claims(state, ck[b, :K], cd[b, :K],
+                                        cs[b, :K])
+    return requeued

@@ -4,6 +4,10 @@ Each kernel directory holds kernel.py (pl.pallas_call + BlockSpec VMEM
 tiling), ops.py (jit'd public wrapper, interpret=True off-TPU) and ref.py
 (pure-jnp oracle used by the allclose test sweeps):
 
+* occ             -- fused single-master OCC round (gather/lock/validate/
+                     install over the flat row+index lock space) + the
+                     searchsorted/window index probe (SS4.2; ref.py is the
+                     exact former inline executor code);
 * thomas_merge    -- replication-stream apply under the Thomas write rule
                      (the paper's replica-side hot loop, SS3/SS5);
 * flash_attention -- online-softmax attention; causal / window / encoder /
@@ -13,7 +17,9 @@ tiling), ops.py (jit'd public wrapper, interpret=True off-TPU) and ref.py
 """
 from repro.kernels.flash_attention import ops as flash_attention
 from repro.kernels.mamba2_ssd import ops as mamba2_ssd
+from repro.kernels.occ import ops as occ
 from repro.kernels.rmsnorm import ops as rmsnorm
 from repro.kernels.thomas_merge import ops as thomas_merge
 
-__all__ = ["flash_attention", "mamba2_ssd", "rmsnorm", "thomas_merge"]
+__all__ = ["flash_attention", "mamba2_ssd", "occ", "rmsnorm",
+           "thomas_merge"]

@@ -1,0 +1,226 @@
+"""Pallas TPU kernels: fused OCC round + fused index scan window.
+
+Two kernels cover the single-master hot path (ROADMAP "Pallas OCC kernels"):
+
+* ``scan_window_pallas`` — the ordered-index probe.  The jnp reference
+  resolves each op's range scan by materializing a ``(B, K, cap)`` gather of
+  the whole segment per index before ``searchsorted`` — at TPC-C scale that
+  is hundreds of MB of HBM traffic per OCC round.  The kernel keeps the
+  concatenated segments resident (one ``(S,)`` key array + ``(S,)`` TID
+  array), runs a vectorized lower-bound binary search per op (``n_iters``
+  rounds of one gathered compare each) and gathers only the bounded
+  ``n_slots`` window — O(B·K·(log cap + L)) elements touched instead of
+  O(B·K·cap).
+
+* ``occ_round_pallas`` — one fused OCC round over the flat row+index-slot
+  lock space: gather reads + TIDs, apply ops, scatter-min lock acquisition,
+  Silo read validation (or Calvin deterministic locking), TID generation,
+  and winner install — one kernel launch per round with ``val``/``tidw``/
+  the lock array all VMEM-resident for the whole round, instead of the
+  reference's separate gather/scatter passes.
+
+Both kernels run under ``interpret=True`` on CPU (the tier-1/CI path — no
+TPU in the container) and are bit-identical to ``ref.py`` by construction;
+``tests/test_occ_kernels.py`` enforces this on random op batches including
+lock-conflict and phantom-abort interleavings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import tid as tidlib
+from repro.core.ops import apply_op
+
+
+# ---------------------------------------------------------------------------
+# fused index scan window: binary search + bounded window gather
+# ---------------------------------------------------------------------------
+def _scan_window_kernel(key_ref, tid_ref, q_ref, base_ref, cap_ref,
+                        pos_ref, keys_ref, tids_ref, *, n_slots, n_iters):
+    fk = key_ref[...]                                  # (S,) int32
+    ft = tid_ref[...]                                  # (S,) uint32
+    q = q_ref[...]                                     # (Q,) query keys
+    base = base_ref[...]                               # (Q,) segment starts
+    cap = cap_ref[...]                                 # (Q,) segment lengths
+
+    # vectorized lower bound: pos = first slot with seg[pos] >= q
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = cap
+
+    def body(_, lh):
+        lo, hi = lh
+        live = lo < hi
+        mid = (lo + hi) // 2                           # in [lo, hi) ⊂ [0,cap)
+        kmid = fk[base + jnp.minimum(mid, cap - 1)]
+        right = live & (kmid < q)
+        return (jnp.where(right, mid + 1, lo),
+                jnp.where(live & ~right, mid, hi))
+
+    lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
+    pos_ref[...] = lo
+    window = lo[:, None] + jnp.arange(n_slots, dtype=jnp.int32)[None, :]
+    slots = jnp.clip(window, 0, cap[:, None] - 1)
+    gidx = base[:, None] + slots                       # (Q, n_slots)
+    keys_ref[...] = fk[gidx]
+    tids_ref[...] = ft[gidx]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_slots", "n_iters", "interpret"))
+def scan_window_pallas(flat_key, flat_tid, q, seg_base, seg_cap, *,
+                       n_slots: int, n_iters: int, interpret: bool = True):
+    """flat_key/flat_tid: (S,) concatenated sorted segments; q/seg_base/
+    seg_cap: (Q,) per-query key, segment start offset and segment length.
+    Returns (pos0 (Q,) == searchsorted-left, keys_at (Q, n_slots),
+    tids_at (Q, n_slots)) with window slots clipped to the segment."""
+    Q = q.shape[0]
+    kernel = functools.partial(_scan_window_kernel, n_slots=n_slots,
+                               n_iters=n_iters)
+    return pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((Q,), jnp.int32),
+                   jax.ShapeDtypeStruct((Q, n_slots), flat_key.dtype),
+                   jax.ShapeDtypeStruct((Q, n_slots), flat_tid.dtype)],
+        interpret=interpret,
+    )(flat_key, flat_tid, q, seg_base, seg_cap)
+
+
+# ---------------------------------------------------------------------------
+# fused OCC round: gather → lock → validate → TID → install, one launch
+# ---------------------------------------------------------------------------
+def _occ_round_kernel(val_ref, tidw_ref, rows_ref, kind_ref, delta_ref,
+                      wmask_ref, amask_ref, active_ref, epoch_ref,
+                      last_tid_ref, *rest, NT, deterministic, has_ix):
+    if has_ix:
+        (claim_addr_ref, claim_tid_ref, scan_addr_ref, scan_tid_ref,
+         scan_valid_ref, has_claim_ref,
+         val_out, tid_out, commit_out, ntid_out, new_out, w_out) = rest
+    else:
+        (val_out, tid_out, commit_out, ntid_out, new_out, w_out) = rest
+
+    val = val_ref[...]                                              # (N,C)
+    tidw = tidw_ref[...]                                            # (N,)
+    rows = rows_ref[...]                                            # (B,M)
+    kind = kind_ref[...]
+    delta_v = delta_ref[...]
+    wmask = wmask_ref[...]
+    amask = amask_ref[...]
+    active = active_ref[...]                                        # (B,)
+    epoch = epoch_ref[0]
+    last_tid = last_tid_ref[...]
+
+    N, C = val.shape
+    B, M = rows.shape
+    lanes = jnp.arange(B, dtype=jnp.int32)
+    SENTINEL_LANE = jnp.int32(B)
+
+    old = val[rows]                                                 # (B,M,C)
+    rtids = tidw[rows]                                              # (B,M)
+    new = apply_op(kind, old, delta_v)
+
+    # lock acquisition: scatter-min lane id over claimed rows/slots — the
+    # lock array lives in VMEM for the whole round
+    claim_lane = jnp.where(wmask, lanes[:, None], SENTINEL_LANE)
+    lock = jnp.full((NT + 1,), SENTINEL_LANE, jnp.int32)
+    lock = lock.at[jnp.where(wmask, rows, NT)].min(claim_lane)
+    if has_ix:
+        claim_addr = claim_addr_ref[...]                            # (B,K)
+        claim_tid = claim_tid_ref[...]
+        scan_addr = scan_addr_ref[...]                              # (B,K,L+1)
+        scan_tid = scan_tid_ref[...]
+        scan_valid = scan_valid_ref[...]
+        has_claim = has_claim_ref[...]
+        lock = lock.at[jnp.where(has_claim, claim_addr, NT)].min(
+            jnp.where(has_claim, lanes[:, None], SENTINEL_LANE))
+    holder = lock[rows]                                             # (B,M)
+
+    wins_all = jnp.all(jnp.where(wmask, holder == lanes[:, None], True),
+                       axis=1)
+    if has_ix:
+        hold_ic = lock[claim_addr]                                  # (B,K)
+        wins_all &= jnp.all(
+            jnp.where(has_claim, hold_ic == lanes[:, None], True), axis=1)
+    if deterministic:
+        rlock = jnp.full((NT + 1,), SENTINEL_LANE, jnp.int32)
+        rlock = rlock.at[jnp.where(amask, rows, NT)].min(
+            jnp.where(amask, lanes[:, None], SENTINEL_LANE))
+        if has_ix:
+            sa = jnp.where(scan_valid & active[:, None, None], scan_addr, NT)
+            rlock = rlock.at[sa].min(
+                jnp.where(sa < NT, lanes[:, None, None], SENTINEL_LANE))
+            rlock = rlock.at[jnp.where(has_claim, claim_addr, NT)].min(
+                jnp.where(has_claim, lanes[:, None], SENTINEL_LANE))
+        holder_any = rlock[rows]
+        commit_now = active & jnp.all(
+            jnp.where(amask, holder_any == lanes[:, None], True), axis=1)
+        if has_ix:
+            commit_now &= jnp.all(jnp.where(
+                scan_valid & active[:, None, None],
+                rlock[scan_addr] == lanes[:, None, None], True), axis=(1, 2))
+            commit_now &= jnp.all(jnp.where(
+                has_claim, rlock[claim_addr] == lanes[:, None], True), axis=1)
+    else:
+        dirty = holder < lanes[:, None]                             # (B,M)
+        read_ok = jnp.all(~(amask & dirty), axis=1)
+        if has_ix:
+            sdirty = scan_valid & active[:, None, None] \
+                & (lock[scan_addr] < lanes[:, None, None])
+            read_ok &= ~jnp.any(sdirty, axis=(1, 2))
+        commit_now = active & wins_all & read_ok
+
+    # TID generation (criteria a, b, c)
+    obs = jnp.max(jnp.where(amask, rtids, jnp.uint32(0)), axis=1)
+    if has_ix:
+        obs = jnp.maximum(obs, jnp.max(
+            jnp.where(scan_valid, scan_tid, jnp.uint32(0)), axis=(1, 2)))
+        obs = jnp.maximum(obs, jnp.max(
+            jnp.where(has_claim, claim_tid, jnp.uint32(0)), axis=1))
+    new_tid = tidlib.next_tid(epoch, obs, last_tid)                 # (B,)
+
+    # install: winners only (unique per row by construction)
+    w = wmask & commit_now[:, None]
+    wrows = jnp.where(w, rows, N)
+    val_pad = jnp.concatenate([val, jnp.zeros((1, C), val.dtype)], 0)
+    val_out[...] = val_pad.at[wrows.reshape(-1)].set(new.reshape(-1, C))[:N]
+    tid_pad = jnp.concatenate([tidw, jnp.zeros((1,), tidw.dtype)], 0)
+    tid_out[...] = tid_pad.at[wrows.reshape(-1)].set(
+        jnp.broadcast_to(new_tid[:, None], (B, M)).reshape(-1))[:N]
+    commit_out[...] = commit_now
+    ntid_out[...] = new_tid
+    new_out[...] = new
+    w_out[...] = w
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("NT", "deterministic", "interpret"))
+def occ_round_pallas(val, tidw, rows, kind, delta_v, wmask, amask, active,
+                     epoch_arr, last_tid, ix_args=None, *, NT: int,
+                     deterministic: bool = False, interpret: bool = True):
+    """One fused OCC round.  ``ix_args`` (optional) is the tuple
+    (claim_addr, claim_tid, scan_addr, scan_tid, scan_valid, has_claim);
+    ``NT`` the flat lock-space size.  Returns
+    (val', tidw', commit_now, new_tid, new, w) — bit-identical to
+    ``ref.occ_round_ref``."""
+    N, C = val.shape
+    B, M = rows.shape
+    has_ix = ix_args is not None
+    kernel = functools.partial(_occ_round_kernel, NT=NT,
+                               deterministic=deterministic, has_ix=has_ix)
+    args = [val, tidw, rows, kind, delta_v, wmask, amask, active,
+            epoch_arr, last_tid]
+    if has_ix:
+        args += list(ix_args)
+    return pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((N, C), val.dtype),
+                   jax.ShapeDtypeStruct((N,), tidw.dtype),
+                   jax.ShapeDtypeStruct((B,), jnp.bool_),
+                   jax.ShapeDtypeStruct((B,), jnp.uint32),
+                   jax.ShapeDtypeStruct((B, M, C), val.dtype),
+                   jax.ShapeDtypeStruct((B, M), jnp.bool_)],
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,190 @@
+"""Dispatch layer for the fused OCC kernels.
+
+``kernel="jnp"`` routes to the reference implementations in ``ref.py`` (the
+exact code that used to live inline in the executors — the parity oracle);
+``kernel="pallas"`` routes to the fused Pallas kernels with
+``interpret=True`` resolved automatically off-TPU, so tier-1 and CI run the
+fused path on CPU.  Both paths return bit-identical results
+(``tests/test_occ_kernels.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ops import (IX_EXPECT, IX_HI, IX_ID, IX_LO, SCAN_CONSUME,
+                            is_index_kind, reads_index, writes_index)
+from repro.kernels.occ import ref
+from repro.kernels.occ.kernel import occ_round_pallas, scan_window_pallas
+from repro.storage.index import SCAN_L, SENTINEL, key_partition
+
+KERNELS = ("jnp", "pallas")
+
+
+def resolve_interpret(interpret):
+    """None -> interpret off-TPU (the shared dispatch policy)."""
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def _flat_segments(index):
+    """Static layout of the concatenated index segments: per-index flat
+    offsets, caps, total slots, and the search-iteration bound."""
+    P = index[0]["key"].shape[0]
+    caps = [idx["key"].shape[1] for idx in index]
+    offs = np.cumsum([0] + [P * c for c in caps])
+    n_iters = int(max(caps)).bit_length() + 1
+    return P, caps, [int(o) for o in offs], int(offs[-1]), n_iters
+
+
+def _seg_select(caps, offs, sel, iid, part):
+    """Per-op segment base/length in the concatenated key space.  Ops not
+    matching any index resolve against segment 0 and are masked out by the
+    caller (the same convention as the reference's p_g = 0 pass)."""
+    seg_base = jnp.zeros(iid.shape, jnp.int32)
+    seg_cap = jnp.full(iid.shape, caps[0], jnp.int32)
+    for i, c in enumerate(caps):
+        mine = sel & (iid == i)
+        seg_base = jnp.where(mine, offs[i] + part * c, seg_base)
+        seg_cap = jnp.where(mine, c, seg_cap)
+    return seg_base, seg_cap
+
+
+# ---------------------------------------------------------------------------
+# index-op location (single-master): searchsorted + SCAN_L window
+# ---------------------------------------------------------------------------
+def _locate_index_ops_fused(index, kinds, delta, n_rows, interpret):
+    B, K = kinds.shape
+    P, caps, offs, S, n_iters = _flat_segments(index)
+    no_addr = n_rows + S
+
+    lo = delta[..., IX_LO]                                     # (B, K)
+    hi = delta[..., IX_HI]
+    iid = delta[..., IX_ID]
+    p_of = jnp.clip(key_partition(lo), 0, P - 1)
+    sel = is_index_kind(kinds) & (iid >= 0) & (iid < len(index))
+    seg_base, seg_cap = _seg_select(caps, offs, sel, iid, p_of)
+
+    flat_key = jnp.concatenate([ix["key"].reshape(-1) for ix in index])
+    flat_tid = jnp.concatenate([ix["tid"].reshape(-1) for ix in index])
+    pos0, keys_at, tids_at = scan_window_pallas(
+        flat_key, flat_tid, lo.reshape(-1), seg_base.reshape(-1),
+        seg_cap.reshape(-1), n_slots=SCAN_L + 1, n_iters=n_iters,
+        interpret=interpret)
+    pos0 = pos0.reshape(B, K)
+    keys_at = keys_at.reshape(B, K, SCAN_L + 1)
+    tids_at = tids_at.reshape(B, K, SCAN_L + 1)
+
+    # identical mask algebra to ref.locate_index_ops_ref, now per-op instead
+    # of per-index (the kernel already resolved each op's own segment)
+    window = pos0[..., None] + jnp.arange(SCAN_L + 1, dtype=jnp.int32)
+    slots = jnp.clip(window, 0, seg_cap[..., None] - 1)
+    cmask = sel & writes_index(kinds)
+    claim_addr = jnp.where(cmask, n_rows + seg_base
+                           + jnp.clip(pos0, 0, seg_cap - 1),
+                           no_addr).astype(jnp.int32)
+    claim_tid = jnp.where(cmask, tids_at[..., 0], jnp.uint32(0))
+    smask = sel & reads_index(kinds)
+    in_or_boundary = jnp.concatenate(
+        [jnp.ones((B, K, 1), bool), keys_at[..., :-1] < hi[..., None]],
+        axis=-1) & (window < seg_cap[..., None])
+    sv = smask[..., None] & in_or_boundary
+    scan_addr = jnp.where(sv, n_rows + seg_base[..., None] + slots,
+                          no_addr).astype(jnp.int32)
+    scan_tid = jnp.where(sv, tids_at, jnp.uint32(0))
+    first_key = jnp.where(sel, keys_at[..., 0], SENTINEL)
+    consume_ok = (first_key == delta[..., IX_EXPECT]) & (first_key < hi) \
+        & (first_key != SENTINEL)
+    return {"claim_addr": claim_addr, "claim_tid": claim_tid,
+            "scan_addr": scan_addr, "scan_tid": scan_tid,
+            "scan_valid": sv, "consume_ok": consume_ok, "no_addr": no_addr}
+
+
+def locate_index_ops(index, kinds, delta, n_rows, *, kernel="jnp",
+                     interpret=None):
+    """Resolve one round's index/scan ops (see ref.locate_index_ops_ref)."""
+    if kernel == "jnp":
+        return ref.locate_index_ops_ref(index, kinds, delta, n_rows)
+    return _locate_index_ops_fused(index, kinds, delta, n_rows,
+                                   resolve_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# one OCC round (single-master)
+# ---------------------------------------------------------------------------
+def occ_round(val, tidw, rows, kind, delta_v, wmask, amask, active, epoch,
+              last_tid, ix=None, has_claim=None, deterministic=False, *,
+              kernel="jnp", interpret=None):
+    """One OCC round: gather → lock → validate → TID → install.  Returns
+    (val', tidw', commit_now, new_tid, new, w)."""
+    if kernel == "jnp":
+        return ref.occ_round_ref(val, tidw, rows, kind, delta_v, wmask,
+                                 amask, active, epoch, last_tid, ix=ix,
+                                 has_claim=has_claim,
+                                 deterministic=deterministic)
+    NT = val.shape[0] if ix is None else int(ix["no_addr"])
+    ix_args = None
+    if ix is not None:
+        ix_args = (ix["claim_addr"], ix["claim_tid"], ix["scan_addr"],
+                   ix["scan_tid"], ix["scan_valid"], has_claim)
+    epoch_arr = jnp.asarray(epoch, jnp.uint32).reshape(1)
+    return occ_round_pallas(val, tidw, rows, kind, delta_v, wmask, amask,
+                            active, epoch_arr, last_tid, ix_args, NT=NT,
+                            deterministic=deterministic,
+                            interpret=resolve_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# per-queue-slot consume validation (partitioned)
+# ---------------------------------------------------------------------------
+def step_index_ops(index, kinds, delta, *, kernel="jnp", interpret=None):
+    """Resolve one partitioned queue slot's index ops: (consume_ok (P, K),
+    slot_tid (P, K))."""
+    if kernel == "jnp":
+        return ref.step_index_ops_ref(index, kinds, delta)
+    Pq, K = kinds.shape
+    P, caps, offs, S, n_iters = _flat_segments(index)
+    lo = delta[..., IX_LO]
+    hi = delta[..., IX_HI]
+    iid = delta[..., IX_ID]
+    # partitioned executors probe their OWN partition's segment
+    part = jnp.broadcast_to(jnp.arange(Pq, dtype=jnp.int32)[:, None],
+                            (Pq, K))
+    sel = (iid >= 0) & (iid < len(index))
+    seg_base, seg_cap = _seg_select(caps, offs, sel, iid, part)
+    flat_key = jnp.concatenate([ix["key"].reshape(-1) for ix in index])
+    flat_tid = jnp.concatenate([ix["tid"].reshape(-1) for ix in index])
+    pos0, keys_at, tids_at = scan_window_pallas(
+        flat_key, flat_tid, lo.reshape(-1), seg_base.reshape(-1),
+        seg_cap.reshape(-1), n_slots=1, n_iters=n_iters,
+        interpret=resolve_interpret(interpret))
+    first_key = keys_at.reshape(Pq, K)
+    t_at = tids_at.reshape(Pq, K)
+    ok = (first_key == delta[..., IX_EXPECT]) & (first_key < hi) \
+        & (first_key != SENTINEL)
+    consume_ok = jnp.where(sel & (kinds == SCAN_CONSUME), ok, True)
+    slot_tid = jnp.where(sel, t_at, jnp.uint32(0))
+    return consume_ok, slot_tid
+
+
+# ---------------------------------------------------------------------------
+# roofline accounting: bytes touched per OCC round, jnp vs fused layout
+# ---------------------------------------------------------------------------
+def occ_round_bytes(B, M, K, C, n_rows, index_caps, n_indexes_P,
+                    scan_l: int = SCAN_L):
+    """Model the per-round HBM traffic of the index probe + round for the
+    two dispatch paths (int32/uint32 words = 4 bytes).  The jnp reference
+    materializes a (B, K, cap) key+tid gather PER INDEX; the fused kernel
+    touches the concatenated segments once plus O(log cap + L) gathered
+    elements per op.  Used by benchmarks/roofline_report."""
+    W = 4
+    NT = n_rows + n_indexes_P * sum(index_caps)
+    round_common = (B * M * (C + 1)            # old values + read TIDs
+                    + 2 * (NT + 1)             # lock scatter + gather back
+                    + B * M * (C + 1)) * W     # install post-images + TIDs
+    jnp_probe = sum(2 * B * K * cap for cap in index_caps) * W
+    n_iters = int(max(index_caps)).bit_length() + 1 if index_caps else 0
+    fused_probe = (2 * n_indexes_P * sum(index_caps)       # resident segments
+                   + B * K * (n_iters + 2 * (scan_l + 1))) * W
+    return {"jnp": round_common + jnp_probe,
+            "pallas": round_common + fused_probe}

@@ -1,0 +1,214 @@
+"""Pure-jnp oracles for the fused OCC kernels.
+
+This is the code that used to live inline in ``core/single_master.py`` and
+``core/partitioned.py`` — preserved verbatim as the parity reference the
+Pallas kernels (``kernel.py``) must match bit-for-bit:
+
+* :func:`locate_index_ops_ref` — resolve one round's index/scan ops against
+  the ordered-index state: per-index ``jnp.searchsorted`` + a gathered
+  ``SCAN_L + 1`` window.  This is the bandwidth hot spot the fused kernel
+  kills: the reference materializes a ``(B, K, cap)`` segment gather per
+  index before searching it.
+* :func:`occ_round_ref` — one OCC round over the flat row+index-slot lock
+  space: gather reads, scatter-min lock acquisition, Silo TID validation
+  (or Calvin deterministic locking), TID generation, winner install.
+* :func:`step_index_ops_ref` — the partitioned executor's per-queue-slot
+  consume validation (searchsorted + first-key/TID gather, no window).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tid as tidlib
+from repro.core.ops import (IX_EXPECT, IX_HI, IX_ID, IX_LO, SCAN_CONSUME,
+                            apply_op, is_index_kind, reads_index, writes_index)
+from repro.storage.index import SCAN_L, SENTINEL, key_partition
+
+
+def locate_index_ops_ref(index, kinds, delta, n_rows):
+    """Resolve index/scan ops of one round against the current index state.
+
+    kinds: (B, K) int32; delta: (B, K, C).  Returns per-op claim addresses,
+    scan-window addresses/validity, gathered TIDs and the first in-range key
+    (consume validation), all in the flat row+index address space
+    [0, n_rows + sum(P * cap_i)) with `no_addr` = the dump slot.
+    """
+    B, K = kinds.shape
+    P = index[0]["key"].shape[0]
+    caps = [idx["key"].shape[1] for idx in index]
+    no_addr = n_rows + sum(P * c for c in caps)
+
+    lo = delta[..., IX_LO]                                     # (B, K)
+    hi = delta[..., IX_HI]
+    iid = delta[..., IX_ID]
+    p_of = jnp.clip(key_partition(lo), 0, P - 1)
+
+    is_idx = is_index_kind(kinds)
+    claim_addr = jnp.full((B, K), no_addr, jnp.int32)
+    claim_tid = jnp.zeros((B, K), jnp.uint32)
+    scan_addr = jnp.full((B, K, SCAN_L + 1), no_addr, jnp.int32)
+    scan_tid = jnp.zeros((B, K, SCAN_L + 1), jnp.uint32)
+    scan_valid = jnp.zeros((B, K, SCAN_L + 1), bool)
+    first_key = jnp.full((B, K), SENTINEL, jnp.int32)
+
+    base = n_rows
+    ss = jax.vmap(jax.vmap(jnp.searchsorted))
+    for i, idx in enumerate(index):
+        cap = caps[i]
+        mine = is_idx & (iid == i)
+        p_g = jnp.where(mine, p_of, 0)
+        segk = idx["key"][p_g]                                 # (B, K, cap)
+        segt = idx["tid"][p_g]
+        pos0 = ss(segk, lo)                                    # (B, K)
+        window = pos0[..., None] + jnp.arange(SCAN_L + 1, dtype=jnp.int32)
+        slots = jnp.clip(window, 0, cap - 1)
+        keys_at = jnp.take_along_axis(segk, slots, axis=-1)    # (B, K, L+1)
+        tids_at = jnp.take_along_axis(segt, slots, axis=-1)
+        addr0 = base + p_of * cap
+        # claim the position slot (insert/delete/consume): next-key locking
+        cmask = mine & writes_index(kinds)
+        cpos = jnp.clip(pos0, 0, cap - 1)
+        claim_addr = jnp.where(cmask, addr0 + cpos, claim_addr)
+        claim_tid = jnp.where(
+            cmask, jnp.take_along_axis(segt, cpos[..., None], -1)[..., 0],
+            claim_tid)
+        # scan read set: in-range slots + exactly one boundary slot
+        smask = mine & reads_index(kinds)
+        in_or_boundary = jnp.concatenate(
+            [jnp.ones((B, K, 1), bool), keys_at[..., :-1] < hi[..., None]],
+            axis=-1) & (window < cap)
+        sv = smask[..., None] & in_or_boundary
+        scan_addr = jnp.where(sv, addr0[..., None] + slots, scan_addr)
+        scan_tid = jnp.where(sv, tids_at, scan_tid)
+        scan_valid = scan_valid | sv
+        first_key = jnp.where(mine, keys_at[..., 0], first_key)
+        base += P * cap
+
+    consume_ok = (first_key == delta[..., IX_EXPECT]) & (first_key < hi) \
+        & (first_key != SENTINEL)
+    return {"claim_addr": claim_addr, "claim_tid": claim_tid,
+            "scan_addr": scan_addr, "scan_tid": scan_tid,
+            "scan_valid": scan_valid, "consume_ok": consume_ok,
+            "no_addr": no_addr}
+
+
+def occ_round_ref(val, tidw, rows, kind, delta_v, wmask, amask, active,
+                  epoch, last_tid, ix=None, has_claim=None,
+                  deterministic=False):
+    """One OCC round: gather → lock (scatter-min) → validate → TID → install.
+
+    val: (N, C) int32; tidw: (N,) uint32; rows/kind: (B, M); delta_v the
+    guard-stripped op deltas; wmask/amask the guard-resolved primary write
+    and read-validation masks; active (B,) the runnable-not-yet-committed
+    lanes.  ix (optional) is the :func:`locate_index_ops_ref` dict with
+    ``has_claim`` its active claim mask.  Returns
+    (val', tidw', commit_now, new_tid, new, w).
+    """
+    N, C = val.shape
+    B, M = rows.shape
+    lanes = jnp.arange(B, dtype=jnp.int32)
+    SENTINEL_LANE = jnp.int32(B)
+    NT = N if ix is None else int(ix["no_addr"])
+
+    old = val[rows]                                                 # (B,M,C)
+    rtids = tidw[rows]                                              # (B,M)
+    new = apply_op(kind, old, delta_v)
+
+    # --- lock acquisition: scatter-min lane id over claimed rows/slots
+    claim_lane = jnp.where(wmask, lanes[:, None], SENTINEL_LANE)
+    lock = jnp.full((NT + 1,), SENTINEL_LANE, jnp.int32)
+    lock = lock.at[jnp.where(wmask, rows, NT)].min(claim_lane)
+    if ix is not None:
+        lock = lock.at[jnp.where(has_claim, ix["claim_addr"], NT)].min(
+            jnp.where(has_claim, lanes[:, None], SENTINEL_LANE))
+    holder = lock[rows]                                             # (B,M)
+
+    wins_all = jnp.all(jnp.where(wmask, holder == lanes[:, None], True), axis=1)
+    if ix is not None:
+        hold_ic = lock[ix["claim_addr"]]                            # (B,K)
+        wins_all &= jnp.all(
+            jnp.where(has_claim, hold_ic == lanes[:, None], True), axis=1)
+    if deterministic:
+        # Calvin: deterministic order, no read validation; a txn runs when
+        # it holds all its locks (reads included) in global order
+        rlock = jnp.full((NT + 1,), SENTINEL_LANE, jnp.int32)
+        rlock = rlock.at[jnp.where(amask, rows, NT)].min(
+            jnp.where(amask, lanes[:, None], SENTINEL_LANE))
+        if ix is not None:
+            sa = jnp.where(ix["scan_valid"] & active[:, None, None],
+                           ix["scan_addr"], NT)
+            rlock = rlock.at[sa].min(
+                jnp.where(sa < NT, lanes[:, None, None], SENTINEL_LANE))
+            rlock = rlock.at[jnp.where(has_claim, ix["claim_addr"], NT)
+                             ].min(jnp.where(has_claim, lanes[:, None],
+                                             SENTINEL_LANE))
+        holder_any = rlock[rows]
+        commit_now = active & jnp.all(
+            jnp.where(amask, holder_any == lanes[:, None], True), axis=1)
+        if ix is not None:
+            commit_now &= jnp.all(jnp.where(
+                ix["scan_valid"] & active[:, None, None],
+                rlock[ix["scan_addr"]] == lanes[:, None, None], True),
+                axis=(1, 2))
+            commit_now &= jnp.all(jnp.where(
+                has_claim, rlock[ix["claim_addr"]] == lanes[:, None],
+                True), axis=1)
+    else:
+        # Silo validation: abort if an earlier lane writes anything I
+        # read — rows AND scanned index slots (phantom protection)
+        dirty = holder < lanes[:, None]                             # (B,M)
+        read_ok = jnp.all(~(amask & dirty), axis=1)
+        if ix is not None:
+            sdirty = ix["scan_valid"] & active[:, None, None] \
+                & (lock[ix["scan_addr"]] < lanes[:, None, None])
+            read_ok &= ~jnp.any(sdirty, axis=(1, 2))
+        commit_now = active & wins_all & read_ok
+
+    # --- TID generation (criteria a, b, c)
+    obs = jnp.max(jnp.where(amask, rtids, jnp.uint32(0)), axis=1)
+    if ix is not None:
+        obs = jnp.maximum(obs, jnp.max(
+            jnp.where(ix["scan_valid"], ix["scan_tid"], jnp.uint32(0)),
+            axis=(1, 2)))
+        obs = jnp.maximum(obs, jnp.max(
+            jnp.where(has_claim, ix["claim_tid"], jnp.uint32(0)), axis=1))
+    new_tid = tidlib.next_tid(epoch, obs, last_tid)                 # (B,)
+
+    # --- install: winners only (unique per row by construction)
+    w = wmask & commit_now[:, None]
+    wrows = jnp.where(w, rows, N)
+    val_pad = jnp.concatenate([val, jnp.zeros((1, C), val.dtype)], 0)
+    val = val_pad.at[wrows.reshape(-1)].set(
+        new.reshape(-1, C))[:N]
+    tid_pad = jnp.concatenate([tidw, jnp.zeros((1,), tidw.dtype)], 0)
+    tidw = tid_pad.at[wrows.reshape(-1)].set(
+        jnp.broadcast_to(new_tid[:, None], (B, M)).reshape(-1))[:N]
+    return val, tidw, commit_now, new_tid, new, w
+
+
+def step_index_ops_ref(index, kinds, delta):
+    """Per-partition searchsorted resolution of one queue slot's index ops.
+
+    kinds: (P, K); delta: (P, K, C).  Returns (consume_ok (P, K),
+    slot_tid (P, K)) — the TID of each op's position slot (criterion a).
+    """
+    lo = delta[..., IX_LO]
+    hi = delta[..., IX_HI]
+    iid = delta[..., IX_ID]
+    P, K = kinds.shape
+    consume_ok = jnp.ones((P, K), bool)
+    slot_tid = jnp.zeros((P, K), jnp.uint32)
+    ss = jax.vmap(lambda seg, ks: jax.vmap(
+        lambda k: jnp.searchsorted(seg, k))(ks))
+    for i, idx in enumerate(index):
+        cap = idx["key"].shape[1]
+        pos0 = jnp.clip(ss(idx["key"], lo), 0, cap - 1)        # (P, K)
+        first_key = jnp.take_along_axis(idx["key"], pos0, axis=1)
+        t_at = jnp.take_along_axis(idx["tid"], pos0, axis=1)
+        mine = iid == i
+        ok = (first_key == delta[..., IX_EXPECT]) & (first_key < hi) \
+            & (first_key != SENTINEL)
+        consume_ok = jnp.where(mine & (kinds == SCAN_CONSUME), ok, consume_ok)
+        slot_tid = jnp.where(mine, t_at, slot_tid)
+    return consume_ok, slot_tid

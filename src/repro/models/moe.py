@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.layers import act_fn, normal_init
 
 
@@ -144,10 +145,9 @@ def moe_forward(p, x, cfg, mesh=None):
         aux = jax.lax.pmean(aux, axis_name=batch_axes) if batch_axes else aux
         return y.reshape(x_loc.shape), aux
 
-    y, aux = jax.shard_map(
-        body, mesh=mesh,
+    y, aux = shard_map(
+        body, mesh,
         in_specs=(expert_spec, bspec),
         out_specs=(bspec, P()),
-        check_vma=False,
     )(p, x)
     return y, aux

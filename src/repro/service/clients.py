@@ -87,6 +87,18 @@ class TPCCSource:
         raw.pop("row_bytes"), raw.pop("op_bytes")
         return raw
 
+    def unclaim(self, req: dict):
+        """Unwind the Delivery claims of requests that will NEVER execute
+        (shed by admission, dropped from the retry buffer): their claimed
+        orders go back to the front of the undelivered queues instead of
+        stranding in ``pending_claims`` forever."""
+        if self.cfg.mix != "full":
+            return
+        kinds, deltas = req["kinds"], req["deltas"]
+        for i in range(kinds.shape[0]):
+            tpcc._requeue_claims(self.state, kinds[i, :tpcc.IDX_OPS],
+                                 deltas[i, :tpcc.IDX_OPS])
+
 
 class OpenLoopClient:
     """Emits requests at `rate_txn_s` regardless of service progress.
@@ -169,7 +181,11 @@ class OpenLoopClient:
         return concat_requests(chunks)
 
     def on_shed(self, req: dict, now_s: float):
-        """Shed requests are gone — an open-loop client just keeps emitting."""
+        """Shed requests are gone — an open-loop client just keeps emitting.
+        Sources with host-mirror claims (TPC-C Delivery) unwind them."""
+        unclaim = getattr(self.source, "unclaim", None)
+        if unclaim is not None:
+            unclaim(req)
 
     def push_back(self, req: dict):
         """Backpressured requests: retry next tick (bounded buffer)."""
@@ -179,8 +195,12 @@ class OpenLoopClient:
             return
         n = merged["parts"].shape[0]
         if n > self.retry_cap:
-            self.dropped_retries += n - self.retry_cap
-            merged = slice_request(merged, np.arange(n - self.retry_cap, n))
+            dropped = n - self.retry_cap
+            self.dropped_retries += dropped
+            unclaim = getattr(self.source, "unclaim", None)
+            if unclaim is not None:    # oldest overflow is dropped for good
+                unclaim(slice_request(merged, np.arange(dropped)))
+            merged = slice_request(merged, np.arange(dropped, n))
         self.retry = merged
 
 

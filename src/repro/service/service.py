@@ -43,9 +43,14 @@ class TxnService:
     def __init__(self, engine: StarEngine, clients: list,
                  admission_cfg: AdmissionConfig | None = None,
                  slots_per_partition: int = 64, master_lanes: int = 64,
-                 max_ops: int | None = None):
+                 max_ops: int | None = None, feedback=None):
+        """feedback: optional callable(batch, metrics) invoked after every
+        epoch's commit fence — the service-level consume-feedback hook
+        (e.g. ``lambda b, m: tpcc.apply_consume_feedback(state, b, m)``
+        re-queues Delivery districts the device skipped)."""
         self.engine = engine
         self.clients = list(clients)
+        self.feedback = feedback
         M = max_ops if max_ops is not None else self.clients[0].source.M
         self.admission = AdmissionController(
             engine.P, engine.R, M, engine.C, cfg=admission_cfg)
@@ -174,6 +179,8 @@ class TxnService:
             self.stats.epoch_time_s += time.perf_counter() - t0
             self.stats.ingest_time_s += m["t_ingest_s"]
             self.stats.epochs += 1
+            if self.feedback is not None:
+                self.feedback(batch, m)
             self._complete(plan, m)
             batch, plan = nxt["formed"]
 

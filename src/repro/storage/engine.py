@@ -153,12 +153,13 @@ class StorageEngine:
         raise KeyError(name)
 
     def range_scan(self, index: str | int, part: int, lo, hi,
-                   limit: int = None):
+                   limit: int = None, use_pallas: bool = False):
         """Scan index ``index`` on partition ``part`` for keys in [lo, hi).
 
         Returns (keys, prows, tids, mask): fixed-width ``limit`` result
         slots, ``mask`` marking live in-range hits.  ``lo``/``hi`` are full
-        (partition-prefixed) keys.
+        (partition-prefixed) keys.  ``use_pallas`` dispatches the probe to
+        the fused scan-window kernel (bit-identical).
         """
         from repro.storage.index import SCAN_L
         limit = SCAN_L if limit is None else limit
@@ -167,7 +168,8 @@ class StorageEngine:
         seg_k, seg_p, seg_t = idx["key"][part], idx["prow"][part], \
             idx["tid"][part]
         slots, keys_at, in_range = segment_scan(seg_k, jnp.int32(lo),
-                                                jnp.int32(hi), limit + 1)
+                                                jnp.int32(hi), limit + 1,
+                                                use_pallas=use_pallas)
         res = slice(0, limit)
         return (keys_at[res], seg_p[slots][res], seg_t[slots][res],
                 in_range[res])

@@ -71,9 +71,13 @@ def segment_apply(key, prow, tid, del_key, ins_key, ins_prow, ins_tid):
     key/prow/tid: (cap,).  del_key: (Kd,) with SENTINEL = masked out.
     ins_key: (Ki,) with SENTINEL = masked out; ins_prow/ins_tid payloads.
     Deletes resolve against the *pre-batch* segment; inserts merge after.
-    Returns the re-sorted canonical segment.  Entries beyond ``cap`` after
-    the merge are dropped largest-key-first (capacity is the caller's
-    sizing responsibility — see IndexSpec).
+    Returns (key', prow', tid', overflow): the re-sorted canonical segment
+    plus the number of LIVE keys dropped because the merge exceeded ``cap``
+    (largest-key-first).  Overflow is deterministic and identical on master
+    and replica (both apply the same batches), so it never diverges state —
+    but it IS data loss; the engine counts it as ``index_overflow`` and can
+    raise in strict mode (capacity sizing is the caller's responsibility —
+    see IndexSpec).
     """
     cap = key.shape[0]
     # -- deletes: searchsorted position, exact-match test, sentinelize
@@ -86,25 +90,49 @@ def segment_apply(key, prow, tid, del_key, ins_key, ins_prow, ins_tid):
     k2 = jnp.concatenate([key, ins_key])
     p2 = jnp.concatenate([prow, ins_prow])
     t2 = jnp.concatenate([tid, ins_tid])
-    order = jnp.argsort(k2)[:cap]                     # jax sorts are stable
-    k2, p2, t2 = k2[order], p2[order], t2[order]
+    order = jnp.argsort(k2)                           # jax sorts are stable
+    k2s = k2[order]
+    overflow = jnp.sum(k2s[cap:] != SENTINEL, dtype=jnp.int32)
+    order = order[:cap]
+    k2, p2, t2 = k2s[:cap], p2[order], t2[order]
     live = k2 != SENTINEL                             # canonical free slots
-    return k2, jnp.where(live, p2, 0), jnp.where(live, t2, jnp.uint32(0))
+    return k2, jnp.where(live, p2, 0), jnp.where(live, t2, jnp.uint32(0)), \
+        overflow
 
 
-def segment_scan(key, lo, hi, n_slots: int = SCAN_L + 1):
+def segment_scan(key, lo, hi, n_slots: int = SCAN_L + 1, use_pallas=False,
+                 interpret=None):
     """Bounded range scan of one sorted segment: the first ``n_slots`` slots
     at/after ``lo`` (the last one is the next-key/boundary slot).
 
     Returns (slots (n_slots,) int32 positions clipped to cap-1,
              keys_at (n_slots,), in_range (n_slots,) bool) where ``in_range``
     marks live keys in [lo, hi) among the first n_slots-1 result slots.
+
+    ``use_pallas`` dispatches the searchsorted+window probe to the fused
+    Pallas scan-window kernel (repro.kernels.occ) — interpreted off-TPU —
+    instead of the jnp gather; results are bit-identical.
     """
     cap = key.shape[0]
-    pos0 = jnp.searchsorted(key, lo)
-    raw = pos0 + jnp.arange(n_slots, dtype=jnp.int32)
-    slots = jnp.clip(raw, 0, cap - 1)
-    keys_at = key[slots]
+    if use_pallas:
+        from repro.kernels.occ.kernel import scan_window_pallas
+        from repro.kernels.occ.ops import resolve_interpret
+        interpret = resolve_interpret(interpret)
+        pos0, keys_w, _ = scan_window_pallas(
+            key, jnp.zeros((cap,), jnp.uint32),
+            jnp.asarray(lo, jnp.int32).reshape(1),
+            jnp.zeros((1,), jnp.int32), jnp.full((1,), cap, jnp.int32),
+            n_slots=n_slots, n_iters=int(cap).bit_length() + 1,
+            interpret=interpret)
+        pos0 = pos0[0]
+        raw = pos0 + jnp.arange(n_slots, dtype=jnp.int32)
+        slots = jnp.clip(raw, 0, cap - 1)
+        keys_at = keys_w[0]
+    else:
+        pos0 = jnp.searchsorted(key, lo)
+        raw = pos0 + jnp.arange(n_slots, dtype=jnp.int32)
+        slots = jnp.clip(raw, 0, cap - 1)
+        keys_at = key[slots]
     is_result = jnp.arange(n_slots) < (n_slots - 1)   # last slot = next-key
     in_range = (raw < cap) & is_result & (keys_at >= lo) & (keys_at < hi) \
         & (keys_at != SENTINEL)
@@ -122,6 +150,10 @@ def apply_index_ops(indexes, kinds, delta, win, tids):
     (IX_* column layout, see core.ops); win: (..., K) bool — the op
     committed in this round/step; tids: (..., K) uint32 commit TIDs.
 
+    Returns (indexes', overflow) where ``overflow`` (int32 scalar) counts
+    live keys dropped by capacity-exceeding merges across all segments —
+    deterministic and replica-identical, surfaced as ``index_overflow``.
+
     The SAME function runs in the executors' install phase and in replica
     replay, so both sides evolve bit-equal index arrays from the same
     logical op stream (round/step-ordered; within a batch, lock-disjoint).
@@ -137,6 +169,7 @@ def apply_index_ops(indexes, kinds, delta, win, tids):
     parts_col = jnp.arange(P, dtype=jnp.int32)[:, None]          # (P, 1)
 
     out = []
+    overflow = jnp.int32(0)
     for i, idx in enumerate(indexes):
         sel_i = win & (iid == i)
         is_del = sel_i & ((kinds == DELETE_IDX) | (kinds == SCAN_CONSUME))
@@ -153,11 +186,12 @@ def apply_index_ops(indexes, kinds, delta, win, tids):
         ins_pq = jnp.where(mine, ins_key[None, :], SENTINEL)
         prow_pq = jnp.where(mine, ins_prow[None, :], 0)
         tid_pq = jnp.where(mine, ins_tid[None, :], jnp.uint32(0))
-        k, p, t = jax.vmap(segment_apply)(
+        k, p, t, ov = jax.vmap(segment_apply)(
             idx["key"], idx["prow"], idx["tid"], del_pq, ins_pq, prow_pq,
             tid_pq)
+        overflow = overflow + jnp.sum(ov)
         out.append({"key": k, "prow": p, "tid": t})
-    return out
+    return out, overflow
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,9 @@
-"""Distributed cluster engine (shard_map, 8 devices) + the §4.3 router."""
+"""Distributed cluster engine (shard_map, 8 devices) + the §4.3 router.
+
+core/cluster.py drives the mesh through ``repro.compat.shard_map``, which
+resolves to ``jax.shard_map`` (newer jax) or ``jax.experimental.shard_map``
+(the pinned container's 0.4.x) — these tests run, not skip, on both.
+"""
 import os
 import subprocess
 import sys
@@ -14,14 +19,6 @@ from repro.core.ops import ADD, READ, SET
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
-# core/cluster.py drives the mesh through `jax.shard_map`, which the pinned
-# container's jax (0.4.x: only jax.experimental.shard_map) does not expose —
-# green-or-known instead of red until the container jax moves (ROADMAP).
-needs_shard_map = pytest.mark.skipif(
-    not hasattr(jax, "shard_map"),
-    reason="core/cluster.py needs jax.shard_map (newer jax than pinned)")
-
-
 def _run(code: str) -> str:
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
@@ -32,7 +29,6 @@ def _run(code: str) -> str:
     return out.stdout
 
 
-@needs_shard_map
 def test_cluster_engine_8dev_matches_single_process():
     out = _run("""
         import jax, numpy as np, jax.numpy as jnp
@@ -58,7 +54,6 @@ def test_cluster_engine_8dev_matches_single_process():
     assert "OK cluster==single" in out
 
 
-@needs_shard_map
 def test_partitioned_phase_zero_collectives_8dev():
     """Compile-time proof of the paper's §4.1 claim on a real 8-way mesh."""
     out = _run("""

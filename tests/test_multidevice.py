@@ -58,7 +58,11 @@ def test_moe_expert_parallel_8dev_matches_single():
         p = init_moe(jax.random.key(0), cfg, jnp.float32)
         x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model))
         y1, _ = moe_forward(p, x, cfg, mesh=None)
-        with jax.set_mesh(mesh):
+        # mesh is passed explicitly; jax.set_mesh only exists on newer jax
+        import contextlib
+        ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") \
+            else contextlib.nullcontext()
+        with ctx:
             y2, _ = jax.jit(lambda p, x: moe_forward(p, x, cfg, mesh=mesh))(p, x)
         err = float(jnp.max(jnp.abs(y1 - y2)))
         assert err < 2e-4, err
@@ -67,14 +71,12 @@ def test_moe_expert_parallel_8dev_matches_single():
     assert "OK" in out
 
 
-@pytest.mark.skipif(
-    not hasattr(__import__("jax"), "shard_map"),
-    reason="needs jax.shard_map (newer jax than the pinned container)")
 def test_star_partitioned_phase_shard_map_8dev():
     """Partitioned phase via shard_map over 8 device-partitions == vmap."""
     out = _run("""
         import jax, numpy as np, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.core.partitioned import run_partitioned
         from repro.db import ycsb
         cfg = ycsb.YCSBConfig(n_partitions=8, records_per_partition=200)
@@ -90,10 +92,10 @@ def test_star_partitioned_phase_shard_map_8dev():
         def body(val, tid, ptxn):
             v, t, o, s = run_partitioned(val, tid, ptxn, epoch)
             return v, t
-        shmap = jax.shard_map(body, mesh=mesh,
+        shmap = shard_map(body, mesh,
             in_specs=(P("part"), P("part"),
                       jax.tree.map(lambda _: P("part"), ptxn)),
-            out_specs=(P("part"), P("part")), check_vma=False)
+            out_specs=(P("part"), P("part")))
         v2, t2 = jax.jit(shmap)(val, tid, ptxn)
         assert jnp.array_equal(v1, v2) and jnp.array_equal(t1, t2)
         print("OK shard_map partitioned phase matches")

@@ -1,0 +1,236 @@
+"""Fused Pallas OCC kernels (interpret mode) vs the jnp ref.py oracle.
+
+Bit-for-bit parity on random op batches — including lock-conflict
+interleavings (many lanes claiming the same rows) and phantom-abort
+interleavings (inserts landing inside concurrently scanned ranges) — for:
+
+* the full single-master executor (``kernel="pallas"`` vs ``"jnp"``),
+* ``locate_index_ops`` (searchsorted + SCAN_L window probe),
+* the partitioned executor / ``step_index_ops``,
+* ``segment_scan(use_pallas=True)`` and ``StorageEngine.range_scan``.
+
+Property-driven via tests/_hyp.py (real hypothesis when installed, seeded
+fallback otherwise), so tier-1 runs the sweep either way.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hyp import given, settings, st
+
+from repro.core.ops import (DELETE_IDX, IDX_OPS, INSERT_IDX, IX_EXPECT,
+                            IX_HI, IX_ID, IX_KEY, IX_PROW, SCAN_CONSUME,
+                            SCAN_READ)
+from repro.core.partitioned import run_partitioned
+from repro.core.single_master import run_single_master
+from repro.kernels.occ.ops import locate_index_ops, step_index_ops
+from repro.storage import IndexSpec, SENTINEL, make_index, segment_scan
+from repro.storage.index import full_key
+
+C = 10
+M = 24
+
+
+def _tree_equal(a, b):
+    eq = jax.tree.map(lambda x, y: bool(jnp.array_equal(x, y)), a, b)
+    return all(jax.tree.leaves(eq))
+
+
+def _random_index_workload(rng, B, P, n_rows, caps, conflict_rows):
+    """Random txn batch mixing primary ops with scan/insert/delete/consume
+    index ops over overlapping key ranges — lock conflicts on the primary
+    rows (drawn from a small pool) AND phantom conflicts on the scans
+    (inserts inside scanned ranges) arise by construction."""
+    # per-txn rows are drawn WITHOUT replacement (the generators' documented
+    # invariant: at most one op per row per txn — duplicate-row scatters
+    # would be order-unspecified); the small shared pool still produces
+    # dense cross-lane lock conflicts
+    pool = max(conflict_rows, M)
+    rows = np.stack([rng.choice(pool, M, replace=False)
+                     for _ in range(B)]).astype(np.int32)
+    kinds = rng.integers(0, 4, (B, M)).astype(np.int32)
+    deltas = rng.integers(-50, 50, (B, M, C)).astype(np.int32)
+    deltas[..., -1] = 0                        # guard column: unguarded
+    index = [make_index(IndexSpec(f"ix{i}", c), P)
+             for i, c in enumerate(caps)]
+    # seed some live entries so scans/consumes/deletes have targets
+    for i, c in enumerate(caps):
+        n_seed = int(rng.integers(0, min(c, 6)))
+        for _ in range(n_seed):
+            p = int(rng.integers(0, P))
+            k = int(full_key(p, int(rng.integers(0, 60))))
+            pos = int(jnp.searchsorted(index[i]["key"][p], k))
+            if pos < c and int(index[i]["key"][p, pos]) != k:
+                key = index[i]["key"].at[p].set(
+                    jnp.sort(index[i]["key"][p].at[c - 1].set(k)))
+                index[i] = {"key": key, "prow": index[i]["prow"],
+                            "tid": index[i]["tid"]}
+    for b in range(B):
+        for k in range(int(rng.integers(0, IDX_OPS // 2))):
+            iid = int(rng.integers(0, len(caps)))
+            p = int(rng.integers(0, P))
+            base = int(full_key(p, 0))
+            r = rng.random()
+            deltas[b, k] = 0
+            if r < 0.35:
+                kinds[b, k] = INSERT_IDX
+                deltas[b, k, IX_KEY] = base + int(rng.integers(0, 60))
+                deltas[b, k, IX_PROW] = int(rng.integers(0, n_rows))
+            elif r < 0.6:
+                kinds[b, k] = SCAN_READ
+                lo = base + int(rng.integers(0, 40))
+                deltas[b, k, IX_KEY] = lo
+                deltas[b, k, IX_HI] = lo + int(rng.integers(1, 40))
+            elif r < 0.8:
+                kinds[b, k] = SCAN_CONSUME
+                deltas[b, k, IX_KEY] = base
+                deltas[b, k, IX_HI] = base + 60
+                deltas[b, k, IX_EXPECT] = base + int(rng.integers(0, 60))
+                rows[b, k] = pool + k      # tombstone row, txn-unique
+            else:
+                kinds[b, k] = DELETE_IDX
+                deltas[b, k, IX_KEY] = base + int(rng.integers(0, 60))
+            deltas[b, k, IX_ID] = iid
+    txns = {"valid": rng.random(B) < 0.95, "row": rows, "kind": kinds,
+            "delta": deltas, "user_abort": rng.random(B) < 0.1}
+    return jax.tree.map(jnp.asarray, txns), index
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=12, deadline=None)
+def test_single_master_pallas_parity_random(seed):
+    """Full executor parity: state, logs, stats, index — conflicts and
+    phantom interleavings included."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(2, 12))
+    P = int(rng.integers(1, 3))
+    caps = [int(rng.integers(4, 20)) for _ in range(int(rng.integers(1, 3)))]
+    n_rows = 64 * P
+    txns, index = _random_index_workload(rng, B, P, n_rows, caps,
+                                         conflict_rows=n_rows // 4)
+    val0 = jnp.asarray(rng.integers(0, 50, (n_rows, C)), jnp.int32)
+    tid0 = jnp.asarray(rng.integers(0, 5, n_rows).astype(np.uint32) * 2)
+    outs = {}
+    for kern in ("jnp", "pallas"):
+        outs[kern] = run_single_master(
+            val0, tid0, txns, jnp.uint32(2), max_rounds=4,
+            index=[dict(i) for i in index], kernel=kern)
+    (v1, t1, o1, s1), (v2, t2, o2, s2) = outs["jnp"], outs["pallas"]
+    assert jnp.array_equal(v1, v2) and jnp.array_equal(t1, t2)
+    assert _tree_equal(o1, o2)
+    assert _tree_equal(s1, s2)
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=10, deadline=None)
+def test_locate_index_ops_parity(seed):
+    rng = np.random.default_rng(seed)
+    B, P = int(rng.integers(1, 8)), int(rng.integers(1, 4))
+    caps = [int(rng.integers(4, 24)) for _ in range(int(rng.integers(1, 4)))]
+    n_rows = 32 * P
+    txns, index = _random_index_workload(rng, B, P, n_rows, caps,
+                                         conflict_rows=8)
+    K = min(IDX_OPS, M)
+    a = locate_index_ops(index, txns["kind"][:, :K], txns["delta"][:, :K],
+                         n_rows, kernel="jnp")
+    b = locate_index_ops(index, txns["kind"][:, :K], txns["delta"][:, :K],
+                         n_rows, kernel="pallas")
+    assert a["no_addr"] == b["no_addr"]
+    assert _tree_equal({k: v for k, v in a.items() if k != "no_addr"},
+                       {k: v for k, v in b.items() if k != "no_addr"})
+
+
+def test_phantom_abort_parity():
+    """The canonical phantom interleaving (insert into a concurrently
+    scanned range) produces identical abort/commit rounds on both paths."""
+    index = [make_index(IndexSpec("ix", 16), 1)]
+    rows = np.zeros((2, M), np.int32)
+    kinds = np.full((2, M), 0, np.int32)
+    deltas = np.zeros((2, M, C), np.int32)
+    kinds[0, 0] = INSERT_IDX
+    deltas[0, 0, IX_KEY] = 50
+    deltas[0, 0, IX_PROW] = 3
+    kinds[1, 0] = SCAN_READ
+    deltas[1, 0, IX_KEY] = 0
+    deltas[1, 0, IX_HI] = 100
+    txns = jax.tree.map(jnp.asarray, {
+        "valid": np.ones(2, bool), "row": rows, "kind": kinds,
+        "delta": deltas, "user_abort": np.zeros(2, bool)})
+    val0 = jnp.zeros((64, C), jnp.int32)
+    tid0 = jnp.zeros((64,), jnp.uint32)
+    res = {}
+    for kern in ("jnp", "pallas"):
+        res[kern] = run_single_master(val0, tid0, txns, jnp.uint32(1),
+                                      max_rounds=3,
+                                      index=[dict(index[0])], kernel=kern)
+    o1, o2 = res["jnp"][2], res["pallas"][2]
+    assert _tree_equal(o1, o2)
+    # and the phantom really aborted the scanner in round 0 on both
+    assert int(np.asarray(o1["committed_round"])[1]) > 0
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=8, deadline=None)
+def test_partitioned_pallas_parity_random(seed):
+    rng = np.random.default_rng(seed)
+    P, T = int(rng.integers(1, 4)), int(rng.integers(1, 5))
+    caps = [int(rng.integers(4, 16))]
+    R = 64
+    txns, index = _random_index_workload(rng, P * T, P, R, caps,
+                                         conflict_rows=R // 2)
+    ptxn = {k: jnp.asarray(np.asarray(v).reshape((P, T) + v.shape[1:]))
+            for k, v in txns.items()}
+    # rows are partition-local in the partitioned executor
+    val0 = jnp.asarray(rng.integers(0, 50, (P, R, C)), jnp.int32)
+    tid0 = jnp.zeros((P, R), jnp.uint32)
+    outs = {}
+    for kern in ("jnp", "pallas"):
+        outs[kern] = run_partitioned(val0, tid0, ptxn, jnp.uint32(1),
+                                     index=[dict(i) for i in index],
+                                     kernel=kern)
+    (v1, t1, o1, s1), (v2, t2, o2, s2) = outs["jnp"], outs["pallas"]
+    assert jnp.array_equal(v1, v2) and jnp.array_equal(t1, t2)
+    assert _tree_equal(o1, o2)
+    assert _tree_equal(s1, s2)
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=10, deadline=None)
+def test_step_index_ops_parity(seed):
+    rng = np.random.default_rng(seed)
+    P = int(rng.integers(1, 5))
+    caps = [int(rng.integers(4, 24)) for _ in range(int(rng.integers(1, 3)))]
+    txns, index = _random_index_workload(rng, P, P, 32, caps,
+                                         conflict_rows=8)
+    K = min(IDX_OPS, M)
+    a = step_index_ops(index, txns["kind"][:, :K], txns["delta"][:, :K],
+                       kernel="jnp")
+    b = step_index_ops(index, txns["kind"][:, :K], txns["delta"][:, :K],
+                       kernel="pallas")
+    assert _tree_equal(a, b)
+
+
+@given(st.integers(0, 100_000), st.integers(0, 80), st.integers(1, 60))
+@settings(max_examples=15, deadline=None)
+def test_segment_scan_pallas_parity(seed, lo, width):
+    rng = np.random.default_rng(seed)
+    cap = int(rng.integers(4, 64))
+    n_live = int(rng.integers(0, cap))
+    keys = np.full(cap, SENTINEL, np.int32)
+    keys[:n_live] = np.sort(rng.choice(100, n_live, replace=False))
+    a = segment_scan(jnp.asarray(keys), jnp.int32(lo), jnp.int32(lo + width))
+    b = segment_scan(jnp.asarray(keys), jnp.int32(lo), jnp.int32(lo + width),
+                     use_pallas=True)
+    assert _tree_equal(tuple(a), tuple(b))
+
+
+def test_storage_engine_range_scan_pallas():
+    from repro.storage import StorageEngine
+    eng = StorageEngine(2, 8, n_cols=4, index_specs=[IndexSpec("ix", 16)])
+    idx = eng.indexes[0]
+    idx["key"] = idx["key"].at[1, 0].set((1 << 24) | 7)
+    idx["prow"] = idx["prow"].at[1, 0].set(5)
+    a = eng.range_scan("ix", 1, (1 << 24) | 0, (1 << 24) | 100)
+    b = eng.range_scan("ix", 1, (1 << 24) | 0, (1 << 24) | 100,
+                       use_pallas=True)
+    assert _tree_equal(tuple(a), tuple(b))
+    assert bool(b[3][0]) and int(b[0][0]) == ((1 << 24) | 7)

@@ -138,7 +138,9 @@ def test_tpcc_full_mix_through_service():
     client = OpenLoopClient(TPCCSource(cfg, state=state, seed=2),
                             rate_txn_s=400.0)
     svc = TxnService(eng, [client], AdmissionConfig(64, 64),
-                     slots_per_partition=8, master_lanes=8)
+                     slots_per_partition=8, master_lanes=8,
+                     feedback=lambda b, m:      # service-level consume loop
+                     tpcc.apply_consume_feedback(state, b, m))
     from repro.storage import SENTINEL
 
     def live_entries():

@@ -35,7 +35,7 @@ def _apply_batch(key, prow, tid, dels, ins):
     for j, (k, p, t) in enumerate(ins):
         ik[j], ip[j], it[j] = k, p, t
     return segment_apply(key, prow, tid, jnp.asarray(dk), jnp.asarray(ik),
-                         jnp.asarray(ip), jnp.asarray(it))
+                         jnp.asarray(ip), jnp.asarray(it))[:3]
 
 
 @given(st.integers(0, 10_000), st.integers(1, 40))
@@ -121,6 +121,58 @@ def test_storage_engine_point_and_range_ops():
     assert bool(mask[0]) and int(keys[0]) == ((1 << 24) | 7) \
         and int(prows[0]) == 5
     assert not bool(mask[1:].any())
+
+
+def test_segment_overflow_counted():
+    """Capacity-exceeding merges report how many LIVE keys they dropped
+    (largest-first) instead of losing them silently."""
+    cap = 4
+    key = jnp.asarray(np.array([1, 2, 3, SENTINEL], np.int32))
+    prow = jnp.zeros((cap,), jnp.int32)
+    tid = jnp.zeros((cap,), jnp.uint32)
+    ins = np.full(8, SENTINEL, np.int32)
+    ins[:3] = [5, 6, 7]                       # 3 live + 3 inserts > cap
+    k, p, t, ov = segment_apply(
+        key, prow, tid, jnp.full((8,), SENTINEL, jnp.int32),
+        jnp.asarray(ins), jnp.zeros(8, jnp.int32), jnp.zeros(8, jnp.uint32))
+    assert int(ov) == 2                       # keys 6 and 7 dropped
+    assert np.asarray(k).tolist() == [1, 2, 3, 5]
+    # no overflow when the batch fits
+    k, p, t, ov = segment_apply(
+        key, prow, tid, jnp.full((8,), SENTINEL, jnp.int32),
+        jnp.full((8,), SENTINEL, jnp.int32), jnp.zeros(8, jnp.int32),
+        jnp.zeros(8, jnp.uint32))
+    assert int(ov) == 0
+
+
+def _overflow_engine(strict):
+    from repro.core.engine import StarEngine
+    eng = StarEngine(1, 8, indexes=[IndexSpec("tiny", 4)], strict_index=strict)
+    M_, C_ = 16, 10
+    rows = np.zeros((1, 1, M_), np.int32)
+    kinds = np.full((1, 1, M_), READ, np.int32)
+    deltas = np.zeros((1, 1, M_, C_), np.int32)
+    for k in range(6):                         # 6 inserts into capacity 4
+        kinds[0, 0, k] = INSERT_IDX
+        deltas[0, 0, k, IX_KEY] = 10 + k
+    ptxn = {"valid": np.ones((1, 1), bool), "row": rows, "kind": kinds,
+            "delta": deltas, "user_abort": np.zeros((1, 1), bool)}
+    cross = {"valid": np.ones(0, bool), "row": np.zeros((0, M_), np.int32),
+             "kind": np.zeros((0, M_), np.int32),
+             "delta": np.zeros((0, M_, C_), np.int32),
+             "user_abort": np.zeros(0, bool)}
+    return eng, {"ptxn": ptxn, "cross": cross, "n_single": 1, "n_cross": 0}
+
+
+def test_index_overflow_engine_stat_and_strict_mode():
+    import pytest
+    eng, batch = _overflow_engine(strict=False)
+    m = eng.run_epoch(batch)
+    assert m["index_overflow"] == 2 and eng.stats.index_overflow == 2
+    assert eng.replica_consistent(), "overflow drop is replica-identical"
+    eng, batch = _overflow_engine(strict=True)
+    with pytest.raises(RuntimeError, match="overflow"):
+        eng.run_epoch(batch)
 
 
 def test_snapshot_revert_covers_indexes():

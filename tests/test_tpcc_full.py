@@ -129,3 +129,85 @@ def test_full_mix_failure_revert_keeps_indexes_consistent():
     assert np.array_equal(np.asarray(eng.store.indexes[0]["key"]), snap_keys)
     eng.run_epoch(tpcc.make_batch(cfg, state, 192, seed=401))
     assert eng.replica_consistent()
+
+
+def test_aborted_neworders_leak_no_index_entries():
+    """Regression for DESIGN.md desync (a): user-aborted NewOrders used to
+    strand their ring-eviction DELETE_IDX ops, leaking stale index entries.
+    Now an aborted NewOrder draws no o_id and carries no index ops, so with
+    a HIGH abort rate the live index contents still match the host mirror
+    EXACTLY — under the shrunk (no longer 2x) index capacity, in strict
+    overflow mode."""
+    cfg = tpcc.TPCCConfig(n_partitions=1, n_items=400, cust_per_district=40,
+                          order_ring=64, mix="full", delivery_gen_lag=256,
+                          neworder_abort=0.3)
+    state = tpcc.TPCCState(cfg)
+    rng = np.random.default_rng(11)
+    init = tpcc.init_values(cfg, rng, state=state)
+    eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg), strict_index=True)
+    aborted = 0
+    for ep in range(6):
+        batch = tpcc.make_batch(cfg, state, 256, seed=500 + ep)
+        m = eng.run_epoch(batch)
+        tpcc.apply_consume_feedback(state, batch, m)
+        assert eng.replica_consistent()
+    assert eng.stats.user_aborts > 20, "abort path exercised"
+    assert eng.stats.consume_skips == 0
+    assert eng.stats.index_overflow == 0
+    ring = cfg.order_ring
+    # neworder index == host undelivered queues, ZERO stale extras
+    no_live = np.asarray(eng.store.indexes[tpcc.NO_IDX]["key"])[0]
+    no_live = sorted(int(k) for k in no_live[no_live != SENTINEL])
+    host = sorted(tpcc._key_no(0, d, o % (1 << tpcc.D_SHIFT))
+                  for d in range(tpcc.N_DIST)
+                  for o, *_ in state.undelivered[0][d])
+    assert no_live == host
+    # orders_by_id == exactly the retained committed orders per district:
+    # every o_id in [next_o - ring, next_o) was committed (aborts draw none)
+    oid_live = np.asarray(eng.store.indexes[tpcc.OID_IDX]["key"])[0]
+    oid_live = sorted(int(k) for k in oid_live[oid_live != SENTINEL])
+    expect = sorted(
+        tpcc._key_no(0, d, o % (1 << tpcc.D_SHIFT))
+        for d in range(tpcc.N_DIST)
+        for o in range(max(3001, int(state.next_o_id[0, d]) - ring),
+                       int(state.next_o_id[0, d])))
+    assert oid_live == expect, "stale entries leaked by aborted NewOrders"
+    # orders_by_cust carries exactly one entry per retained order too
+    cust_live = np.asarray(eng.store.indexes[tpcc.CUST_IDX]["key"])[0]
+    assert int((cust_live != SENTINEL).sum()) == len(expect)
+
+
+def test_consume_skip_requeues_district():
+    """A Delivery district skipped on EXPECT mismatch is fed back to the
+    host mirror: the claimed order returns to the FRONT of the undelivered
+    queue instead of being silently dropped (counted only)."""
+    cfg, state, eng, _ = _mk(1)
+    for ep in range(2):
+        eng.run_epoch(tpcc.make_batch(cfg, state, 256, seed=600 + ep))
+    # plant a prediction the device cannot satisfy: a bogus oldest order
+    # (o_id 3000 predates the initial 3001, so its key is never indexed)
+    d = next(d for d in range(tpcc.N_DIST) if state.undelivered[0][d])
+    bogus = 3000
+    state.undelivered[0][d].insert(0, (bogus, 0, 0, -10**9, False))
+    skips0 = eng.stats.consume_skips
+    requeued = 0
+    for ep in range(4):
+        batch = tpcc.make_batch(cfg, state, 256, seed=700 + ep)
+        m = eng.run_epoch(batch)
+        requeued += tpcc.apply_consume_feedback(state, batch, m)
+        assert eng.replica_consistent()
+        if requeued:
+            break
+    assert eng.stats.consume_skips > skips0, "mismatch produced a skip"
+    assert requeued >= 1, "skipped district was re-queued, not just counted"
+    assert state.undelivered[0][d][0][0] == bogus, \
+        "the claimed order is back at the front of its district queue"
+
+
+def test_index_capacity_shrunk_headroom():
+    """The 2x abort-leak headroom is gone: capacity is one slot per
+    retained order plus small starvation headroom."""
+    cfg = tpcc.TPCCConfig(n_partitions=1, order_ring=64, mix="full")
+    assert cfg.index_capacity < 2 * tpcc.N_DIST * cfg.order_ring
+    assert cfg.index_capacity >= tpcc.N_DIST * cfg.order_ring
