@@ -6,16 +6,17 @@ Prints ``name,us_per_call,derived`` CSV rows.
 import sys
 
 from benchmarks import (fig03_model, fig10_improvement, fig11_throughput,
-                        fig12_latency, fig13_calvin, fig14_overhead,
-                        fig15_replication, fig16_scalability, roofline_report)
+                        fig12_latency, fig13_calvin, fig13_scalability,
+                        fig14_overhead, fig15_replication, fig16_scalability,
+                        roofline_report)
 from benchmarks.common import emit
 
 ALL = {
     "fig03": fig03_model, "fig10": fig10_improvement,
     "fig11": fig11_throughput, "fig12": fig12_latency,
-    "fig13": fig13_calvin, "fig14": fig14_overhead,
-    "fig15": fig15_replication, "fig16": fig16_scalability,
-    "roofline": roofline_report,
+    "fig13": fig13_calvin, "fig13_scal": fig13_scalability,
+    "fig14": fig14_overhead, "fig15": fig15_replication,
+    "fig16": fig16_scalability, "roofline": roofline_report,
 }
 
 

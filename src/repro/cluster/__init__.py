@@ -1,0 +1,12 @@
+"""Distributed cluster runtime: the full online pipeline over the device
+mesh — node-sharded ingest/admission/batching, mesh-wide epoch fences with
+coordinator-driven phase switching, asymmetric replication (f full-replica
+nodes on the single-master value stream, k partial nodes replaying the
+partitioned op stream), live failure injection, and §4.5 recovery with
+per-worker write-ahead logs + fuzzy checkpoints."""
+from repro.cluster.coordinator import Coordinator, RecoveryEvent
+from repro.cluster.runtime import ClusterRuntime
+from repro.cluster.service import ClusterTxnService
+
+__all__ = ["Coordinator", "RecoveryEvent", "ClusterRuntime",
+           "ClusterTxnService"]

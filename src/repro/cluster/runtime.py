@@ -1,0 +1,183 @@
+"""ClusterRuntime: the distributed STAR runtime over the device mesh.
+
+Composes the pieces the paper's cluster runs as separate processes:
+
+* :class:`~repro.core.cluster.ClusterStarEngine` — the mesh execution
+  (sharded partitioned phase, psum fence, single-master phase on the full
+  replica, value scatter-back);
+* :class:`~repro.cluster.coordinator.Coordinator` — the §4.5 view service
+  owning the :class:`PhaseController` (phase switching at the fence) and
+  the failure/recovery state machine;
+* :class:`~repro.db.wal.Durability` — per-NODE write-ahead logs (node n
+  logs its ``ppn`` partitions' committed streams; the master's value
+  stream is split to each owner's log) flushed at the commit fence, with
+  fuzzy checkpoints on cadence;
+* :class:`~repro.core.fault.FaultInjector` — kills nodes at chosen epochs.
+
+Failure semantics (simulation contract, see DESIGN.md "Cluster runtime"):
+a node killed during epoch e misses e's fence, so e never commits — the
+runtime runs the doomed epoch to the fence (``commit=False``; its wall
+time is real lost work), reverts every replica to epoch e-1 via the
+two-version snapshots, and physically destroys what died with the node:
+the node's primary partition block — UNLESS a sibling partial replica
+home survives (the surviving copy stands in for the block) — and the full
+replica when the node held one.  The coordinator classifies the failure
+(four ``RecoveryCase``s), restores lost blocks from the surviving full
+replica (donor copy), rebuilds a dead full replica from the complete
+partial set (re-replication all-gather), or reloads checkpoint+logs from
+disk in the UNAVAILABLE case, re-masters orphaned partitions, revives the
+nodes (§4.5.3 copy + catch-up), re-executes the reverted epoch, and
+reports the measured recovery latency in the epoch metrics.
+
+``run_epoch`` keeps the ``StarEngine.run_epoch`` metric surface, so
+``service.TxnService`` (and :class:`ClusterTxnService`) drive the mesh
+runtime unchanged.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.cluster.coordinator import Coordinator, RecoveryEvent
+from repro.core.cluster import ClusterStarEngine
+from repro.core.fault import ClusterConfig, FaultInjector, RecoveryCase
+from repro.db import wal as walmod
+
+
+class ClusterRuntime:
+    def __init__(self, mesh, n_partitions: int, rows_per_partition: int,
+                 n_cols: int = 10, init_val=None, max_rounds: int = 16,
+                 iteration_ms: float = 10.0, f: int = 1,
+                 replicas_per_partition: int = 2,
+                 adaptive_epoch: bool = False,
+                 durability: walmod.Durability | None = None,
+                 injector: FaultInjector | None = None):
+        self.eng = ClusterStarEngine(mesh, n_partitions, rows_per_partition,
+                                     n_cols=n_cols, init_val=init_val,
+                                     max_rounds=max_rounds,
+                                     iteration_ms=iteration_ms,
+                                     adaptive_epoch=adaptive_epoch)
+        N = self.eng.n_nodes
+        self.topology = ClusterConfig(
+            f=min(f, N), k=N, n_partitions=n_partitions,
+            replicas_per_partition=min(replicas_per_partition, N),
+            ppn=self.eng.ppn)
+        self.coordinator = Coordinator(self.topology, self.eng.controller)
+        self.injector = injector
+        self.durability = durability
+        if durability is not None:
+            assert durability.n_workers == N, (durability.n_workers, N)
+            durability.attach(np.asarray(self.eng.part_val),
+                              np.asarray(self.eng.part_tid))
+
+    # -- StarEngine-compatible surface ----------------------------------
+    @property
+    def P(self):
+        return self.eng.P
+
+    @property
+    def R(self):
+        return self.eng.R
+
+    @property
+    def C(self):
+        return self.eng.C
+
+    @property
+    def controller(self):
+        return self.eng.controller
+
+    @property
+    def stats(self):
+        return self.eng.stats
+
+    @property
+    def epoch(self):
+        return self.eng.epoch
+
+    @property
+    def n_nodes(self):
+        return self.eng.n_nodes
+
+    def replica_consistent(self) -> bool:
+        return self.eng.consistent()
+
+    # ------------------------------------------------------------------
+    def run_epoch(self, batch, ingest=None) -> dict:
+        kills = (self.injector.poll(self.epoch)
+                 if self.injector is not None else set())
+        if not kills:
+            m = self.eng.run_epoch(batch, ingest=ingest)
+            self._commit_durable()
+            return m
+        # ---- failure epoch: the phases run, the fence detects the miss —
+        # nothing commits, the doomed wall time is real lost work
+        self.eng.run_epoch(batch, ingest=ingest, commit=False)
+        t0 = time.perf_counter()
+        event = self._recover(kills)
+        event.t_recovery_s = time.perf_counter() - t0
+        self.coordinator.recovered(event, set(kills))
+        self.injector.revive(kills)
+        # ---- resume: re-execute the reverted epoch (ingest already ran)
+        m = self.eng.run_epoch(batch)
+        self._commit_durable()
+        m["recovery"] = event
+        return m
+
+    # ------------------------------------------------------------------
+    def _recover(self, kills: set) -> RecoveryEvent:
+        """§4.5: revert, classify, restore, re-master."""
+        eng, coord = self.eng, self.coordinator
+        epoch = self.epoch
+        plan = coord.fence_missed(epoch, kills)
+        failed = set(range(self.topology.n_nodes)) - coord.alive
+        # revert every replica to the last committed epoch (§4.5.2)
+        eng.revert_to_snapshot()
+        # physical memory loss: a killed node's primary block survives in
+        # the cluster only while a sibling partial home lives; full
+        # replicas die with their node
+        lost = set(coord.lost_blocks(failed)) & set(kills)
+        full_dead = all(n in failed for n in range(self.topology.f))
+        for n in sorted(lost):
+            eng.scribble_block(n)
+        if full_dead:
+            eng.scribble_full()
+        reloaded = False
+        if plan.case in (RecoveryCase.PHASE_SWITCHING,
+                         RecoveryCase.FULL_ONLY):
+            # donor copy from the surviving full replica (§4.5.3 case 1/3):
+            # every killed node re-copies its block on rejoin, lost or not
+            eng.restore_nodes_from_full(sorted(kills))
+        elif plan.case is RecoveryCase.FALLBACK_DIST_CC:
+            # no full replica left; the partial set is complete —
+            # re-replicate a full copy from the partials (§4.5.3 case 2)
+            eng.rebuild_full_from_partials()
+        else:                                   # UNAVAILABLE: disk or halt
+            if self.durability is None:
+                raise RuntimeError(
+                    "cluster UNAVAILABLE (no full replica, incomplete "
+                    "partial set) and no durability attached: halt")
+            val, tid, e_c = walmod.recover(self.durability.dir)
+            eng.load_committed(val, tid)
+            reloaded = True
+        return RecoveryEvent(
+            epoch=epoch, failed=tuple(sorted(kills)), case=plan.case,
+            run_mode=plan.run_mode, reverted_to=plan.revert_to_epoch,
+            view=coord.view, lost_blocks=tuple(sorted(lost)),
+            reloaded_from_disk=reloaded)
+
+    # ------------------------------------------------------------------
+    def _commit_durable(self):
+        """Append the committed epoch's streams to the per-node WALs and
+        flush (the disk part of the group commit); checkpoint on cadence."""
+        if self.durability is None:
+            return
+        d, eng = self.durability, self.eng
+        logs = eng._last_logs or {}
+        d.log_epoch_streams(logs.get("part"), logs.get("sm"), eng.R, eng.C,
+                            np.arange(eng.P) // eng.ppn)
+        snap = eng._snap
+        d.commit_epoch(eng.epoch - 1, np.asarray(snap["part_val"]),
+                       np.asarray(snap["part_tid"]))
+        eng._last_logs = None

@@ -4,10 +4,11 @@ The single-process :class:`repro.core.engine.StarEngine` validates protocol
 semantics; this module is the *cluster* form — the shape that runs on real
 hardware:
 
-* database partitions sharded over a 1-D ``part`` mesh axis (one device ==
-  one paper "node" holding its partition = the partial replicas);
+* database partitions sharded over a 1-D ``part`` mesh axis — one device is
+  one paper "node" holding a contiguous block of ``ppn = P / n_nodes``
+  primary partitions (the partial replicas);
 * **partitioned phase**: ``shard_map`` with NO collectives inside — each
-  device runs its partition's queue serially (H-Store semantics), exactly
+  device runs its partitions' queues serially (H-Store semantics), exactly
   the paper's zero-coordination claim, verified by asserting the phase's
   HLO contains no collective ops;
 * **replication fence**: a ``psum`` barrier carrying the per-device commit
@@ -19,10 +20,21 @@ hardware:
   write stream is scattered back to the partition owners with the Thomas
   write rule.
 
+Beyond the mesh execution, the engine carries what the cluster runtime
+(`repro.cluster`) needs for §4.5 fault tolerance: two-version snapshots at
+the epoch fence (revert on failure), node-granular memory loss + donor-copy
+restore, full-replica rebuild from the partial set, and per-node commit /
+fence-wait telemetry so fig12/fig13 can report skew.  Its ``run_epoch``
+returns the same metric surface as ``StarEngine.run_epoch`` (absolute fence
+stamps, per-slot commit masks, ``t_ingest_s`` for the double-buffered
+ingest hook), so ``service.TxnService`` drives either engine unchanged.
+
 On this host the mesh axes are 1-8 forced CPU devices (tests); the same
 code paths lower for a TPU slice.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -33,41 +45,79 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import replication as repl
+from repro.core.engine import EngineStats
 from repro.core.partitioned import run_partitioned
+from repro.core.phase_switch import PhaseController
 from repro.core.single_master import run_single_master
 
 
+def _pad_pow2(tree, axis: int):
+    """Pad a txn pytree to the next power of two along `axis` so epoch
+    shapes stay stable across batches (no per-epoch recompilation)."""
+    def pad(a):
+        n = a.shape[axis]
+        target = 1 << max(0, (n - 1).bit_length())
+        if target == n:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, target - n)
+        return np.pad(np.asarray(a), widths)
+    return jax.tree.map(pad, tree)
+
+
 class ClusterStarEngine:
-    """f=1 full replica (the master's complete copy) + k partial replicas
-    (the sharded primary partitions)."""
+    """f full replicas (the designated master's complete copies) + the
+    node-sharded partial replicas (contiguous ``ppn`` partitions per
+    device/node)."""
 
     def __init__(self, mesh, n_partitions: int, rows_per_partition: int,
-                 n_cols: int = 10, init_val=None, max_rounds: int = 16):
+                 n_cols: int = 10, init_val=None, max_rounds: int = 16,
+                 iteration_ms: float = 10.0, adaptive_epoch: bool = False):
         assert "part" in mesh.axis_names
         self.mesh = mesh
+        self.n_nodes = int(mesh.shape["part"])
+        assert n_partitions % self.n_nodes == 0, \
+            (n_partitions, self.n_nodes)
+        self.ppn = n_partitions // self.n_nodes
         self.P, self.R, self.C = n_partitions, rows_per_partition, n_cols
         val = (jnp.asarray(init_val, jnp.int32) if init_val is not None
                else jnp.zeros((self.P, self.R, self.C), jnp.int32))
         tid = jnp.zeros((self.P, self.R), jnp.uint32)
-        shard = NamedSharding(mesh, P("part"))
+        self._shard = NamedSharding(mesh, P("part"))
+        # f=1 asymmetric replication, physically: the full replica lives on
+        # the DESIGNATED MASTER's device only (node 0) — replicating it
+        # across the mesh would execute the op replay and the whole
+        # single-master phase redundantly on every device (N x the CPU for
+        # f=1 semantics)
+        self._master_dev = jax.sharding.SingleDeviceSharding(
+            mesh.devices.flat[0])
         # partial replicas: partition-sharded primary copy
-        self.part_val = jax.device_put(val, shard)
-        self.part_tid = jax.device_put(tid, shard)
-        # full replica (master's complete copy) — replicated
-        full = NamedSharding(mesh, P())
-        self.full_val = jax.device_put(val, full)
-        self.full_tid = jax.device_put(tid, full)
+        self.part_val = jax.device_put(val, self._shard)
+        self.part_tid = jax.device_put(tid, self._shard)
+        # full replica (master's complete copy) — on the master node
+        self.full_val = jax.device_put(val, self._master_dev)
+        self.full_tid = jax.device_put(tid, self._master_dev)
         self.epoch = 1
         self.max_rounds = max_rounds
+        self.controller = PhaseController(e_ms=iteration_ms,
+                                          adaptive=adaptive_epoch)
+        self.stats = EngineStats()
+        # per-node telemetry (fig12/fig13 skew): committed txns and modeled
+        # fence wait (the slowest node sets the fence; everyone else waits)
+        self.node_committed = np.zeros(self.n_nodes, np.int64)
+        self.node_fence_wait_s = np.zeros(self.n_nodes)
+        self._last_logs = None        # {"part": ..., "sm": ...} for WALs
         self._build()
+        self._snap = self._state()
 
     def _build(self):
-        mesh, Pn = self.mesh, self.P
+        mesh = self.mesh
 
         def part_phase(val, tid, ptxn, epoch):
             # NO collectives inside: single-partition txns need none (§4.1)
             v, t, out, stats = run_partitioned(val, tid, ptxn, epoch)
-            return v, t, out["log"], stats["committed"][None]
+            return v, t, out["log"], out["committed"], \
+                stats["committed"][None]
 
         pspec = P("part")
         txn_spec = {k: P("part") for k in
@@ -78,79 +128,270 @@ class ClusterStarEngine:
             out_specs=(pspec, pspec,
                        {k: P("part") for k in
                         ("row", "val", "tid", "write", "kind", "delta")},
-                       P("part"))))
+                       pspec, pspec)))
+        self._bcast = NamedSharding(mesh, P())
 
         def fence(commit_counts):
             # §4.3: nodes exchange commit statistics; the psum is the barrier
             return jax.lax.psum(commit_counts, "part")
 
-        self._fence = jax.jit(shard_map(
+        self._fence_barrier = jax.jit(shard_map(
             fence, mesh, in_specs=(P("part"),), out_specs=P()))
 
-        # single-master phase runs on the replicated full copy (master's
-        # view); jit with replicated shardings — no 2PC, no cross-device
-        # coordination during execution
+        # single-master phase runs on the master's device only (its full
+        # copy lives there) — no 2PC, no cross-device coordination during
+        # execution; the write stream ships back through _scatter
         self._sm = jax.jit(
             lambda v, t, txns, epoch: run_single_master(
-                v, t, txns, epoch, max_rounds=self.max_rounds),
-            static_argnames=())
+                v, t, txns, epoch, max_rounds=self.max_rounds))
 
-        self._thomas_flat = jax.jit(repl.thomas_apply_batch)
+        ppn, R, C = self.ppn, self.R, self.C
 
         def scatter_back(part_val, part_tid, rows, vals, tids):
             """Apply the master's write stream to the partition owners:
             each device filters the global stream to its own row range."""
             pid = jax.lax.axis_index("part")
-            lo = pid * self.R
-            local = (rows >= lo) & (rows < lo + self.R)
+            lo = pid * ppn * R
+            local = (rows >= lo) & (rows < lo + ppn * R)
             lrows = jnp.where(local, rows - lo, -1)
-            v, t, _ = repl.thomas_apply(part_val[0], part_tid[0], lrows,
-                                        vals, tids)
-            return v[None], t[None]
+            v, t, _ = repl.thomas_apply(part_val.reshape(ppn * R, C),
+                                        part_tid.reshape(ppn * R),
+                                        lrows, vals, tids)
+            return v.reshape(ppn, R, C), t.reshape(ppn, R)
 
         self._scatter = jax.jit(shard_map(
             scatter_back, mesh,
             in_specs=(pspec, pspec, P(), P(), P()),
             out_specs=(pspec, pspec)))
 
+        # ordered op-stream replay onto the full replica — jitted once;
+        # an eager vmap here would retrace EVERY epoch (host-bound)
+        self._replay_full = jax.jit(jax.vmap(repl.replay_operations))
+
     # ------------------------------------------------------------------
-    def run_epoch(self, batch) -> dict:
+    def run_epoch(self, batch, ingest=None, commit=True) -> dict:
+        """StarEngine-compatible epoch: partitioned phase (sharded, zero
+        collectives), psum fence, single-master phase on the full copy,
+        value scatter-back, epoch fence + two-version snapshot commit.
+
+        ingest: optional zero-arg callable overlapped with the partitioned
+        phase's device execution (double-buffered host batch formation).
+        commit=False runs the phases up TO the epoch fence but never
+        commits (no snapshot, no epoch advance, no stats) — the cluster
+        runtime uses it for an epoch whose fence a failed node will miss:
+        everything the phases wrote is discarded by the §4.5 revert."""
         epoch_u = jnp.uint32(self.epoch)
-        ptxn = jax.tree.map(jnp.asarray, batch["ptxn"])
-        cross = jax.tree.map(jnp.asarray, batch["cross"])
+        ptxn = jax.tree.map(jnp.asarray, _pad_pow2(batch["ptxn"], 1))
+        cross = jax.tree.map(jnp.asarray, _pad_pow2(batch["cross"], 0))
 
         # ---- partitioned phase (no collectives) -------------------------
-        self.part_val, self.part_tid, log, committed = self._part(
+        t0 = time.perf_counter()
+        pv, pt, plog, p_committed, counts = self._part(
             self.part_val, self.part_tid, ptxn, epoch_u)
+        t_ingest = 0.0
+        if ingest is not None:       # overlap host ingest with device exec
+            ti = time.perf_counter()
+            ingest()
+            t_ingest = time.perf_counter() - ti
+        tb = time.perf_counter()
+        jax.block_until_ready(pv)
+        t1 = time.perf_counter()
+        t_part = max(t1 - t0 - t_ingest, t1 - tb)
+        self.part_val, self.part_tid = pv, pt
         # replicate the ordered op streams to the full replica (hybrid: the
-        # partitioned phase ships operations, §5)
-        fv, ft = jax.vmap(repl.replay_operations)(
-            jnp.asarray(self.full_val), jnp.asarray(self.full_tid), log)
+        # partitioned phase ships OPERATIONS, §5) — the device_put is the
+        # op-stream ship from every node to the master's device
+        plog_m = jax.device_put(plog, self._master_dev)
+        fv, ft = self._replay_full(self.full_val, self.full_tid, plog_m)
         self.full_val, self.full_tid = fv, ft
 
-        # ---- fence 1 (commit-statistics barrier) ------------------------
-        n_single = int(self._fence(committed)[0])
+        # ---- fence 1 (commit-statistics psum barrier) --------------------
+        tf0 = time.perf_counter()
+        n_single = int(self._fence_barrier(counts)[0])
+        t_fence1 = time.perf_counter()
 
         # ---- single-master phase on the full copy ------------------------
-        n_cross = 0
-        if cross["row"].shape[0] > 0:
+        # B from the RAW batch: padding turns an empty cross batch into 1-2
+        # invalid lanes, which would run the full OCC program for nothing
+        # (service batches always carry fixed non-zero lane counts)
+        t0 = time.perf_counter()
+        B = int(batch["cross"]["row"].shape[0])
+        slog = None
+        if B > 0:
             flat_v = self.full_val.reshape(self.P * self.R, self.C)
             flat_t = self.full_tid.reshape(self.P * self.R)
-            fv, ft, out, stats = self._sm(flat_v, flat_t, cross, epoch_u)
-            n_cross = int(stats["committed"])
+            fv, ft, out, sstats = self._sm(flat_v, flat_t, cross, epoch_u)
+            jax.block_until_ready(fv)
+            n_cross = int(sstats["committed"])
             self.full_val = fv.reshape(self.P, self.R, self.C)
             self.full_tid = ft.reshape(self.P, self.R)
             # value-replicate the master's writes back to partition owners
-            w = out["log"]["write"].reshape(-1)
-            rows = jnp.where(w, out["log"]["row"].reshape(-1), -1)
-            vals = out["log"]["val"].reshape(-1, self.C)
-            tids = out["log"]["tid"].reshape(-1)
+            # (the device_put broadcast is the value-stream ship, §5)
+            slog = out["log"]
+            w = slog["write"].reshape(-1)
+            rows = jax.device_put(
+                jnp.where(w, slog["row"].reshape(-1), -1), self._bcast)
+            vals = jax.device_put(slog["val"].reshape(-1, self.C),
+                                  self._bcast)
+            tids = jax.device_put(slog["tid"].reshape(-1), self._bcast)
             self.part_val, self.part_tid = self._scatter(
                 self.part_val, self.part_tid, rows, vals, tids)
+            c_committed = np.asarray(out["committed"])
+            starved = int(sstats["starved"])
+            retries = int(sstats["retries"])
+            aborts = int(sstats["user_aborts"])
+        else:
+            n_cross = starved = retries = aborts = 0
+            c_committed = np.zeros(0, bool)
+        t_sm = time.perf_counter() - t0
+        t_sm_round = t_sm / self.max_rounds if B > 0 else 0.0
 
-        # ---- fence 2: epoch boundary -------------------------------------
-        self.epoch += 1
-        return {"committed_single": n_single, "committed_cross": n_cross}
+        # ---- fence 2: epoch boundary + two-version snapshot --------------
+        # the fence's contract is "every outstanding stream applied": wait
+        # for the master's op-stream replay and the value scatter-back HERE
+        # (their time is fence time) — otherwise the master device's replay
+        # backlog silently delays the NEXT epoch's partitioned phase and
+        # pollutes its measurement
+        tf2 = time.perf_counter()
+        jax.block_until_ready((self.full_val, self.part_val))
+        p_committed = np.asarray(p_committed)                  # (P, T)
+        node_c = p_committed.sum(1).reshape(self.n_nodes, -1).sum(1)
+        # modeled fence wait: the slowest node's phase time sets the fence;
+        # a node's own busy time is proxied by its committed share
+        cmax = int(node_c.max()) if node_c.size else 0
+        wait = (t_part * (1.0 - node_c / cmax) if cmax > 0
+                else np.zeros(self.n_nodes))
+        tau_p = tau_s = 0.0
+        if commit:
+            self.snapshot_commit()
+            self.epoch += 1
+            self._last_logs = {"part": plog, "sm": slog}
+            self.node_committed += node_c
+            self.node_fence_wait_s += wait
+            self.controller.observe_fence_wait(float(wait.max()) * 1e3)
+            self.controller.observe("partitioned", n_single, t_part)
+            self.controller.observe("single", n_cross, t_sm,
+                                    frac_cross=n_cross
+                                    / max(n_cross + n_single, 1))
+            tau_p, tau_s = self.controller.plan()
+        t_fence2 = time.perf_counter()
+        if commit:
+            s = self.stats
+            s.epochs += 1
+            s.committed_single += n_single
+            s.committed_cross += n_cross
+            s.user_aborts += aborts
+            s.retries += retries
+            s.part_time_s += t_part
+            s.sm_time_s += t_sm
+            s.sm_rounds += self.max_rounds if B > 0 else 0
+            s.fences += 2
+            s.fence_time_s += (t_fence1 - tf0) + (t_fence2 - tf2)
+
+        return {"committed_single": n_single, "committed_cross": n_cross,
+                "tau_p_ms": tau_p, "tau_s_ms": tau_s,
+                "t_part_s": t_part, "t_sm_s": t_sm,
+                "t_sm_round_s": t_sm_round, "t_ingest_s": t_ingest,
+                "t_fence1_s": t_fence1, "t_fence2_s": t_fence2,
+                "t_fence_net_s": 0.0,
+                "p_committed": p_committed, "c_committed": c_committed,
+                "starved": starved,
+                "node_committed": node_c,
+                "node_fence_wait_s": wait}
+
+    # ------------------------------------------------------------------
+    # two-version snapshots + node-granular state surgery (§4.5)
+    # ------------------------------------------------------------------
+    def _state(self):
+        return {"part_val": self.part_val, "part_tid": self.part_tid,
+                "full_val": self.full_val, "full_tid": self.full_tid}
+
+    def snapshot_commit(self):
+        self._snap = self._state()
+
+    def revert_to_snapshot(self):
+        """Discard the in-flight epoch on every replica (two-version
+        records, §4.5.2)."""
+        s = self._snap
+        self.part_val, self.part_tid = s["part_val"], s["part_tid"]
+        self.full_val, self.full_tid = s["full_val"], s["full_tid"]
+
+    def node_slice(self, node: int) -> slice:
+        return slice(node * self.ppn, (node + 1) * self.ppn)
+
+    def scribble_block(self, node: int):
+        """Simulate loss of the node's partition block — in BOTH the
+        working state and the snapshot (a dead node's snapshot dies with
+        it) — so recovery is only correct if it really restores the block
+        from a surviving source (full replica or disk).  Callers invoke
+        this only when NO partial replica home of the block survives; a
+        surviving sibling copy is bit-equal, so the un-scribbled array
+        stands in for it."""
+        sl = self.node_slice(node)
+        junk_v = jnp.int32(-0x5A5A5A5)
+        junk_t = jnp.uint32(0xDEAD)
+        self.part_val = self.part_val.at[sl].set(junk_v)
+        self.part_tid = self.part_tid.at[sl].set(junk_t)
+        snap = dict(self._snap)
+        snap["part_val"] = snap["part_val"].at[sl].set(junk_v)
+        snap["part_tid"] = snap["part_tid"].at[sl].set(junk_t)
+        self._snap = snap
+
+    def scribble_full(self):
+        """Simulate loss of every full replica (all f holders dead)."""
+        junk_v = jnp.int32(-0x5A5A5A5)
+        junk_t = jnp.uint32(0xDEAD)
+        self.full_val = self.full_val.at[:].set(junk_v)
+        self.full_tid = self.full_tid.at[:].set(junk_t)
+        snap = dict(self._snap)
+        snap["full_val"] = snap["full_val"].at[:].set(junk_v)
+        snap["full_tid"] = snap["full_tid"].at[:].set(junk_t)
+        self._snap = snap
+
+    def restore_nodes_from_full(self, nodes):
+        """§4.5.3 case-1/3 donor copy: rebuild the nodes' partition blocks
+        from the (surviving) full replica's committed snapshot, then make
+        that the nodes' own committed version.  (Recovery path: the copy
+        goes through the host — the full replica lives on the master's
+        device, the blocks on the owners'.)"""
+        snap = dict(self._snap)
+        pv = np.asarray(snap["part_val"]).copy()
+        pt = np.asarray(snap["part_tid"]).copy()
+        fv = np.asarray(snap["full_val"])
+        ft = np.asarray(snap["full_tid"])
+        for n in nodes:
+            sl = self.node_slice(n)
+            pv[sl] = fv[sl]
+            pt[sl] = ft[sl]
+        snap["part_val"] = jax.device_put(jnp.asarray(pv), self._shard)
+        snap["part_tid"] = jax.device_put(jnp.asarray(pt), self._shard)
+        self._snap = snap
+        self.part_val, self.part_tid = snap["part_val"], snap["part_tid"]
+        self.full_val = snap["full_val"]
+        self.full_tid = snap["full_tid"]
+
+    def rebuild_full_from_partials(self):
+        """§4.5.3 case 2: every partition still has a live partial copy but
+        no full replica survives — re-replicate a full copy by gathering
+        the committed partial set (the bootstrap all-gather, again)."""
+        snap = dict(self._snap)
+        fv = jax.device_put(jnp.asarray(snap["part_val"]), self._master_dev)
+        ft = jax.device_put(jnp.asarray(snap["part_tid"]), self._master_dev)
+        snap["full_val"], snap["full_tid"] = fv, ft
+        self._snap = snap
+        self.part_val, self.part_tid = snap["part_val"], snap["part_tid"]
+        self.full_val, self.full_tid = fv, ft
+
+    def load_committed(self, val, tid):
+        """§4.5.1 UNAVAILABLE reload: install a recovered committed state
+        (checkpoint + replayed logs) on every replica."""
+        val = jnp.asarray(val, jnp.int32).reshape(self.P, self.R, self.C)
+        tid = jnp.asarray(tid, jnp.uint32).reshape(self.P, self.R)
+        self.part_val = jax.device_put(val, self._shard)
+        self.part_tid = jax.device_put(tid, self._shard)
+        self.full_val = jax.device_put(val, self._master_dev)
+        self.full_tid = jax.device_put(tid, self._master_dev)
+        self.snapshot_commit()
 
     # ------------------------------------------------------------------
     def consistent(self) -> bool:
@@ -163,7 +404,7 @@ class ClusterStarEngine:
 
     def partitioned_phase_has_no_collectives(self, batch) -> bool:
         """Compile-time proof of the §4.1 zero-coordination claim."""
-        ptxn = jax.tree.map(jnp.asarray, batch["ptxn"])
+        ptxn = jax.tree.map(jnp.asarray, _pad_pow2(batch["ptxn"], 1))
         txt = self._part.lower(self.part_val, self.part_tid, ptxn,
                                jnp.uint32(1)).compile().as_text()
         return not any(op in txt for op in

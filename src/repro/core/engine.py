@@ -64,12 +64,19 @@ class StarEngine:
                  iteration_ms: float = 10.0,
                  indexes: list[IndexSpec] | None = None,
                  net: Network | None = None, adaptive_epoch: bool = False,
-                 kernel: str = "jnp", strict_index: bool = False):
+                 kernel: str = "jnp", strict_index: bool = False,
+                 durability=None):
         """kernel: "jnp" (reference executors) or "pallas" (fused OCC
         kernels, interpreted off-TPU) — bit-identical results either way.
         strict_index: raise instead of counting when an ordered-index
         segment overflows its capacity (silently dropping the largest key
-        otherwise — see storage.index.segment_apply)."""
+        otherwise — see storage.index.segment_apply).
+        durability: optional ``db.wal.Durability`` — committed epochs
+        append their value streams to per-worker write-ahead logs (flushed
+        inside the commit fence) with fuzzy checkpoints on a cadence;
+        ``db.wal.recover`` then rebuilds the exact committed state from
+        disk (§4.5.1's UNAVAILABLE case).  Records only: ordered indexes
+        are not yet log-durable, so the two are mutually exclusive."""
         P, R, C = n_partitions, rows_per_partition, n_cols
         self.P, self.R, self.C = P, R, C
         assert kernel in ("jnp", "pallas"), kernel
@@ -90,6 +97,11 @@ class StarEngine:
         self.controller = PhaseController(e_ms=iteration_ms,
                                           adaptive=adaptive_epoch)
         self.net = net or Network()
+        self.durability = durability
+        if durability is not None:
+            assert not self.has_index, \
+                "durability covers record streams only (no index WAL yet)"
+            durability.attach(self.store.val, self.store.tid)
         self.stats = EngineStats()
         self._jit_part = jax.jit(run_partitioned,
                                  static_argnames=("kernel",))
@@ -244,7 +256,9 @@ class StarEngine:
 
         # ---- fence 2: epoch boundary ------------------------------------
         t0 = time.perf_counter()
-        t_net2 = self._fence(vb)
+        if self.durability is not None:
+            self._log_epoch(part_out["log"], sm_out["log"] if B > 0 else None)
+        t_net2 = self._fence(vb, commit_epoch=self.epoch)
         self.epoch += 1
         t_fence2 = time.perf_counter()
         t_f2 = t_fence2 - t0
@@ -303,19 +317,33 @@ class StarEngine:
         return m
 
     # ------------------------------------------------------------------
-    def _fence(self, stream_bytes: int = 0) -> float:
+    def _fence(self, stream_bytes: int = 0, commit_epoch=None) -> float:
         """Replication fence: all outstanding writes applied, then the commit
         point. In-process the streams are applied synchronously above, so the
         fence is the snapshot promotion + epoch bookkeeping; the inter-node
         cost — shipping this epoch's stream bytes through the NIC plus two
         barrier round trips — is modeled through the Network envelope and
-        returned (reported as ``t_fence_net_s``), not slept."""
+        returned (reported as ``t_fence_net_s``), not slept.
+
+        ``commit_epoch`` (fence 2 only, when durability is attached) fsyncs
+        every worker's write-ahead log inside the fence — the disk group
+        commit — and checkpoints the committed state on cadence."""
         self.store.snapshot_commit()
         self.replica_store.snapshot_commit()
         self.stats.fences += 1
+        if commit_epoch is not None and self.durability is not None:
+            self.durability.commit_epoch(commit_epoch, self.store.val,
+                                         self.store.tid)
         t_net = self.net.transfer_s(stream_bytes) + 2 * self.net.rtt_s
         self.stats.fence_net_s += t_net
         return t_net
+
+    def _log_epoch(self, plog, slog):
+        """Append this epoch's committed value streams to the per-worker
+        WALs (worker w owns partitions p ≡ w mod n_workers)."""
+        d = self.durability
+        d.log_epoch_streams(plog, slog, self.R, self.C,
+                            np.arange(self.P) % d.n_workers)
 
     def replica_consistent(self) -> bool:
         return self.store.equals(self.replica_store)

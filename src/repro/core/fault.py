@@ -13,7 +13,7 @@ cases (§4.5.3).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from enum import Enum
 
 
@@ -26,18 +26,49 @@ class RecoveryCase(Enum):
 
 @dataclass(frozen=True)
 class ClusterConfig:
+    """Replica placement.  Two layouts:
+
+    * disjoint (default, ``ppn=None``): nodes 0..f-1 hold ONLY full
+      replicas; nodes f..f+k-1 hold the partial replicas, partitions
+      hashed across them — ``n_nodes = f + k``;
+    * co-located contiguous (``ppn`` set — the paper's deployment and the
+      cluster runtime's device mesh): every node holds a contiguous block
+      of ``ppn`` primary partitions (node = partition // ppn, matching
+      shard_map's contiguous sharding), nodes 0..f-1 ADDITIONALLY hold
+      full replicas, and each partition's secondary partial copies land on
+      the next nodes round-robin — ``n_nodes = k``.
+    """
     f: int                        # nodes with full replicas
     k: int                        # nodes with partial replicas
     n_partitions: int
     replicas_per_partition: int = 2
+    ppn: int | None = None        # partitions per node (co-located layout)
+
+    def __post_init__(self):
+        if self.ppn is not None:
+            assert self.k * self.ppn == self.n_partitions, \
+                (self.k, self.ppn, self.n_partitions)
+            assert 0 < self.f <= self.k
 
     @property
     def n_nodes(self):
-        return self.f + self.k
+        return self.k if self.ppn is not None else self.f + self.k
+
+    def primary_of(self, partition: int) -> int:
+        """The node that masters ``partition`` in the partitioned phase."""
+        if self.ppn is not None:
+            return partition // self.ppn
+        return self.f + partition % self.k
 
     def partition_homes(self, partition: int) -> list[int]:
         """Primary + secondaries for a partition among the k partial nodes
-        (hashed so primary and secondary land on different nodes, §7.1.3)."""
+        (hashed so primary and secondary land on different nodes, §7.1.3;
+        contiguous-block primary + round-robin secondaries when
+        co-located)."""
+        if self.ppn is not None:
+            first = partition // self.ppn
+            return [(first + r) % self.k
+                    for r in range(min(self.replicas_per_partition, self.k))]
         homes = []
         for r in range(self.replicas_per_partition):
             homes.append(self.f + (partition + r) % self.k)
@@ -102,3 +133,37 @@ def catch_up(val, tidw, donor_log, thomas_apply):
     Thomas write rule in parallel (§4.5.3 case 1)."""
     return thomas_apply(val, tidw, donor_log["row"], donor_log["val"],
                         donor_log["tid"])
+
+
+# ---------------------------------------------------------------------------
+# live failure injection
+# ---------------------------------------------------------------------------
+@dataclass
+class FaultInjector:
+    """Schedules node kills at chosen epochs for the cluster runtime.
+
+    The coordinator polls the injector at every replication fence (a
+    killed node's fence message never arrives — the §4.5 missed-heartbeat
+    detection); a kill takes effect DURING the scheduled epoch, so that
+    epoch's work is never committed: the coordinator reverts to the last
+    committed epoch and runs the classified recovery.  ``killed`` tracks
+    nodes currently down; recovery revives them once their state is
+    restored from a donor or from disk (case-1 copy + catch-up, §4.5.3).
+    """
+    schedule: dict = field(default_factory=dict)    # epoch -> set[node]
+    killed: set = field(default_factory=set)
+    kills_injected: int = 0
+
+    def schedule_kill(self, node: int, epoch: int):
+        self.schedule.setdefault(int(epoch), set()).add(int(node))
+
+    def poll(self, epoch: int) -> set[int]:
+        """Nodes newly killed during ``epoch``; they join ``killed``."""
+        fresh = set(self.schedule.pop(int(epoch), set())) - self.killed
+        self.killed |= fresh
+        self.kills_injected += len(fresh)
+        return fresh
+
+    def revive(self, nodes):
+        for n in nodes:
+            self.killed.discard(int(n))

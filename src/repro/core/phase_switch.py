@@ -49,6 +49,7 @@ class PhaseController:
     frac_cross: float = 0.0
     queue_delay_ms: float = 0.0    # measured enqueue→batch-formation (EMA)
     measured_commit_ms: float = 0.0  # measured enqueue→commit-fence (EMA)
+    fence_wait_ms: float = 0.0     # cluster: max per-node fence wait (EMA)
     adaptive: bool = False         # drive e_ms from the queue-delay EMA
     e_min_ms: float = 2.0
     e_max_ms: float = 50.0
@@ -90,6 +91,16 @@ class PhaseController:
             target = min(max(2.0 * self.queue_delay_ms, self.e_min_ms),
                          self.e_max_ms)
             self.e_ms += self.adapt_gain * (target - self.e_ms)
+
+    def observe_fence_wait(self, max_wait_ms: float):
+        """Cluster coordinator telemetry: the slowest node sets the fence;
+        everyone else waits.  The EMA of that worst-case wait quantifies
+        per-node skew (fig13 reports it) and is the §4.3 signal a deployment
+        would use to rebalance partitions across nodes."""
+        if max_wait_ms < 0:
+            return
+        self.fence_wait_ms = max_wait_ms if self.fence_wait_ms == 0 else (
+            self.ema * max_wait_ms + (1 - self.ema) * self.fence_wait_ms)
 
     def plan(self):
         tau_p, tau_s = solve_phase_times(self.e_ms, self.t_p, self.t_s,

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.ops import IDX_OPS, apply_op
 from repro.storage.index import apply_index_ops
@@ -140,6 +141,52 @@ def replay_index_rounds(index, kinds, delta, iwrite, tids):
 
     index, _ = jax.lax.scan(step, index, (iwrite, tids))
     return index
+
+
+# ---------------------------------------------------------------------------
+# per-worker WAL streams (durability, §4.5.1/§5)
+# ---------------------------------------------------------------------------
+def wal_partition_streams(log, R: int, n_workers: int, worker_of_partition):
+    """Split one epoch's partitioned-phase log into per-worker WAL streams.
+
+    The op stream is logged in its §5 TRANSFORMED form — the op was applied
+    on the primary, the WHOLE post-image ``val`` is logged with its commit
+    TID — so recovery can replay any (file, chunk) order under the Thomas
+    write rule.  Rows globalize to the flat P*R space (what checkpoints
+    store).  Yields ``(worker, rows, vals, tids, mask)`` with non-empty
+    masks only.
+
+    log: {'row' (P,T,M), 'val' (P,T,M,C), 'tid' (P,T,M), 'write' (P,T,M)};
+    worker_of_partition: (P,) int — e.g. ``p % n_workers`` (single host)
+    or ``p // ppn`` (cluster node blocks).
+    """
+    rows = np.asarray(log["row"])
+    P = rows.shape[0]
+    grows = rows + np.arange(P, dtype=np.int64)[:, None, None] * R
+    vals = np.asarray(log["val"])
+    tids = np.asarray(log["tid"])
+    wm = np.asarray(log["write"])
+    worker_of_partition = np.asarray(worker_of_partition)
+    for w in range(n_workers):
+        sel = worker_of_partition == w
+        if sel.any() and wm[sel].any():
+            yield w, grows[sel], vals[sel], tids[sel], wm[sel]
+
+
+def wal_master_streams(log, R: int, C: int, n_workers: int,
+                       worker_of_partition):
+    """Split the single-master phase's value stream (already whole-record
+    post-images on global rows) to each owner's WAL.  Yields
+    ``(worker, rows, vals, tids, mask)`` with non-empty masks only."""
+    rows = np.asarray(log["row"]).reshape(-1)
+    vals = np.asarray(log["val"]).reshape(-1, C)
+    tids = np.asarray(log["tid"]).reshape(-1)
+    wm = np.asarray(log["write"]).reshape(-1)
+    owner = np.asarray(worker_of_partition)[rows // R]
+    for w in range(n_workers):
+        m = wm & (owner == w)
+        if m.any():
+            yield w, rows, vals, tids, m
 
 
 # ---------------------------------------------------------------------------

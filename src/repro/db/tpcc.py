@@ -647,11 +647,11 @@ def make_batch(cfg: TPCCConfig, state: TPCCState, n_txns: int,
         t = fill[p]
         if t >= T:
             # dropped on queue overflow: this txn never reaches the device —
-            # unwind its optimistic Delivery claims right away so the
-            # districts are not stranded waiting for feedback
+            # unwind its optimistic Delivery claims AND any NewOrder mirror
+            # entry right away so no district chases a ghost order
             if cfg.mix == "full":
-                _requeue_claims(state, kinds[i, :IDX_OPS],
-                                deltas[i, :IDX_OPS])
+                unwind_never_executed(state, kinds[i, :IDX_OPS],
+                                      deltas[i, :IDX_OPS])
             continue
         ptxn["valid"][p, t] = True
         ptxn["row"][p, t] = rows[i]
@@ -727,6 +727,65 @@ def _requeue_claims(state, kinds_k, deltas_k, skipped_k=None):
             pos += 1
         q.insert(pos, entry)
         n += 1
+    return n
+
+
+def unwind_never_executed(state: TPCCState, kinds_k, deltas_k):
+    """Unwind ALL host-mirror effects of one transaction that will NEVER
+    reach the device (admission shed, retry-buffer drop, batch-formation
+    overflow).  Two cases:
+
+    * Delivery — its optimistic claims re-queue via ``_requeue_claims``;
+    * full-mix NewOrder — the mirror ran ahead of the device at generation
+      time (undelivered entry, customer last-order, ring contents, ledger
+      push); erase those effects so Delivery never chases an order the
+      device has no index entry for (the former ROADMAP "host mirror ahead
+      of device" tail).  The o_id draw itself is NOT unwound — later draws
+      may exist — which is safe: the device's next_o_id column is an
+      independent counter and order rows are keyed by slot.  The one
+      residual: a shed NewOrder whose generation ring-evicted a still-
+      undelivered order already retired that order to ``evicted_amount``
+      and its eviction DELETE_IDX never runs, leaving one unreachable
+      (never-scanned) device index entry — bounded by the IndexSpec
+      headroom and impossible without ring wraparound mid-run.
+
+    kinds_k/deltas_k: the first IDX_OPS op slots of the transaction.
+    Returns the number of re-queued Delivery districts."""
+    n = _requeue_claims(state, kinds_k, deltas_k)
+    no_ins = np.nonzero((kinds_k == INSERT_IDX)
+                        & (deltas_k[:, IX_ID] == NO_IDX))[0]
+    if no_ins.size == 0:
+        return n
+    key = int(deltas_k[no_ins[0], IX_KEY])
+    w = key >> 24
+    d_id = (key >> D_SHIFT) & ((1 << (24 - D_SHIFT)) - 1)
+    o_lo = key & ((1 << D_SHIFT) - 1)
+    entry = None
+    q = state.undelivered[w][d_id]
+    for i, e in enumerate(q):
+        if e[0] % (1 << D_SHIFT) == o_lo:
+            entry = q.pop(i)
+            break
+    if entry is None:
+        # a Delivery generated after this NewOrder (possibly shed in the
+        # same chunk) already claimed it: retire the claim — the order
+        # never existed on device, so it must not be re-queued either
+        claim = state.pending_claims.pop(key, None)
+        if claim is not None:
+            entry = claim[2]
+    if entry is None:
+        return n                     # ring-evicted while queued: retired
+    o_id, c_id, amount = entry[0], entry[1], entry[2]
+    state.pushed_amount -= amount    # the push never happened
+    if int(state.last_o[w, d_id, c_id]) == o_id:
+        state.last_o[w, d_id, c_id] = -1      # OrderStatus: no known order
+    slot = int(o_id % state.cfg.order_ring)
+    if int(state.ring_cust[w, d_id, slot]) == c_id:
+        # the ring slot still describes this order (no later overwrite)
+        state.ring_cust[w, d_id, slot] = -1
+        state.ring_olcnt[w, d_id, slot] = 0
+        state.ring_items[w, d_id, slot, :] = -1
+        state.ring_qty[w, d_id, slot, :] = 0
     return n
 
 

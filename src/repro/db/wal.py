@@ -90,9 +90,15 @@ def write_checkpoint(directory: str | Path, val: np.ndarray, tid: np.ndarray,
     (d / "ckpt_meta.json").write_text(json.dumps({"epoch": int(epoch)}))
 
 
-def recover(directory: str | Path):
+def recover(directory: str | Path, shuffle_seed: int | None = None):
     """Load checkpoint + replay all WALs since e_c with the Thomas rule.
-    Returns (val, tid, epoch)."""
+    Returns (val, tid, epoch).
+
+    ``shuffle_seed`` permutes the replay order of every (file, flush-chunk)
+    pair before applying — the Thomas rule makes recovery order-free (each
+    entry is a whole-record post-image tagged with its commit TID, whose
+    epoch lives in the high bits), so any permutation must produce the
+    identical state; tests exercise this directly."""
     from repro.core.replication import thomas_apply
     import jax.numpy as jnp
     d = Path(directory)
@@ -102,9 +108,97 @@ def recover(directory: str | Path):
     shape = val.shape
     fval = val.reshape(-1, shape[-1])
     ftid = tid.reshape(-1)
+    chunks = []
     for wal in sorted(d.glob("wal_*.log")):
-        for rows, vals, tids in WriteAheadLog.read_entries(wal, meta["epoch"]):
-            fval, ftid, _ = thomas_apply(
-                fval, ftid, jnp.asarray(rows, jnp.int32), jnp.asarray(vals),
-                jnp.asarray(tids))
+        chunks.extend(WriteAheadLog.read_entries(wal, meta["epoch"]))
+    if shuffle_seed is not None:
+        np.random.default_rng(shuffle_seed).shuffle(chunks)
+    for rows, vals, tids in chunks:
+        fval, ftid, _ = thomas_apply(
+            fval, ftid, jnp.asarray(rows, jnp.int32), jnp.asarray(vals),
+            jnp.asarray(tids))
     return fval.reshape(shape), ftid.reshape(shape[:-1]), meta["epoch"]
+
+
+# ---------------------------------------------------------------------------
+# live-execution durability: per-worker WALs + checkpoint cadence
+# ---------------------------------------------------------------------------
+class Durability:
+    """Drives the dormant WAL/checkpoint machinery from live execution.
+
+    One instance serves one engine (single-host ``StarEngine`` or one
+    ``ClusterRuntime``): each worker (paper: node; here: partition group)
+    appends its committed value stream to its own ``WriteAheadLog``, all
+    logs flush inside the epoch's commit fence, and every
+    ``checkpoint_every`` epochs the committed state is checkpointed fuzzily
+    (writers proceed; the checkpoint records its start epoch e_c and
+    recovery replays all logs since e_c — over-replay is idempotent under
+    the Thomas rule).  An epoch-0 checkpoint of the initial state is
+    written at attach time so recovery works before the first cadence
+    checkpoint.
+
+    TID epochs are 8 bits (``core.tid``): log retention beyond 255 epochs
+    past the checkpoint would alias the Thomas ordering, so the cadence
+    must stay well below that — asserted here.
+    """
+
+    def __init__(self, directory: str | Path, n_workers: int = 1,
+                 checkpoint_every: int = 8):
+        assert 0 < checkpoint_every < 200, checkpoint_every
+        self.dir = Path(directory)
+        self.n_workers = n_workers
+        self.checkpoint_every = checkpoint_every
+        self.wals = [WriteAheadLog(self.dir, w) for w in range(n_workers)]
+        self.entries_logged = 0
+        self.checkpoints = 0
+        self.last_ckpt_epoch = 0
+
+    def attach(self, val, tid):
+        """Write the epoch-0 baseline checkpoint of the initial state —
+        unless the directory already holds one (an engine resuming after a
+        crash keeps the existing checkpoint + logs: recovery replays from
+        the recorded e_c, and overwriting with the fresh engine's initial
+        state would discard the durable history)."""
+        if not (self.dir / "ckpt_meta.json").exists():
+            write_checkpoint(self.dir, np.asarray(val), np.asarray(tid), 0)
+
+    def log(self, worker: int, rows, vals, tids, write_mask):
+        """Buffer one committed write stream chunk (global flat rows)."""
+        self.wals[worker % self.n_workers].append(rows, vals, tids,
+                                                  write_mask)
+
+    def log_epoch_streams(self, plog, slog, R: int, C: int,
+                          worker_of_partition):
+        """Fan one committed epoch's streams out to the per-worker logs:
+        the partitioned op stream in its §5 transformed form and the
+        master's value stream split by row owner (see
+        ``replication.wal_partition_streams`` / ``wal_master_streams``).
+        ``worker_of_partition``: (P,) int map — ``p % n_workers`` on the
+        single-host engine, ``p // ppn`` on the cluster's node blocks."""
+        from repro.core import replication as repl
+        if plog is not None:
+            for w, rows, vals, tids, mask in repl.wal_partition_streams(
+                    plog, R, self.n_workers, worker_of_partition):
+                self.log(w, rows, vals, tids, mask)
+        if slog is not None:
+            for w, rows, vals, tids, mask in repl.wal_master_streams(
+                    slog, R, C, self.n_workers, worker_of_partition):
+                self.log(w, rows, vals, tids, mask)
+
+    def commit_epoch(self, epoch: int, val=None, tid=None) -> int:
+        """Inside the commit fence: fsync every worker's log; on cadence,
+        also checkpoint the (committed) state passed in.  Returns the
+        number of entries flushed."""
+        n = sum(w.flush(epoch) for w in self.wals)
+        self.entries_logged += n
+        if val is not None and epoch - self.last_ckpt_epoch >= \
+                self.checkpoint_every:
+            write_checkpoint(self.dir, np.asarray(val), np.asarray(tid),
+                             epoch)
+            self.checkpoints += 1
+            self.last_ckpt_epoch = epoch
+        return n
+
+    def close(self):
+        for w in self.wals:
+            w.close()

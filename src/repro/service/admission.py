@@ -33,6 +33,10 @@ class AdmissionConfig:
     part_queue_cap: int = 256       # per-partition single-partition bound
     master_queue_cap: int = 1024    # cross-partition (master node) bound
     policy: str = SHED              # "shed" | "backpressure"
+    # cluster: total bound across ONE NODE's partition queues (requires
+    # node_of_partition on the controller) — a hot node sheds before its
+    # partitions individually fill, modeling per-node ingest memory
+    node_queue_cap: int | None = None
 
 
 @dataclass
@@ -44,6 +48,9 @@ class AdmissionStats:
     requeued: int = 0               # starved OCC txns pushed back (front)
     max_part_depth: int = 0
     max_master_depth: int = 0
+    # per-queue rejection attribution: index p < P = partition p's queue,
+    # index P = the master queue (cluster telemetry: group by node)
+    rejected_by_queue: np.ndarray | None = None
 
 
 class RequestPool:
@@ -96,7 +103,8 @@ class AdmissionController:
                  max_ops: int, n_cols: int = 10,
                  cfg: AdmissionConfig | None = None,
                  router: Router | None = None,
-                 pool: RequestPool | None = None):
+                 pool: RequestPool | None = None,
+                 node_of_partition=None):
         self.P, self.R = n_partitions, rows_per_partition
         self.cfg = cfg or AdmissionConfig()
         self.router = router or Router(n_partitions, rows_per_partition,
@@ -104,7 +112,12 @@ class AdmissionController:
         self.pool = pool or RequestPool(max_ops, n_cols)
         self.part_queues = [deque() for _ in range(n_partitions)]
         self.master_queue = deque()
+        # cluster: which node owns each partition's queue (per-node caps
+        # + per-node shed/depth telemetry); None = single-node service
+        self.node_of_partition = (np.asarray(node_of_partition, np.int64)
+                                  if node_of_partition is not None else None)
         self.stats = AdmissionStats()
+        self.stats.rejected_by_queue = np.zeros(n_partitions + 1, np.int64)
 
     # ------------------------------------------------------------------
     def offer(self, req: dict, now_s: float):
@@ -123,11 +136,27 @@ class AdmissionController:
 
         admitted = np.zeros(B, bool)
         dest = np.where(is_cross, -1, home).astype(np.int64)
+        # per-node ingest budget (cluster): a node's partition queues share
+        # one bound on top of the per-partition caps
+        node_budget = None
+        if self.node_of_partition is not None \
+                and self.cfg.node_queue_cap is not None:
+            n_nodes = int(self.node_of_partition.max()) + 1
+            depth = np.zeros(n_nodes, np.int64)
+            for p, q in enumerate(self.part_queues):
+                depth[self.node_of_partition[p]] += len(q)
+            node_budget = np.maximum(self.cfg.node_queue_cap - depth, 0)
         # singles, per home partition (≤P small iterations, vectorized body)
         for p in np.unique(dest[dest >= 0]):
             q = self.part_queues[p]
+            room = max(0, self.cfg.part_queue_cap - len(q))
+            if node_budget is not None:
+                n = self.node_of_partition[p]
+                room = min(room, int(node_budget[n]))
             sel = np.nonzero(dest == p)[0]
-            take = sel[:max(0, self.cfg.part_queue_cap - len(q))]
+            take = sel[:room]
+            if node_budget is not None:
+                node_budget[self.node_of_partition[p]] -= len(take)
             admitted[take] = True
         cross_sel = np.nonzero(is_cross)[0]
         cross_take = cross_sel[:max(0, self.cfg.master_queue_cap
@@ -160,6 +189,9 @@ class AdmissionController:
         rejected = ~admitted
         n_rej = int(rejected.sum())
         self.stats.admitted += int(aidx.size)
+        if n_rej:
+            rq = np.where(dest[rejected] >= 0, dest[rejected], self.P)
+            np.add.at(self.stats.rejected_by_queue, rq, 1)
         if self.cfg.policy == SHED:
             self.stats.shed += n_rej
         else:
@@ -187,3 +219,8 @@ class AdmissionController:
 
     def depth(self) -> int:
         return sum(len(q) for q in self.part_queues) + len(self.master_queue)
+
+    def depths(self):
+        """(per-partition queue depths (P,), master queue depth)."""
+        return (np.array([len(q) for q in self.part_queues], np.int64),
+                len(self.master_queue))

@@ -88,16 +88,19 @@ class TPCCSource:
         return raw
 
     def unclaim(self, req: dict):
-        """Unwind the Delivery claims of requests that will NEVER execute
-        (shed by admission, dropped from the retry buffer): their claimed
-        orders go back to the front of the undelivered queues instead of
-        stranding in ``pending_claims`` forever."""
+        """Unwind the mirror effects of requests that will NEVER execute
+        (shed by admission, dropped from the retry buffer): a Delivery's
+        claimed orders go back to the front of the undelivered queues
+        instead of stranding in ``pending_claims`` forever, and a shed
+        NewOrder's mirror entry (undelivered push, last-order, ring
+        contents, ledger) is erased so Delivery never chases an order the
+        device has no index entry for."""
         if self.cfg.mix != "full":
             return
         kinds, deltas = req["kinds"], req["deltas"]
         for i in range(kinds.shape[0]):
-            tpcc._requeue_claims(self.state, kinds[i, :tpcc.IDX_OPS],
-                                 deltas[i, :tpcc.IDX_OPS])
+            tpcc.unwind_never_executed(self.state, kinds[i, :tpcc.IDX_OPS],
+                                       deltas[i, :tpcc.IDX_OPS])
 
 
 class OpenLoopClient:
@@ -186,6 +189,17 @@ class OpenLoopClient:
         unclaim = getattr(self.source, "unclaim", None)
         if unclaim is not None:
             unclaim(req)
+
+    def shutdown(self):
+        """End of a serving run: requests generated ahead of their arrival
+        time (the lookahead chunk) and buffered retries will never execute
+        — unwind their host-mirror effects (TPC-C claims/NewOrder entries)
+        through the same channel sheds use."""
+        unclaim = getattr(self.source, "unclaim", None)
+        for buf in (self._pending, self.retry):
+            if buf is not None and unclaim is not None:
+                unclaim(buf)
+        self._pending = self.retry = None
 
     def push_back(self, req: dict):
         """Backpressured requests: retry next tick (bounded buffer)."""

@@ -43,17 +43,22 @@ class TxnService:
     def __init__(self, engine: StarEngine, clients: list,
                  admission_cfg: AdmissionConfig | None = None,
                  slots_per_partition: int = 64, master_lanes: int = 64,
-                 max_ops: int | None = None, feedback=None):
+                 max_ops: int | None = None, feedback=None,
+                 node_of_partition=None):
         """feedback: optional callable(batch, metrics) invoked after every
         epoch's commit fence — the service-level consume-feedback hook
         (e.g. ``lambda b, m: tpcc.apply_consume_feedback(state, b, m)``
-        re-queues Delivery districts the device skipped)."""
+        re-queues Delivery districts the device skipped).
+        node_of_partition: cluster deployments pass the partition→node map
+        so admission enforces per-node queue bounds and attributes
+        shed/depth telemetry per node (see ClusterTxnService)."""
         self.engine = engine
         self.clients = list(clients)
         self.feedback = feedback
         M = max_ops if max_ops is not None else self.clients[0].source.M
         self.admission = AdmissionController(
-            engine.P, engine.R, M, engine.C, cfg=admission_cfg)
+            engine.P, engine.R, M, engine.C, cfg=admission_cfg,
+            node_of_partition=node_of_partition)
         src = self.clients[0].source
         self.batcher = EpochBatcher(self.admission, slots_per_partition,
                                     master_lanes, row_bytes=src.row_bytes,
@@ -182,10 +187,15 @@ class TxnService:
             if self.feedback is not None:
                 self.feedback(batch, m)
             self._complete(plan, m)
+            self._observe_epoch(m)
             batch, plan = nxt["formed"]
 
         self.recorder.finished_s = self.clock()
         return self.summary()
+
+    def _observe_epoch(self, metrics: dict):
+        """Per-epoch telemetry hook (no-op here; ClusterTxnService samples
+        per-node queue depths and collects recovery events)."""
 
     def summary(self) -> dict:
         rec, adm = self.recorder, self.admission.stats

@@ -9,9 +9,13 @@ created the entry.  Everything is fixed-shape and scan/jit-compatible:
 * lookups/range scans are ``jnp.searchsorted`` + a bounded window gather
   (``SCAN_L`` result slots + 1 next-key slot for phantom validation);
 * maintenance is a vectorized delete-scatter (searchsorted position, hit
-  test, sentinelize) followed by an insert merge (concat + stable argsort,
-  keep first ``cap``) — free slots are canonical (key=SENTINEL, prow=0,
-  tid=0) so master and replica arrays stay bit-equal under replay.
+  test, sentinelize) followed by an insert merge — a sorted-run merge of
+  (existing segment, argsorted incoming keys): two ``searchsorted`` calls
+  compute each run's positions in the merged order and a scatter places
+  them, so the O(cap log cap) full-segment argsort per batch is gone (only
+  the Ki incoming keys are sorted).  Free slots are canonical
+  (key=SENTINEL, prow=0, tid=0) so master and replica arrays stay
+  bit-equal under replay.
 
 Key encoding: the partition id lives in the high bits
 (``full_key = partition << PART_SHIFT | local_key``), so each partition's
@@ -80,24 +84,72 @@ def segment_apply(key, prow, tid, del_key, ins_key, ins_prow, ins_tid):
     see IndexSpec).
     """
     cap = key.shape[0]
-    # -- deletes: searchsorted position, exact-match test, sentinelize
-    pos = jnp.clip(jnp.searchsorted(key, del_key), 0, cap - 1)
+    Ki = ins_key.shape[0]
+    o32 = jnp.int32
+    # -- deletes: searchsorted position, exact-match test — the hit slots
+    # become holes in the (still untouched, still sorted) existing run
+    pos = jnp.clip(jnp.searchsorted(key, del_key), 0, cap - 1).astype(o32)
     hit = (key[pos] == del_key) & (del_key != SENTINEL)
-    tgt = jnp.where(hit, pos, cap)
-    key = jnp.concatenate([key, jnp.array([SENTINEL], jnp.int32)]
-                          ).at[tgt].set(SENTINEL)[:cap]
-    # -- inserts: merge + stable sort, keep the cap smallest keys
-    k2 = jnp.concatenate([key, ins_key])
-    p2 = jnp.concatenate([prow, ins_prow])
-    t2 = jnp.concatenate([tid, ins_tid])
-    order = jnp.argsort(k2)                           # jax sorts are stable
-    k2s = k2[order]
-    overflow = jnp.sum(k2s[cap:] != SENTINEL, dtype=jnp.int32)
-    order = order[:cap]
-    k2, p2, t2 = k2s[:cap], p2[order], t2[order]
-    live = k2 != SENTINEL                             # canonical free slots
-    return k2, jnp.where(live, p2, 0), jnp.where(live, t2, jnp.uint32(0)), \
-        overflow
+    tgt = jnp.where(hit, pos, cap)                        # (Kd,), cap = miss
+    # dedup: two del ops hitting the same slot make ONE hole
+    tgt_s = jnp.sort(tgt)
+    uniq = jnp.concatenate([tgt_s[:1] < cap,
+                            (tgt_s[1:] != tgt_s[:-1]) & (tgt_s[1:] < cap)])
+    n_dead = jnp.sum(uniq, dtype=o32)
+    # live rank just below each hole: its index minus the holes before it
+    holes_before = jnp.cumsum(uniq) - uniq                # (Kd,) exclusive
+    r_hole = tgt_s - holes_before.astype(o32)
+
+    # -- inserts: sorted-run merge in GATHER form — the old concat + full-
+    # segment argsort is replaced by two step-function cumsums over the
+    # output domain plus gathers; only the Ki incoming keys are sorted.
+    # Output slot o holds the o-th element of merge(live existing, live
+    # incoming): an incoming element when an incoming landed exactly at o,
+    # else the live existing element of rank o − (#incoming before o),
+    # whose original index adds back the holes the deletes punched.
+    if Ki == 0:                                           # delete-only batch
+        ins_key = jnp.full((1,), SENTINEL, jnp.int32)
+        ins_prow = jnp.zeros((1,), prow.dtype)
+        ins_tid = jnp.zeros((1,), tid.dtype)
+        Ki = 1
+    iorder = jnp.argsort(ins_key)                         # Ki log Ki only
+    ik, ip, it = ins_key[iorder], ins_prow[iorder], ins_tid[iorder]
+    ilive = ik != SENTINEL
+    n_ilive = jnp.sum(ilive, dtype=o32)
+    # live-existing count: keys before the first free SENTINEL, minus holes
+    n_live = jnp.searchsorted(key, SENTINEL).astype(o32) - n_dead
+    # merged position of live incoming j: j + #live existing ≤ ik[j]
+    # (side="right" keeps the old stable order: existing first on ties);
+    # dead (hole) slots still carry their old keys, so subtract the holes
+    # sitting below the searchsorted point (small Ki×Kd compare)
+    ss = jnp.searchsorted(key, ik, side="right").astype(o32)
+    dead_below = jnp.sum(uniq[None, :] & (tgt_s[None, :] < ss[:, None]),
+                         axis=1, dtype=o32)
+    pos_i = jnp.arange(Ki, dtype=o32) + ss - dead_below
+    # step function J(o) = #incoming at output slots ≤ o (small scatter of
+    # the Ki positions + one cumsum — pos_i is strictly increasing over
+    # live incoming, so no duplicate live positions)
+    inc_at = jnp.zeros((cap + 1,), o32).at[
+        jnp.where(ilive, jnp.minimum(pos_i, cap), cap)].add(1)[:cap]
+    # step function D(r) = #holes at live rank ≤ r (small scatter + cumsum)
+    d_at = jnp.zeros((cap + 1,), o32).at[
+        jnp.where(uniq, jnp.clip(r_hole, 0, cap - 1), cap)].add(1)[:cap]
+    J, D = jnp.cumsum(jnp.stack([inc_at, d_at]), axis=1)  # one fused pass
+    o = jnp.arange(cap, dtype=o32)
+    is_inc = inc_at > 0
+    j_excl = J - inc_at                                   # #incoming < o
+    r = o - j_excl                                        # live-exist rank
+    i_src = jnp.clip(r + D[jnp.clip(r, 0, cap - 1)], 0, cap - 1)
+    jidx = jnp.clip(j_excl, 0, max(Ki - 1, 0))
+    n_merged = n_live + n_ilive
+    valid = o < n_merged
+    k2 = jnp.where(valid, jnp.where(is_inc, ik[jidx], key[i_src]), SENTINEL)
+    live = k2 != SENTINEL                                 # canonical free
+    p2 = jnp.where(live, jnp.where(is_inc, ip[jidx], prow[i_src]), 0)
+    t2 = jnp.where(live, jnp.where(is_inc, it[jidx], tid[i_src]),
+                   jnp.uint32(0))
+    overflow = jnp.maximum(n_merged - cap, 0).astype(o32)
+    return k2, p2, t2, overflow
 
 
 def segment_scan(key, lo, hi, n_slots: int = SCAN_L + 1, use_pallas=False,

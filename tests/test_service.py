@@ -346,3 +346,45 @@ def test_hot_key_scenario():
     cfg = ycsb.YCSBConfig(4, 10_000, hot_set_size=16, hot_access_frac=0.9)
     rows = ycsb.sample_rows(cfg, np.random.default_rng(0), (20_000,))
     assert (rows < 16).mean() > 0.85
+
+
+def test_shed_neworders_unwound_mirror_matches_device():
+    """Overload burst with shed admission on the full mix: shed NewOrders
+    must unwind their host-mirror entries (undelivered push, claims,
+    ledger) so that after the burst drains, the mirror's undelivered
+    orders per district are EXACTLY the device's neworder-index live keys
+    — the ROADMAP's "host mirror ahead of device" tail, closed."""
+    from repro.storage import SENTINEL
+    cfg = tpcc.TPCCConfig(n_partitions=2, n_items=200, cust_per_district=20,
+                          order_ring=64, mix="full", delivery_gen_lag=64)
+    state = tpcc.TPCCState(cfg)
+    rng = np.random.default_rng(0)
+    init = tpcc.init_values(cfg, rng, state=state)
+    eng = StarEngine(2, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg))
+    client = OpenLoopClient(TPCCSource(cfg, state=state, seed=3),
+                            rate_txn_s=6000.0)        # far beyond capacity
+    svc = TxnService(eng, [client],
+                     AdmissionConfig(part_queue_cap=8, master_queue_cap=8,
+                                     policy="shed"),
+                     slots_per_partition=8, master_lanes=8,
+                     feedback=lambda b, m:
+                     tpcc.apply_consume_feedback(state, b, m))
+    out = svc.run(duration_s=0.4)
+    client.shutdown()      # unwind the never-offered lookahead + retries
+    assert out["shed"] > 0, "burst did not overload admission"
+    assert out["committed"] > 0
+    assert eng.replica_consistent()
+    # after the drain every claim is resolved (committed or re-queued)
+    assert not state.pending_claims, state.pending_claims
+    lo_mask = (1 << tpcc.D_SHIFT) - 1
+    for w in range(cfg.n_partitions):
+        seg = np.asarray(eng.store.indexes[tpcc.NO_IDX]["key"][w])
+        for d in range(tpcc.N_DIST):
+            mirror = sorted(tpcc._key_no(w, d, o % (lo_mask + 1))
+                            for o, _, _, _, _ in state.undelivered[w][d])
+            dev = sorted(int(k) for k in seg
+                         if k != SENTINEL
+                         and tpcc._key_no(w, d, 0) <= k
+                         < tpcc._key_no(w, d + 1, 0))
+            assert mirror == dev, (w, d, mirror, dev)

@@ -305,3 +305,67 @@ def test_insert_scan_consume_roundtrip_with_primary():
     val, tidw, out, _ = _run(t2, out["index"], val=val, tid=tidw, max_rounds=1)
     assert bool(out["committed"][0])
     assert int(val[4, 0]) == 0, "consume tombstones the primary row"
+
+
+# ---------------------------------------------------------------------------
+# sorted-run merge == the original concat+argsort maintenance (regression)
+# ---------------------------------------------------------------------------
+def _segment_apply_argsort(key, prow, tid, del_key, ins_key, ins_prow,
+                           ins_tid):
+    """The pre-optimization full-segment argsort merge, kept verbatim as the
+    oracle for the gather-form sorted-run merge that replaced it."""
+    cap = key.shape[0]
+    pos = jnp.clip(jnp.searchsorted(key, del_key), 0, cap - 1)
+    hit = (key[pos] == del_key) & (del_key != SENTINEL)
+    tgt = jnp.where(hit, pos, cap)
+    key = jnp.concatenate([key, jnp.array([SENTINEL], jnp.int32)]
+                          ).at[tgt].set(SENTINEL)[:cap]
+    k2 = jnp.concatenate([key, ins_key])
+    p2 = jnp.concatenate([prow, ins_prow])
+    t2 = jnp.concatenate([tid, ins_tid])
+    order = jnp.argsort(k2)
+    k2s = k2[order]
+    overflow = jnp.sum(k2s[cap:] != SENTINEL, dtype=jnp.int32)
+    order = order[:cap]
+    k2, p2, t2 = k2s[:cap], p2[order], t2[order]
+    live = k2 != SENTINEL
+    return k2, jnp.where(live, p2, 0), jnp.where(live, t2, jnp.uint32(0)), \
+        overflow
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=40, deadline=None)
+def test_segment_apply_merge_matches_argsort_oracle(seed):
+    """Random segments incl. duplicate deletes, key ties between runs,
+    overflow, and empty/full segments: the merge must be bit-identical to
+    the old argsort maintenance (same keys, payloads, canonical free slots,
+    and overflow count)."""
+    rng = np.random.default_rng(seed)
+    cap = int(rng.integers(4, 48))
+    Kd = int(rng.integers(1, 10))
+    Ki = int(rng.integers(1, 10))
+    nlive = int(rng.integers(0, cap + 1))
+    key = np.full(cap, SENTINEL, np.int32)
+    key[:nlive] = np.sort(rng.choice(120, nlive, replace=False)).astype(
+        np.int32)
+    prow = rng.integers(0, 1000, cap).astype(np.int32) * (key != SENTINEL)
+    tid = rng.integers(1, 99, cap).astype(np.uint32) * (key != SENTINEL)
+    dk = rng.integers(0, 130, Kd).astype(np.int32)
+    if nlive:                                  # guarantee some real hits
+        n_hit = min(Kd, max(1, Kd // 2))
+        dk[:n_hit] = key[rng.integers(0, nlive, n_hit)]
+    dk[rng.random(Kd) < 0.2] = SENTINEL
+    if Kd >= 2:
+        dk[-1] = dk[0]                         # duplicate delete of one key
+    ik = rng.integers(0, 130, Ki).astype(np.int32)
+    ik[rng.random(Ki) < 0.3] = SENTINEL
+    if nlive and Ki >= 2:
+        ik[-1] = key[0]                        # tie with an existing key
+    ip = rng.integers(0, 1000, Ki).astype(np.int32)
+    it = rng.integers(1, 99, Ki).astype(np.uint32)
+    args = tuple(jnp.asarray(a) for a in (key, prow, tid, dk, ik, ip, it))
+    got = segment_apply(*args)
+    want = _segment_apply_argsort(*args)
+    for g, w, name in zip(got, want, ("key", "prow", "tid", "overflow")):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), (
+            name, np.asarray(g), np.asarray(w))
