@@ -6,9 +6,15 @@ device-count trick: each subprocess restarts jax with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``, N ∈ {1, 2, 4, 8};
 one device == one paper node).  Each worker runs the REAL distributed
 runtime (`repro.cluster.ClusterRuntime`: shard_map partitioned phase with
-zero collectives, psum fence, single-master phase on the full replica's
-device) and reports measured partitioned-phase throughput; the parent
-asserts the cluster metric grows monotonically from N=1 to N=8.
+zero collectives, slab-streamed op-stream shipping to the full replica
+DURING execution, psum fence waiting only on the unshipped tail slab,
+single-master phase on the full replica's device) and reports measured
+partitioned-phase throughput plus the §5 stream-byte split — bytes
+overlapped with execution vs bytes exposed at the fence; the parent
+asserts the cluster metric grows monotonically from N=1 to N=8 AND that
+the fence-exposed bytes under streaming are strictly lower than the
+ship-everything-at-the-fence baseline (``--slabs 1``, the pre-streaming
+behavior) on the N=4 configuration.
 
 Measurement contract (small host, simulated nodes): the N simulated
 devices timeshare this host's cores and the runtime enqueues their
@@ -26,13 +32,20 @@ and the curve would flatten or dip — which the monotonicity gate would
 catch.
 
 The second scenario kills one node mid-run: the coordinator detects the
-missed fence, reverts the in-flight epoch, classifies the failure into a
-§4.5 ``RecoveryCase``, restores the node's partition block from the full
-replica (real donor copy — the block is scribbled first), re-executes, and
-the run reports the measured recovery latency with ``replica_consistent()``
-holding at the next fence.
+missed fence, reverts the in-flight epoch (discarding the stream slabs
+the replicas consumed — slab high-watermark), classifies the failure into
+a §4.5 ``RecoveryCase``, restores the node's partition block from the
+full replica (real donor copy — the block is scribbled first),
+re-executes, and the run reports the measured recovery latency with
+``replica_consistent()`` holding at the next fence.
+
+``--mix full`` runs the five-transaction TPC-C mix (ordered indexes,
+Delivery/OrderStatus/StockLevel scans) through the cluster runtime
+instead of YCSB — the CI full-mix smoke drives a 4-node kill-one-node
+pass this way with a regression floor on the overlapped-bytes fraction.
 
     PYTHONPATH=src python -m benchmarks.fig13_scalability [--smoke]
+    PYTHONPATH=src python -m benchmarks.fig13_scalability --full-smoke
 """
 import argparse
 import json
@@ -52,36 +65,62 @@ def worker(args):
 
     from repro.cluster import ClusterRuntime
     from repro.core.fault import FaultInjector
-    from repro.db import ycsb
 
     N = jax.device_count()
     P = N * args.ppn
-    cfg = ycsb.YCSBConfig(n_partitions=P, records_per_partition=args.rows)
     mesh = jax.make_mesh((N,), ("part",))
     inj = None
     if args.kill:
         node, ep = (int(x) for x in args.kill.split(":"))
         inj = FaultInjector()
         inj.schedule_kill(node, ep)
-    rt = ClusterRuntime(mesh, P, args.rows, injector=inj)
-    txns = args.txns_per_node * N                 # weak scaling
 
+    def pad(a, axis, target):
+        w = [(0, 0)] * a.ndim
+        w[axis] = (0, target - a.shape[axis])
+        return np.pad(a, w)
+
+    txns = args.txns_per_node * N                 # weak scaling
     # fixed device shapes across epochs (the service batcher's invariant):
     # per-epoch draws vary T/B slightly, and letting the pow2 pad wobble
     # would recompile the mesh programs mid-measurement
     T_fix = 1 << (args.txns_per_node // args.ppn + 8).bit_length()
     B_fix = 1 << max(16, int(txns * 0.3)).bit_length()
 
-    def make(seed):
-        b = ycsb.make_batch(cfg, txns, seed=seed)
+    if args.mix == "full":
+        from repro.db import tpcc
+        cfg = tpcc.TPCCConfig(n_partitions=P, n_items=400,
+                              cust_per_district=40, order_ring=64,
+                              mix="full", delivery_gen_lag=256)
+        state = tpcc.TPCCState(cfg)
+        init = tpcc.init_values(cfg, np.random.default_rng(7), state=state)
+        rt = ClusterRuntime(mesh, P, cfg.rows_per_partition, init_val=init,
+                            indexes=tpcc.index_specs(cfg), injector=inj,
+                            n_slabs=args.slabs)
 
-        def pad(a, axis, target):
-            w = [(0, 0)] * a.ndim
-            w[axis] = (0, target - a.shape[axis])
-            return np.pad(a, w)
-        b["ptxn"] = {k: pad(v, 1, T_fix) for k, v in b["ptxn"].items()}
-        b["cross"] = {k: pad(v, 0, B_fix) for k, v in b["cross"].items()}
-        return b
+        def make(seed):
+            b = tpcc.make_batch(cfg, state, txns, seed=seed)
+            T = b["ptxn"]["row"].shape[1]
+            assert T <= T_fix, (T, T_fix, "raise T_fix for this scale")
+            b["ptxn"] = {k: pad(v, 1, T_fix) for k, v in b["ptxn"].items()}
+            b["p_row_bytes"] = pad(b["p_row_bytes"], 1, T_fix)
+            b["p_op_bytes"] = pad(b["p_op_bytes"], 1, T_fix)
+            b["cross"] = {k: pad(v, 0, B_fix) for k, v in b["cross"].items()}
+            b["c_row_bytes"] = pad(b["c_row_bytes"], 0, B_fix)
+            b["c_op_bytes"] = pad(b["c_op_bytes"], 0, B_fix)
+            return b
+    else:
+        from repro.db import ycsb
+        cfg = ycsb.YCSBConfig(n_partitions=P,
+                              records_per_partition=args.rows)
+        rt = ClusterRuntime(mesh, P, args.rows, injector=inj,
+                            n_slabs=args.slabs)
+
+        def make(seed):
+            b = ycsb.make_batch(cfg, txns, seed=seed)
+            b["ptxn"] = {k: pad(v, 1, T_fix) for k, v in b["ptxn"].items()}
+            b["cross"] = {k: pad(v, 0, B_fix) for k, v in b["cross"].items()}
+            return b
 
     rt.run_epoch(make(999))                       # jit warm
     recoveries = []
@@ -98,6 +137,9 @@ def worker(args):
                                "run_mode": ev.run_mode,
                                "failed": list(ev.failed),
                                "lost_blocks": list(ev.lost_blocks),
+                               "restored_from_secondary":
+                                   list(ev.restored_from_secondary),
+                               "slabs_discarded": ev.slabs_discarded,
                                "t_recovery_ms":
                                    round(ev.t_recovery_s * 1e3, 2)})
             consistent_after_recovery = rt.replica_consistent()
@@ -108,6 +150,8 @@ def worker(args):
     part_s = float(np.median(t_parts[settle:]))
     committed = float(np.median(commits[settle:]))
     node_c = rt.eng.node_committed.astype(int)
+    s = rt.stats
+    stream_total = int(s.op_bytes_overlapped + s.op_bytes_fence)
     print("RESULT " + json.dumps({
         "n_nodes": N,
         "committed_single": int(sum(commits)),
@@ -121,6 +165,13 @@ def worker(args):
         "node_fence_wait_ms":
             [round(x * 1e3, 2) for x in rt.eng.node_fence_wait_s],
         "fence_wait_ema_ms": round(rt.controller.fence_wait_ms, 3),
+        # §5 op-stream shipping: overlapped vs fence-exposed bytes
+        "op_bytes_overlapped": int(s.op_bytes_overlapped),
+        "op_bytes_fence": int(s.op_bytes_fence),
+        "overlap_frac": round(s.op_bytes_overlapped / stream_total, 4)
+        if stream_total else 0.0,
+        "index_op_bytes": int(s.index_op_bytes),
+        "slabs_shipped": int(s.slabs_shipped),
         "recoveries": recoveries,
         "consistent": bool(rt.replica_consistent()
                            and consistent_after_recovery),
@@ -130,14 +181,28 @@ def worker(args):
 def _spawn(n_devices: int, extra: list[str]) -> dict:
     env = dict(os.environ,
                XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}")
-    out = subprocess.run(
-        [sys.executable, "-m", "benchmarks.fig13_scalability", "--worker",
-         *extra],
-        capture_output=True, text=True, env=env, timeout=480)
-    assert out.returncode == 0, out.stderr[-4000:]
-    line = [ln for ln in out.stdout.splitlines()
-            if ln.startswith("RESULT ")][-1]
-    return json.loads(line[len("RESULT "):])
+    cmd = [sys.executable, "-m", "benchmarks.fig13_scalability", "--worker",
+           *extra]
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=480)
+    # a child that dies (OOM, assert, import error) must fail the sweep
+    # LOUDLY — a silent hole in the curve reads as a missing data point
+    if out.returncode != 0:
+        sys.stderr.write(f"fig13 worker FAILED (N={n_devices}, "
+                         f"exit {out.returncode}): {' '.join(cmd)}\n")
+        sys.stderr.write("---- child stderr ----\n")
+        sys.stderr.write(out.stderr[-8000:] + "\n")
+        raise RuntimeError(
+            f"fig13 worker exited {out.returncode} at N={n_devices}")
+    lines = [ln for ln in out.stdout.splitlines()
+             if ln.startswith("RESULT ")]
+    if not lines:
+        sys.stderr.write("---- child stdout ----\n" + out.stdout[-4000:]
+                         + "\n---- child stderr ----\n"
+                         + out.stderr[-4000:] + "\n")
+        raise RuntimeError(
+            f"fig13 worker (N={n_devices}) produced no RESULT line")
+    return json.loads(lines[-1][len("RESULT "):])
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +219,7 @@ def sweep(smoke: bool = False):
         scale = ["--rows", "256", "--txns-per-node", "64", "--epochs", "16"]
         repeats = 3
     rows, thr = [], {}
+    results = {}
     for n in NODE_COUNTS:
         # best-of-k fresh processes: run-to-run variance on a small shared
         # host (scheduler state, pool warm-up) dwarfs in-run noise; the
@@ -165,6 +231,7 @@ def sweep(smoke: bool = False):
             if best is None or cand["part_txn_s"] > best["part_txn_s"]:
                 best = cand
         r = best
+        results[n] = r
         thr[n] = r["part_txn_s"]
         rows.append((f"fig13/scal_n{n}_part_txn_s",
                      1e6 * r["part_s"] / max(r["committed_single"], 1),
@@ -174,11 +241,29 @@ def sweep(smoke: bool = False):
         skew = (max(r["node_committed"]) / max(min(r["node_committed"]), 1)
                 if r["node_committed"] else 1.0)
         rows.append((f"fig13/scal_n{n}_node_skew", 0.0, round(skew, 2)))
+        rows.append((f"fig13/scal_n{n}_overlap_frac", 0.0,
+                     r["overlap_frac"]))
     mono = all(thr[a] < thr[b]
                for a, b in zip(NODE_COUNTS, NODE_COUNTS[1:]))
     rows.append(("fig13/scal_monotonic_1_to_8", 0.0, int(mono)))
     rows.append(("fig13/scal_speedup_8_over_1", 0.0,
                  round(thr[8] / max(thr[1], 1), 2)))
+
+    # ---- N=4: in-phase streaming vs the fence-time-replay baseline -----
+    # --slabs 1 ships the whole epoch stream at the fence (the PR-4
+    # behavior); streamed fence-exposed bytes must be strictly lower
+    base = _spawn(4, scale + ["--slabs", "1"])
+    streamed = results[4]
+    assert base["consistent"], "baseline replicas diverged"
+    assert base["op_bytes_fence"] > 0, base
+    assert streamed["op_bytes_fence"] < base["op_bytes_fence"], \
+        (streamed["op_bytes_fence"], base["op_bytes_fence"])
+    rows.append(("fig13/stream_n4_fence_bytes", 0.0,
+                 streamed["op_bytes_fence"]))
+    rows.append(("fig13/stream_n4_fence_bytes_baseline", 0.0,
+                 base["op_bytes_fence"]))
+    rows.append(("fig13/stream_n4_overlapped_bytes", 0.0,
+                 streamed["op_bytes_overlapped"]))
 
     # ---- kill one node mid-run at N=8: classified recovery, consistent --
     r = _spawn(8, scale + ["--kill", "3:3"])
@@ -196,12 +281,39 @@ def sweep(smoke: bool = False):
     return rows, thr, ev
 
 
+def full_mix_smoke():
+    """CI regression gate: the five-transaction TPC-C mix on a 4-node
+    cluster with a mid-run node kill — recovery classified, replicas
+    (records + index segments) consistent, and a floor on the
+    overlapped-bytes fraction (> 0: the op stream really ships in-phase)."""
+    scale = ["--mix", "full", "--txns-per-node", "40", "--epochs", "8",
+             "--ppn", "1", "--kill", "1:3"]
+    r = _spawn(4, scale)
+    assert r["consistent"], "full-mix replicas diverged"
+    assert len(r["recoveries"]) == 1, r["recoveries"]
+    ev = r["recoveries"][0]
+    assert ev["case"] == "PHASE_SWITCHING", ev
+    assert r["overlap_frac"] > 0, r["overlap_frac"]
+    assert r["index_op_bytes"] > 0, "index ops must hit the byte model"
+    rows = [
+        ("fig13/fullmix_committed", 0.0, r["committed_single"]),
+        ("fig13/fullmix_overlap_frac", 0.0, r["overlap_frac"]),
+        ("fig13/fullmix_index_op_bytes", 0.0, r["index_op_bytes"]),
+        ("fig13/fullmix_recovery_classified", 0.0, 1),
+        ("fig13/fullmix_consistent", 0.0, int(r["consistent"])),
+    ]
+    return rows, r, ev
+
+
 def main():
     from benchmarks.common import emit
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny scale; asserts the monotonic-scaling and "
                     "recovery floors (CI regression gate)")
+    ap.add_argument("--full-smoke", action="store_true", dest="full_smoke",
+                    help="4-node full-TPC-C-mix smoke: kill-one-node "
+                    "recovery + overlapped-bytes floor (CI gate)")
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--ppn", type=int, default=2, help=argparse.SUPPRESS)
     ap.add_argument("--rows", type=int, default=256, help=argparse.SUPPRESS)
@@ -209,9 +321,20 @@ def main():
                     dest="txns_per_node", help=argparse.SUPPRESS)
     ap.add_argument("--epochs", type=int, default=6, help=argparse.SUPPRESS)
     ap.add_argument("--kill", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--slabs", type=int, default=4, help=argparse.SUPPRESS)
+    ap.add_argument("--mix", default="ycsb", choices=("ycsb", "full"),
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args.worker:
         worker(args)
+        return
+    if args.full_smoke:
+        rows, r, ev = full_mix_smoke()
+        print("name,us_per_call,derived")
+        emit(rows)
+        print(f"FULL-MIX SMOKE OK committed={r['committed_single']} "
+              f"overlap_frac={r['overlap_frac']} "
+              f"recovery={ev['t_recovery_ms']}ms")
         return
     rows, thr, ev = sweep(smoke=args.smoke)
     print("name,us_per_call,derived")

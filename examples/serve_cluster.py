@@ -1,30 +1,45 @@
-"""Serve a live YCSB stream through the DISTRIBUTED cluster runtime.
+"""Serve a live transaction stream through the DISTRIBUTED cluster runtime.
 
 Run with forced host devices (one device == one paper node):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
-        PYTHONPATH=src python examples/serve_cluster.py [--quick]
+        PYTHONPATH=src python examples/serve_cluster.py --mix full [--quick]
+
+``--mix full`` (the default) serves the five-transaction TPC-C mix
+(45/43/4/4/4) — ordered secondary indexes sharded with the mesh, Delivery
+consuming through index range scans, consume feedback re-queueing skipped
+districts.  ``--mix ycsb`` serves the original YCSB stream.
 
 Open-loop Poisson clients feed node-sharded admission (per-node bounded
 queues on top of the per-partition caps); the epoch batcher double-buffers
 host batch formation against the mesh execution (shard_map partitioned
-phase with zero collectives, psum fence, single-master phase on the full
+phase with zero collectives, the §5 op-stream slabs shipping to the full
+replica and the physical secondary homes DURING the phase, psum fence
+waiting only on the unshipped tail, single-master phase on the full
 replica).  Mid-run, a FaultInjector kills node 2: the coordinator detects
-the missed fence, reverts the in-flight epoch, classifies the failure
-(§4.5), restores the node's partitions from the full replica, and the
-service keeps serving — recovery latency and per-node skew appear in the
-summary.
+the missed fence, reverts the in-flight epoch (discarding the consumed
+stream slabs), classifies the failure (§4.5), restores the node's
+partitions from a surviving copy, and the service keeps serving —
+recovery latency, per-node skew, and the overlapped-vs-fence stream bytes
+appear in the summary.
 """
-import sys
+import argparse
+
+import numpy as np
 
 import jax
 
 from repro.cluster import ClusterRuntime, ClusterTxnService
 from repro.core.fault import FaultInjector
-from repro.db import ycsb
-from repro.service import AdmissionConfig, OpenLoopClient, YCSBSource
+from repro.db import tpcc, ycsb
+from repro.service import (AdmissionConfig, OpenLoopClient, TPCCSource,
+                           YCSBSource)
 
-QUICK = "--quick" in sys.argv
+_ap = argparse.ArgumentParser(description=__doc__)
+_ap.add_argument("--quick", action="store_true")
+_ap.add_argument("--mix", default="full", choices=("full", "ycsb"))
+_ARGS = _ap.parse_args()
+QUICK, MIX = _ARGS.quick, _ARGS.mix
 
 
 def main():
@@ -34,21 +49,37 @@ def main():
               "count=4 to simulate a multi-node cluster; continuing with "
               f"{n} device(s).")
     mesh = jax.make_mesh((n,), ("part",))
-    P = 2 * n                                   # two partitions per node
-    cfg = ycsb.YCSBConfig(n_partitions=P, records_per_partition=256)
-
     inj = FaultInjector()
     inj.schedule_kill(node=min(2, n - 1), epoch=8)
-    rt = ClusterRuntime(mesh, P, 256, injector=inj)
-    client = OpenLoopClient(YCSBSource(cfg, seed=1), rate_txn_s=800.0,
-                            seed=7)
+
+    feedback = None
+    if MIX == "full":
+        P = n                                   # one warehouse per node
+        cfg = tpcc.TPCCConfig(n_partitions=P, n_items=400,
+                              cust_per_district=40, order_ring=64,
+                              mix="full", delivery_gen_lag=256)
+        state = tpcc.TPCCState(cfg)
+        init = tpcc.init_values(cfg, np.random.default_rng(7), state=state)
+        rt = ClusterRuntime(mesh, P, cfg.rows_per_partition, init_val=init,
+                            indexes=tpcc.index_specs(cfg), injector=inj)
+        client = OpenLoopClient(TPCCSource(cfg, state=state, seed=1),
+                                rate_txn_s=600.0, seed=7)
+        feedback = lambda b, m: tpcc.apply_consume_feedback(state, b, m)  # noqa: E731
+    else:
+        P = 2 * n                               # two partitions per node
+        cfg = ycsb.YCSBConfig(n_partitions=P, records_per_partition=256)
+        rt = ClusterRuntime(mesh, P, 256, injector=inj)
+        client = OpenLoopClient(YCSBSource(cfg, seed=1), rate_txn_s=800.0,
+                                seed=7)
     svc = ClusterTxnService(rt, [client],
                             AdmissionConfig(64, 64, node_queue_cap=96),
-                            slots_per_partition=16, master_lanes=16)
+                            slots_per_partition=16, master_lanes=16,
+                            feedback=feedback)
     out = svc.run(duration_s=0.8 if QUICK else 2.5)
     assert rt.replica_consistent(), "replicas diverged!"
 
-    print(f"\n=== cluster service over {n} node(s), {P} partitions ===")
+    print(f"\n=== cluster service over {n} node(s), {P} partitions, "
+          f"mix={MIX} ===")
     print(f"  sustained      : {out['throughput_txn_s']:8.0f} txn/s "
           f"({out['committed']} committed / {out['epochs']} epochs)")
     print(f"  latency        : p50 {out['p50_ms']:6.1f} ms   "
@@ -57,13 +88,23 @@ def main():
     print(f"  per-node shed  : {out['node_shed']}  "
           f"(queue depth max {out['node_queue_depth_max']})")
     print(f"  fence-wait EMA : {out['fence_wait_ema_ms']} ms")
+    total = out["op_bytes_overlapped"] + out["op_bytes_fence"]
+    if total:
+        print(f"  op stream      : {out['op_bytes_overlapped']} B overlapped"
+              f" / {out['op_bytes_fence']} B at the fence "
+              f"({100 * out['op_bytes_overlapped'] / total:.0f}% hidden, "
+              f"{out['slabs_shipped']} slabs)")
     if out["recoveries"]:
         ev = svc.recovery_events[0]
+        src = ("disk" if ev.reloaded_from_disk
+               else "secondary copy" if ev.restored_from_secondary
+               else "full replica")
         print(f"  RECOVERY       : epoch {ev.epoch} lost node(s) "
               f"{list(ev.failed)} -> {ev.case.name} "
-              f"({ev.run_mode}), recovered in "
+              f"({ev.run_mode}, restored from {src}), recovered in "
               f"{ev.t_recovery_s * 1e3:.1f} ms, view {ev.view}")
-    print("  replicas bit-identical at the final fence: OK")
+    print("  replicas bit-identical at the final fence: OK "
+          "(records + indexes + secondaries)")
 
 
 if __name__ == "__main__":

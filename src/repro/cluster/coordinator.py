@@ -37,6 +37,11 @@ class RecoveryEvent:
     t_recovery_s: float = 0.0     # detection -> resumed execution
     lost_blocks: tuple = ()       # node blocks with no surviving replica
     reloaded_from_disk: bool = False
+    restored_from_secondary: tuple = ()   # blocks rebuilt from the physical
+                                          # surviving secondary copy
+    slabs_discarded: int = 0      # in-flight stream slabs the revert dropped
+                                  # (the §4.5 slab high-watermark)
+    aborted_at_slab: int | None = None    # mid-stream kill position, if any
 
 
 @dataclass

@@ -3,35 +3,43 @@
 Composes the pieces the paper's cluster runs as separate processes:
 
 * :class:`~repro.core.cluster.ClusterStarEngine` — the mesh execution
-  (sharded partitioned phase, psum fence, single-master phase on the full
-  replica, value scatter-back);
+  (slab-streamed partitioned phase whose op stream ships to the full
+  replica and the physical secondary homes DURING execution, psum fence
+  waiting only on the unshipped tail slab, single-master phase on the
+  full replica, value + index-stream scatter-back);
 * :class:`~repro.cluster.coordinator.Coordinator` — the §4.5 view service
   owning the :class:`PhaseController` (phase switching at the fence) and
   the failure/recovery state machine;
 * :class:`~repro.db.wal.Durability` — per-NODE write-ahead logs (node n
-  logs its ``ppn`` partitions' committed streams; the master's value
-  stream is split to each owner's log) flushed at the commit fence, with
-  fuzzy checkpoints on cadence;
-* :class:`~repro.core.fault.FaultInjector` — kills nodes at chosen epochs.
+  logs its ``ppn`` partitions' committed record streams AND, for
+  index-bearing workloads, their ordered index-op streams; the master's
+  value stream is split to each owner's log) flushed at the commit fence,
+  with checkpoints on cadence;
+* :class:`~repro.core.fault.FaultInjector` — kills nodes at chosen epochs,
+  optionally MID-STREAM (after a chosen slab shipped).
 
 Failure semantics (simulation contract, see DESIGN.md "Cluster runtime"):
 a node killed during epoch e misses e's fence, so e never commits — the
 runtime runs the doomed epoch to the fence (``commit=False``; its wall
-time is real lost work), reverts every replica to epoch e-1 via the
-two-version snapshots, and physically destroys what died with the node:
-the node's primary partition block — UNLESS a sibling partial replica
-home survives (the surviving copy stands in for the block) — and the full
-replica when the node held one.  The coordinator classifies the failure
-(four ``RecoveryCase``s), restores lost blocks from the surviving full
-replica (donor copy), rebuilds a dead full replica from the complete
-partial set (re-replication all-gather), or reloads checkpoint+logs from
-disk in the UNAVAILABLE case, re-masters orphaned partitions, revives the
-nodes (§4.5.3 copy + catch-up), re-executes the reverted epoch, and
-reports the measured recovery latency in the epoch metrics.
+time is real lost work) or aborts it mid-stream at the killed slab,
+reverts every replica to epoch e-1 via the two-version snapshots (which
+also discards every stream slab the replicas consumed in-flight — the
+slab high-watermark guarantees the re-executed epoch applies each slab to
+committed state exactly once), and physically destroys what died with the
+node: its primary partition block AND the secondary copy it hosted.  The
+coordinator classifies the failure (four ``RecoveryCase``s), restores
+dead blocks from the full replica (donor copy) or — when no full replica
+survives — from the PHYSICAL surviving secondary copies, rebuilds a dead
+full replica from the complete partial set (re-replication all-gather),
+or reloads checkpoint+logs (records and index segments) from disk in the
+UNAVAILABLE case, re-masters orphaned partitions, revives the nodes
+(§4.5.3 copy + catch-up, secondary slices resynced), re-executes the
+reverted epoch, and reports the measured recovery latency in the epoch
+metrics.
 
 ``run_epoch`` keeps the ``StarEngine.run_epoch`` metric surface, so
 ``service.TxnService`` (and :class:`ClusterTxnService`) drive the mesh
-runtime unchanged.
+runtime unchanged — full-mix TPC-C included (``indexes=...``).
 """
 from __future__ import annotations
 
@@ -52,16 +60,23 @@ class ClusterRuntime:
                  replicas_per_partition: int = 2,
                  adaptive_epoch: bool = False,
                  durability: walmod.Durability | None = None,
-                 injector: FaultInjector | None = None):
+                 injector: FaultInjector | None = None,
+                 indexes=None, net=None, n_slabs: int = 4):
         self.eng = ClusterStarEngine(mesh, n_partitions, rows_per_partition,
                                      n_cols=n_cols, init_val=init_val,
                                      max_rounds=max_rounds,
                                      iteration_ms=iteration_ms,
-                                     adaptive_epoch=adaptive_epoch)
+                                     adaptive_epoch=adaptive_epoch,
+                                     indexes=indexes, net=net,
+                                     n_slabs=n_slabs)
         N = self.eng.n_nodes
+        # the topology must describe the copies that physically exist:
+        # primary blocks + (multi-node) one materialized secondary home
+        phys_replicas = 2 if self.eng.secondary else 1
         self.topology = ClusterConfig(
             f=min(f, N), k=N, n_partitions=n_partitions,
-            replicas_per_partition=min(replicas_per_partition, N),
+            replicas_per_partition=min(replicas_per_partition,
+                                       phys_replicas, N),
             ppn=self.eng.ppn)
         self.coordinator = Coordinator(self.topology, self.eng.controller)
         self.injector = injector
@@ -69,7 +84,9 @@ class ClusterRuntime:
         if durability is not None:
             assert durability.n_workers == N, (durability.n_workers, N)
             durability.attach(np.asarray(self.eng.part_val),
-                              np.asarray(self.eng.part_tid))
+                              np.asarray(self.eng.part_tid),
+                              indexes=self.eng.part_idx
+                              if self.eng.has_index else None)
 
     # -- StarEngine-compatible surface ----------------------------------
     @property
@@ -105,6 +122,8 @@ class ClusterRuntime:
 
     # ------------------------------------------------------------------
     def run_epoch(self, batch, ingest=None) -> dict:
+        slab_kills = (self.injector.slab_kills(self.epoch)
+                      if self.injector is not None else {})
         kills = (self.injector.poll(self.epoch)
                  if self.injector is not None else set())
         if not kills:
@@ -112,14 +131,33 @@ class ClusterRuntime:
             self._commit_durable()
             return m
         # ---- failure epoch: the phases run, the fence detects the miss —
-        # nothing commits, the doomed wall time is real lost work
-        self.eng.run_epoch(batch, ingest=ingest, commit=False)
+        # nothing commits, the doomed wall time is real lost work.  A
+        # mid-stream kill aborts the phase at the killed slab: a PREFIX of
+        # the op stream is already applied on the replicas.
+        abort_check = ((lambda s: s in slab_kills) if slab_kills else None)
+        doomed = self.eng.run_epoch(batch, ingest=ingest, commit=False,
+                                    abort_check=abort_check)
+        if slab_kills and "aborted_at_slab" not in doomed:
+            # a slab index past the executed range would silently test the
+            # plain fence-miss path instead of the mid-stream one — discard
+            # the doomed epoch and un-kill before raising so a caller that
+            # catches the error is not left running on uncommitted state
+            self.eng.revert_to_snapshot()
+            self.injector.revive(kills)
+            raise ValueError(
+                f"mid-stream kill scheduled at slab(s) "
+                f"{sorted(slab_kills)} but epoch {self.epoch} executed "
+                f"only {doomed.get('slabs')} slab(s) — slab index out of "
+                f"range for this batch/n_slabs configuration")
         t0 = time.perf_counter()
         event = self._recover(kills)
         event.t_recovery_s = time.perf_counter() - t0
+        event.aborted_at_slab = doomed.get("aborted_at_slab")
         self.coordinator.recovered(event, set(kills))
         self.injector.revive(kills)
-        # ---- resume: re-execute the reverted epoch (ingest already ran)
+        # ---- resume: re-execute the reverted epoch (ingest already ran);
+        # the slab high-watermark was reset by the revert, so the stream
+        # re-ships from slab 0 onto the reverted base — exactly once
         m = self.eng.run_epoch(batch)
         self._commit_durable()
         m["recovery"] = event
@@ -132,52 +170,72 @@ class ClusterRuntime:
         epoch = self.epoch
         plan = coord.fence_missed(epoch, kills)
         failed = set(range(self.topology.n_nodes)) - coord.alive
-        # revert every replica to the last committed epoch (§4.5.2)
+        # revert every replica to the last committed epoch (§4.5.2) —
+        # discarding the in-flight stream slabs the replicas consumed
+        hwm_before = eng._slab_hwm
         eng.revert_to_snapshot()
-        # physical memory loss: a killed node's primary block survives in
-        # the cluster only while a sibling partial home lives; full
+        # physical memory loss: EVERYTHING a killed node held dies with it
+        # — its primary block and the secondary copy it hosted; full
         # replicas die with their node
         lost = set(coord.lost_blocks(failed)) & set(kills)
         full_dead = all(n in failed for n in range(self.topology.f))
-        for n in sorted(lost):
-            eng.scribble_block(n)
+        for n in sorted(kills):
+            eng.scribble_node(n)
         if full_dead:
             eng.scribble_full()
         reloaded = False
+        from_secondary: tuple = ()
         if plan.case in (RecoveryCase.PHASE_SWITCHING,
                          RecoveryCase.FULL_ONLY):
             # donor copy from the surviving full replica (§4.5.3 case 1/3):
             # every killed node re-copies its block on rejoin, lost or not
             eng.restore_nodes_from_full(sorted(kills))
         elif plan.case is RecoveryCase.FALLBACK_DIST_CC:
-            # no full replica left; the partial set is complete —
-            # re-replicate a full copy from the partials (§4.5.3 case 2)
+            # no full replica left; the partial set is complete — dead
+            # blocks restore from their PHYSICAL surviving secondary
+            # copies (the actual §4.5.3 case-2 copy, not a snapshot
+            # stand-in), then a full copy re-replicates from the partials
+            restorable = [n for n in sorted(kills)
+                          if eng.secondary
+                          and eng.sec_home(n) not in failed]
+            if restorable:
+                eng.restore_blocks_from_secondary(restorable)
+                from_secondary = tuple(restorable)
             eng.rebuild_full_from_partials()
         else:                                   # UNAVAILABLE: disk or halt
             if self.durability is None:
                 raise RuntimeError(
                     "cluster UNAVAILABLE (no full replica, incomplete "
                     "partial set) and no durability attached: halt")
-            val, tid, e_c = walmod.recover(self.durability.dir)
-            eng.load_committed(val, tid)
+            val, tid, idx, e_c = walmod.recover_full(self.durability.dir)
+            eng.load_committed(val, tid, indexes=idx)
             reloaded = True
         return RecoveryEvent(
             epoch=epoch, failed=tuple(sorted(kills)), case=plan.case,
             run_mode=plan.run_mode, reverted_to=plan.revert_to_epoch,
             view=coord.view, lost_blocks=tuple(sorted(lost)),
-            reloaded_from_disk=reloaded)
+            reloaded_from_disk=reloaded,
+            restored_from_secondary=from_secondary,
+            slabs_discarded=hwm_before)
 
     # ------------------------------------------------------------------
     def _commit_durable(self):
         """Append the committed epoch's streams to the per-node WALs and
-        flush (the disk part of the group commit); checkpoint on cadence."""
+        flush (the disk part of the group commit); checkpoint on cadence
+        (index segments ride along for index-bearing workloads)."""
         if self.durability is None:
             return
         d, eng = self.durability, self.eng
         logs = eng._last_logs or {}
         d.log_epoch_streams(logs.get("part"), logs.get("sm"), eng.R, eng.C,
-                            np.arange(eng.P) // eng.ppn)
+                            np.arange(eng.P) // eng.ppn,
+                            cross_kinds=logs.get("cross_kinds"),
+                            cross_delta=logs.get("cross_delta"))
         snap = eng._snap
+        idx = None
+        if eng.has_index:
+            idx = [{k: np.asarray(ix[k]) for k in ("key", "prow", "tid")}
+                   for ix in snap["part_idx"]]
         d.commit_epoch(eng.epoch - 1, np.asarray(snap["part_val"]),
-                       np.asarray(snap["part_tid"]))
+                       np.asarray(snap["part_tid"]), indexes=idx)
         eng._last_logs = None

@@ -74,5 +74,11 @@ class ClusterTxnService(TxnService):
             "recoveries": len(self.recovery_events),
             "recovery_latency_s": [round(e.t_recovery_s, 4)
                                    for e in self.recovery_events],
+            # §5 in-phase op-stream shipping: bytes that overlapped
+            # execution vs the unshipped tail the fences waited on
+            "op_bytes_overlapped": int(eng.stats.op_bytes_overlapped),
+            "op_bytes_fence": int(eng.stats.op_bytes_fence),
+            "slabs_shipped": int(eng.stats.slabs_shipped),
+            "slabs_discarded": int(eng.stats.slabs_discarded),
         })
         return out

@@ -50,6 +50,11 @@ class EngineStats:
     value_bytes: int = 0
     op_bytes_hybrid: int = 0
     value_bytes_if_not_hybrid: int = 0
+    index_op_bytes: int = 0         # index-maintenance ops on the op stream
+    op_bytes_overlapped: int = 0    # shipped DURING the partitioned phase
+    op_bytes_fence: int = 0         # the unshipped tail the fence waits on
+    slabs_shipped: int = 0          # stream slabs applied to replicas
+    slabs_discarded: int = 0        # in-flight slabs dropped by a revert
     part_time_s: float = 0.0
     sm_time_s: float = 0.0
     sm_rounds: int = 0              # OCC rounds executed (kernel launches)
@@ -65,18 +70,24 @@ class StarEngine:
                  indexes: list[IndexSpec] | None = None,
                  net: Network | None = None, adaptive_epoch: bool = False,
                  kernel: str = "jnp", strict_index: bool = False,
-                 durability=None):
+                 durability=None, n_slabs: int = 4):
         """kernel: "jnp" (reference executors) or "pallas" (fused OCC
         kernels, interpreted off-TPU) — bit-identical results either way.
         strict_index: raise instead of counting when an ordered-index
         segment overflows its capacity (silently dropping the largest key
         otherwise — see storage.index.segment_apply).
         durability: optional ``db.wal.Durability`` — committed epochs
-        append their value streams to per-worker write-ahead logs (flushed
-        inside the commit fence) with fuzzy checkpoints on a cadence;
-        ``db.wal.recover`` then rebuilds the exact committed state from
-        disk (§4.5.1's UNAVAILABLE case).  Records only: ordered indexes
-        are not yet log-durable, so the two are mutually exclusive."""
+        append their value streams — and, with indexes attached, their
+        ordered index-op streams — to per-worker write-ahead logs (flushed
+        inside the commit fence) with checkpoints on a cadence;
+        ``db.wal.recover_full`` then rebuilds the exact committed state
+        (records AND index segments) from disk (§4.5.1's UNAVAILABLE
+        case).
+        n_slabs: the §5 op-stream overlap model — each epoch's partitioned
+        stream ships in ``n_slabs`` chunks, the first ``n_slabs - 1``
+        overlapped with execution and only the tail exposed at the fence
+        (``n_slabs=1`` reproduces the old ship-everything-at-the-fence
+        accounting)."""
         P, R, C = n_partitions, rows_per_partition, n_cols
         self.P, self.R, self.C = P, R, C
         assert kernel in ("jnp", "pallas"), kernel
@@ -97,11 +108,13 @@ class StarEngine:
         self.controller = PhaseController(e_ms=iteration_ms,
                                           adaptive=adaptive_epoch)
         self.net = net or Network()
+        assert n_slabs >= 1, n_slabs
+        self.n_slabs = n_slabs
         self.durability = durability
         if durability is not None:
-            assert not self.has_index, \
-                "durability covers record streams only (no index WAL yet)"
-            durability.attach(self.store.val, self.store.tid)
+            durability.attach(self.store.val, self.store.tid,
+                              indexes=self.store.indexes
+                              if self.has_index else None)
         self.stats = EngineStats()
         self._jit_part = jax.jit(run_partitioned,
                                  static_argnames=("kernel",))
@@ -189,22 +202,23 @@ class StarEngine:
         # t_part was measured with block_until_ready above — and fence 1
         # needs the stream bytes to model its network drain; skipped
         # entirely when the batch carries no byte tables)
-        vb = ob = vb_alt = 0
-        if "p_row_bytes" in batch:
-            wmask = np.asarray(part_out["log"]["write"])
-            prb = self._pad_axis(batch["p_row_bytes"], 1)
-            pob = self._pad_axis(batch["p_op_bytes"], 1)
-            vb_alt = int(repl.value_bytes(wmask, prb))
-            ob = int(repl.operation_bytes(wmask, pob))
-        elif batch.get("row_bytes") is not None:
-            wmask = np.asarray(part_out["log"]["write"])
-            rb = batch["row_bytes"]
-            vb_alt = int(repl.value_bytes(wmask, rb[None, None, :]))
-            ob = int(repl.operation_bytes(wmask, batch["op_bytes"][None, None, :]))
+        vb = 0
+        vb_alt, slab_bytes, ib = repl.epoch_stream_bytes(
+            batch, part_out["log"], self.has_index, self.n_slabs,
+            lambda a: self._pad_axis(a, 1))
+        ob = sum(slab_bytes)                     # incl. index op bytes now
 
         # ---- fence 1: all streams applied, snapshot commit --------------
+        # §5 overlap: the first n_slabs-1 stream slabs shipped DURING the
+        # phase (their transfer hides under t_part); the fence waits only
+        # on the unshipped tail slab
         t0 = time.perf_counter()
-        t_net1 = self._fence(ob if self.hybrid else vb_alt)
+        ob_head, ob_tail = repl.split_overlapped(slab_bytes)
+        if self.hybrid:
+            t_net1 = self._fence(ob_tail, overlapped_bytes=ob_head,
+                                 t_exec_s=t_part)
+        else:
+            t_net1 = self._fence(vb_alt)
         t_fence1 = time.perf_counter()
         t_f1 = t_fence1 - t0
 
@@ -245,6 +259,7 @@ class StarEngine:
         t_sm_round = t_sm / self.max_rounds if B > 0 else 0.0
 
         # ---- byte accounting, single-master value stream ----------------
+        ib_sm = 0
         if B > 0:
             cw = np.asarray(sm_out["log"]["write"])            # (rounds,B,M)
             if "c_row_bytes" in batch:
@@ -253,12 +268,17 @@ class StarEngine:
                 vb = int(repl.value_bytes(cw, crb[None]))
             elif batch.get("row_bytes") is not None:
                 vb = int(repl.value_bytes(cw, batch["row_bytes"][None, None, :]))
+            if self.has_index and (vb or ob):
+                # index ops ride the SM stream too — previously uncounted
+                # in the fence's modeled bytes (fence-latency attribution)
+                ib_sm = repl.index_op_bytes(sm_out["log"]["iwrite"])
 
         # ---- fence 2: epoch boundary ------------------------------------
         t0 = time.perf_counter()
         if self.durability is not None:
-            self._log_epoch(part_out["log"], sm_out["log"] if B > 0 else None)
-        t_net2 = self._fence(vb, commit_epoch=self.epoch)
+            self._log_epoch(part_out["log"],
+                            sm_out["log"] if B > 0 else None, cross)
+        t_net2 = self._fence(vb + ib_sm, commit_epoch=self.epoch)
         self.epoch += 1
         t_fence2 = time.perf_counter()
         t_f2 = t_fence2 - t0
@@ -293,6 +313,11 @@ class StarEngine:
         s.value_bytes += vb
         s.op_bytes_hybrid += ob if self.hybrid else vb_alt
         s.value_bytes_if_not_hybrid += vb_alt
+        s.index_op_bytes += ib + ib_sm
+        if self.hybrid:
+            s.op_bytes_overlapped += ob_head
+            s.op_bytes_fence += ob_tail
+            s.slabs_shipped += len(slab_bytes)
         # per-txn commit outcomes + fence stamps — the service layer maps
         # these back to queued requests (group commit at the epoch fence)
         p_committed = np.asarray(part_out["committed"])          # (P, T_pad)
@@ -305,6 +330,8 @@ class StarEngine:
              "t_ingest_s": t_ingest,
              "t_fence1_s": t_fence1, "t_fence2_s": t_fence2,
              "t_fence_net_s": t_net1 + t_net2,
+             "op_bytes_overlapped": ob_head if self.hybrid else 0,
+             "op_bytes_fence": ob_tail if self.hybrid else vb_alt,
              "p_committed": p_committed, "c_committed": c_committed,
              "index_overflow": overflow,
              "starved": int(sstats["starved"])}
@@ -317,13 +344,18 @@ class StarEngine:
         return m
 
     # ------------------------------------------------------------------
-    def _fence(self, stream_bytes: int = 0, commit_epoch=None) -> float:
+    def _fence(self, stream_bytes: int = 0, commit_epoch=None,
+               overlapped_bytes: int = 0, t_exec_s: float = 0.0) -> float:
         """Replication fence: all outstanding writes applied, then the commit
         point. In-process the streams are applied synchronously above, so the
         fence is the snapshot promotion + epoch bookkeeping; the inter-node
-        cost — shipping this epoch's stream bytes through the NIC plus two
-        barrier round trips — is modeled through the Network envelope and
-        returned (reported as ``t_fence_net_s``), not slept.
+        cost is modeled through the Network envelope and returned (reported
+        as ``t_fence_net_s``), not slept.
+
+        ``stream_bytes`` drain entirely inside the fence (the unshipped
+        tail); ``overlapped_bytes`` were shipped DURING the preceding
+        ``t_exec_s`` of execution (§5 op-stream overlap) and surface at the
+        fence only as the residue their transfer did not hide.
 
         ``commit_epoch`` (fence 2 only, when durability is attached) fsyncs
         every worker's write-ahead log inside the fence — the disk group
@@ -332,18 +364,24 @@ class StarEngine:
         self.replica_store.snapshot_commit()
         self.stats.fences += 1
         if commit_epoch is not None and self.durability is not None:
-            self.durability.commit_epoch(commit_epoch, self.store.val,
-                                         self.store.tid)
-        t_net = self.net.transfer_s(stream_bytes) + 2 * self.net.rtt_s
+            self.durability.commit_epoch(
+                commit_epoch, self.store.val, self.store.tid,
+                indexes=self.store.indexes if self.has_index else None)
+        t_net = repl.fence_net_seconds(self.net, stream_bytes,
+                                       overlapped_bytes, t_exec_s)
         self.stats.fence_net_s += t_net
         return t_net
 
-    def _log_epoch(self, plog, slog):
-        """Append this epoch's committed value streams to the per-worker
+    def _log_epoch(self, plog, slog, cross=None):
+        """Append this epoch's committed value streams — and the ordered
+        index-op streams when indexes are attached — to the per-worker
         WALs (worker w owns partitions p ≡ w mod n_workers)."""
         d = self.durability
+        with_idx = self.has_index and cross is not None
         d.log_epoch_streams(plog, slog, self.R, self.C,
-                            np.arange(self.P) % d.n_workers)
+                            np.arange(self.P) % d.n_workers,
+                            cross_kinds=cross["kind"] if with_idx else None,
+                            cross_delta=cross["delta"] if with_idx else None)
 
     def replica_consistent(self) -> bool:
         return self.store.equals(self.replica_store)

@@ -149,17 +149,40 @@ class FaultInjector:
     committed epoch and runs the classified recovery.  ``killed`` tracks
     nodes currently down; recovery revives them once their state is
     restored from a donor or from disk (case-1 copy + catch-up, §4.5.3).
+
+    ``schedule_kill(..., slab=s)`` kills the node MID-STREAM: while the
+    scheduled epoch's partitioned phase executes stream slab ``s`` —
+    slabs ``0..s-1`` have already shipped to the replicas, so the epoch
+    aborts with that prefix of its op stream consumed, exercising the
+    §4.5 revert's slab high-watermark (exactly-once re-streaming).
+    ``slab=0`` kills before anything shipped (nothing to discard).
     """
     schedule: dict = field(default_factory=dict)    # epoch -> set[node]
+    slab_schedule: dict = field(default_factory=dict)  # epoch -> {slab: set}
     killed: set = field(default_factory=set)
     kills_injected: int = 0
 
-    def schedule_kill(self, node: int, epoch: int):
-        self.schedule.setdefault(int(epoch), set()).add(int(node))
+    def schedule_kill(self, node: int, epoch: int, slab: int | None = None):
+        if slab is None:
+            self.schedule.setdefault(int(epoch), set()).add(int(node))
+        else:
+            self.slab_schedule.setdefault(int(epoch), {}).setdefault(
+                int(slab), set()).add(int(node))
+
+    def slab_kills(self, epoch: int) -> dict:
+        """Peek the mid-stream kills of ``epoch`` ({slab: nodes}) without
+        consuming them — the runtime arms its abort check from this before
+        polling the fence."""
+        return {s: set(ns)
+                for s, ns in self.slab_schedule.get(int(epoch), {}).items()}
 
     def poll(self, epoch: int) -> set[int]:
-        """Nodes newly killed during ``epoch``; they join ``killed``."""
-        fresh = set(self.schedule.pop(int(epoch), set())) - self.killed
+        """Nodes newly killed during ``epoch`` (mid-stream kills included —
+        by fence time they are just as dead); they join ``killed``."""
+        fresh = set(self.schedule.pop(int(epoch), set()))
+        for nodes in self.slab_schedule.pop(int(epoch), {}).values():
+            fresh |= set(nodes)
+        fresh -= self.killed
         self.killed |= fresh
         self.kills_injected += len(fresh)
         return fresh

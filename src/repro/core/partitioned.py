@@ -33,7 +33,7 @@ from repro.storage.index import apply_index_ops
 
 
 def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None,
-                    kernel: str = "jnp", interpret=None):
+                    kernel: str = "jnp", interpret=None, part_ids=None):
     """val: (P, R, C) int32; tidw: (P, R) uint32.
 
     ptxn: {'valid': (P,T) bool, 'row': (P,T,M) int32 (partition-local flat
@@ -46,9 +46,15 @@ def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None,
 
     kernel: "jnp" (reference) or "pallas" (fused index probe).
 
+    part_ids: optional (P,) int32 — the global partition id each local row
+    holds (a shard_map block passes its slice of the global ids so index
+    maintenance aligns op keys with the right local segments).
+
     Returns (val', tid', log, stats).  log holds every op slot's post-image
     (P,T,M,...) with a write mask — the replication stream (plus the
-    per-slot "iwrite" index-maintenance mask when an index is attached).
+    per-slot "iwrite" index-maintenance mask when an index is attached);
+    ``out["seq"]`` carries the final per-partition TID sequence so callers
+    chaining the slabs of one epoch thread it into the next call.
     """
     # deferred: importing repro.kernels.occ.ops runs repro.core.ops, whose
     # PACKAGE init (repro/core/__init__.py) imports engine -> this module —
@@ -110,7 +116,8 @@ def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None,
             iw = writes_index(kind[:, :K]) & valid[:, None] & iwrite_ok  # (P,K)
             index, ov = apply_index_ops(
                 index, kind[:, :K], delta[:, :K], iw,
-                jnp.broadcast_to(new_tid[:, None], (P, K)))
+                jnp.broadcast_to(new_tid[:, None], (P, K)),
+                part_ids=part_ids)
             overflow = overflow + ov
             log["iwrite"] = iw
             # per-op skipped-consume mask — the consume-feedback stream the
@@ -132,7 +139,7 @@ def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None,
         "writes": jnp.sum(log["write"]),
         "index_overflow": overflow,
     }
-    out = {"log": log, "committed": committed}
+    out = {"log": log, "committed": committed, "seq": seq}
     if index is not None:
         out["index"] = index
     return val, tidw, out, stats

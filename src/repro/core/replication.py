@@ -32,6 +32,8 @@ from repro.storage.index import apply_index_ops
 
 KEY_BYTES = 8
 TID_BYTES = 8
+# an index-maintenance op ships (key, kind, operand words) on the op stream
+INDEX_OP_BYTES = KEY_BYTES + 4 + 8
 
 
 def thomas_apply(val, tidw, wrows, wvals, wtids):
@@ -83,7 +85,7 @@ def replay_operations(val, tidw, log):
     return val, tidw
 
 
-def replay_partitioned(val, tidw, log, index=None):
+def replay_partitioned(val, tidw, log, index=None, part_ids=None):
     """Ordered replay of the whole partitioned-phase stream, all partitions
     at once (the vectorized form of ``replay_operations``), with optional
     index maintenance.
@@ -91,6 +93,8 @@ def replay_partitioned(val, tidw, log, index=None):
     val: (P, R, C); tidw: (P, R); log: {'row','kind','delta','tid','write'}
     each (P, T, M, ...) plus 'iwrite' (P, T, K) when index ops were logged.
     index: list of {"key","prow","tid"} (P, cap_i) pytrees.
+    part_ids: optional (P,) global partition id per array row (rolled
+    secondary-replica layouts pass their home-major permutation).
     """
     P, T, M = log["row"].shape
     K = min(IDX_OPS, M)
@@ -113,7 +117,7 @@ def replay_partitioned(val, tidw, log, index=None):
             # executors already counted it
             index, _ = apply_index_ops(
                 index, slot["kind"][:, :K], slot["delta"][:, :K],
-                slot["iwrite"], slot["tid"][:, :K])
+                slot["iwrite"], slot["tid"][:, :K], part_ids=part_ids)
         return (val, tidw, index), None
 
     slots = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), log)   # (T, P, …)
@@ -121,7 +125,7 @@ def replay_partitioned(val, tidw, log, index=None):
     return val, tidw, index
 
 
-def replay_index_rounds(index, kinds, delta, iwrite, tids):
+def replay_index_rounds(index, kinds, delta, iwrite, tids, part_ids=None):
     """Replay the single-master phase's index-maintenance stream.
 
     Within one OCC round committed index ops hold disjoint position locks,
@@ -131,13 +135,15 @@ def replay_index_rounds(index, kinds, delta, iwrite, tids):
 
     kinds/delta: (B, K≥) static op arrays (same every round);
     iwrite: (rounds, B, K) committed-index-op masks; tids: (rounds, B, M).
+    part_ids: optional (P,) global partition id per segment row (partial /
+    rolled-secondary replica layouts).
     """
     K = iwrite.shape[-1]
 
     def step(index, per_round):
         iw, tid_r = per_round
         return apply_index_ops(index, kinds[:, :K], delta[:, :K], iw,
-                               tid_r[:, :K])[0], None
+                               tid_r[:, :K], part_ids=part_ids)[0], None
 
     index, _ = jax.lax.scan(step, index, (iwrite, tids))
     return index
@@ -189,6 +195,84 @@ def wal_master_streams(log, R: int, C: int, n_workers: int,
             yield w, rows, vals, tids, m
 
 
+def wal_index_streams(plog, n_workers: int, worker_of_partition,
+                      cross_kinds=None, cross_delta=None, slog=None):
+    """Split one epoch's index-maintenance op streams into per-worker WAL
+    chunks.  Unlike record post-images (Thomas-merged, order-free), index
+    ops replay ORDERED — each op carries a ``step`` id (partitioned queue
+    slot t, then single-master round T+r) and recovery re-applies each
+    file's chunks step-group by step-group in file order.  A partition's
+    ops all land in its owner's file (partitioned ops by construction;
+    single-master ops split by the op key's partition), so cross-file
+    chunks touch disjoint segments and commute.
+
+    plog: partitioned log with 'kind' (P,T,M), 'delta' (P,T,M,C),
+    'iwrite' (P,T,K), 'tid' (P,T,M).  cross_kinds/cross_delta: the
+    single-master batch's (B, M)/(B, M, C) op arrays with slog the SM log
+    ('iwrite' (rounds,B,K), 'tid' (rounds,B,M)).
+
+    Yields ``(worker, step, kinds, delta, tids)`` flat committed-op arrays
+    in step-ascending order, non-empty only.
+    """
+    from repro.storage.index import PART_SHIFT
+    from repro.core.ops import IX_KEY
+    worker_of_partition = np.asarray(worker_of_partition)
+    T = 0
+    per_worker = {w: [] for w in range(n_workers)}
+    if plog is not None and "iwrite" in plog:
+        iw = np.asarray(plog["iwrite"])                         # (P, T, K)
+        P, T, K = iw.shape
+        kinds = np.asarray(plog["kind"])[:, :, :K]
+        delta = np.asarray(plog["delta"])[:, :, :K]
+        tids = np.asarray(plog["tid"])[:, :, :K]
+        steps = np.broadcast_to(np.arange(T, dtype=np.int32)[None, :, None],
+                                iw.shape)
+        for w in range(n_workers):
+            sel = worker_of_partition == w
+            m = iw[sel]
+            if not m.any():
+                continue
+            # (n_p, T, K) -> (T, n_p, K) so the flat stream is step-major
+            order = (1, 0, 2)
+            m_t = m.transpose(order).reshape(-1)
+            per_worker[w].append((
+                steps[sel].transpose(order).reshape(-1)[m_t],
+                kinds[sel].transpose(order).reshape(-1)[m_t],
+                delta[sel].transpose(1, 0, 2, 3).reshape(
+                    -1, delta.shape[-1])[m_t],
+                tids[sel].transpose(order).reshape(-1)[m_t]))
+    if slog is not None and "iwrite" in slog:
+        iw = np.asarray(slog["iwrite"])                         # (r, B, K)
+        rounds, B, K = iw.shape
+        kinds = np.broadcast_to(np.asarray(cross_kinds)[None, :, :K],
+                                iw.shape)
+        cross_delta = np.asarray(cross_delta)
+        delta = np.broadcast_to(cross_delta[None, :, :K],
+                                iw.shape + (cross_delta.shape[-1],))
+        tids = np.asarray(slog["tid"])[:, :, :K]
+        steps = np.broadcast_to(
+            T + np.arange(rounds, dtype=np.int32)[:, None, None], iw.shape)
+        part = (delta[..., IX_KEY].astype(np.int64) >> PART_SHIFT)
+        owner = worker_of_partition[np.clip(part, 0,
+                                            len(worker_of_partition) - 1)]
+        flat = iw.reshape(-1)
+        for w in range(n_workers):
+            m = flat & (owner.reshape(-1) == w)
+            if not m.any():
+                continue
+            per_worker[w].append((
+                steps.reshape(-1)[m], kinds.reshape(-1)[m],
+                delta.reshape(-1, delta.shape[-1])[m],
+                tids.reshape(-1)[m]))
+    for w, chunks in per_worker.items():
+        if chunks:
+            yield (w,
+                   np.concatenate([c[0] for c in chunks]),
+                   np.concatenate([c[1] for c in chunks]),
+                   np.concatenate([c[2] for c in chunks]),
+                   np.concatenate([c[3] for c in chunks]))
+
+
 # ---------------------------------------------------------------------------
 # bandwidth accounting (Fig. 15)
 # ---------------------------------------------------------------------------
@@ -202,3 +286,88 @@ def operation_bytes(log_write_mask, op_bytes_per_op) -> jnp.ndarray:
     """Operation replication ships only (key, kind, operand)."""
     return jnp.sum(jnp.where(log_write_mask,
                              op_bytes_per_op + KEY_BYTES + 4, 0))
+
+
+def index_op_bytes(iwrite_mask) -> int:
+    """Index-maintenance ops ride the SAME op stream as record ops — their
+    bytes are fence-relevant too (they were silently uncounted before)."""
+    return int(np.sum(np.asarray(iwrite_mask), dtype=np.int64)) \
+        * INDEX_OP_BYTES
+
+
+def slab_op_bytes(wmask, op_tbl, iwrite, n_slabs: int) -> list[int]:
+    """Per-slab op-stream bytes: the epoch's T queue slots split into
+    ``n_slabs`` contiguous chunks (record ops + index ops per chunk),
+    using the same ``T * s // S`` bounds the cluster engine executes its
+    stream slabs with.  The sum over slabs is exactly the epoch's total
+    op-stream bytes — the invariant the byte-attribution regression test
+    pins.  Shared by both engines so the byte model cannot desynchronize
+    between fig13 (cluster) and fig15 (single-host)."""
+    T = wmask.shape[1]
+    S = max(1, min(n_slabs, T))
+    bounds = [T * s // S for s in range(S + 1)]
+    out = []
+    for s in range(S):
+        sl = slice(bounds[s], bounds[s + 1])
+        b = int(operation_bytes(wmask[:, sl], op_tbl[:, sl]))
+        if iwrite is not None:
+            b += index_op_bytes(iwrite[:, sl])
+        out.append(b)
+    return out
+
+
+def fence_net_seconds(net, fence_bytes: int, overlapped_bytes: int = 0,
+                      t_exec_s: float = 0.0) -> float:
+    """The modeled inter-node fence cost, shared by both engines:
+    ``fence_bytes`` (the unshipped tail) drain entirely inside the fence
+    plus two barrier round trips; ``overlapped_bytes`` shipped DURING the
+    preceding ``t_exec_s`` of execution and surface only as the residue
+    their transfer did not hide."""
+    return net.transfer_s(fence_bytes) + 2 * net.rtt_s \
+        + max(0.0, net.transfer_s(overlapped_bytes) - t_exec_s)
+
+
+def epoch_stream_bytes(batch, log, has_index: bool, n_slabs: int,
+                       pad_fn) -> tuple[int, list[int], int]:
+    """One epoch's partitioned-stream byte accounting, shared by both
+    engines so their fence models cannot desynchronize.
+
+    batch carries either per-op tables (``p_row_bytes``/``p_op_bytes``,
+    padded to the log's T via ``pad_fn``) or uniform per-op-slot tables
+    (``row_bytes``/``op_bytes``); log is the phase's (P, T, M) write log
+    (with ``iwrite`` when indexes are attached).  Returns
+    ``(value_bytes_alt, per_slab_op_bytes, index_op_bytes)`` — all zeros /
+    empty when the batch carries no byte tables."""
+    has_tables = "p_row_bytes" in batch \
+        or batch.get("row_bytes") is not None
+    if not has_tables:
+        return 0, [], 0
+    wmask = np.asarray(log["write"])
+    iw = np.asarray(log["iwrite"]) if has_index else None
+    if "p_row_bytes" in batch:
+        prb = np.asarray(pad_fn(batch["p_row_bytes"]))
+        pob = np.asarray(pad_fn(batch["p_op_bytes"]))
+    else:
+        prb = np.broadcast_to(
+            np.asarray(batch["row_bytes"])[None, None, :], wmask.shape)
+        pob = np.broadcast_to(
+            np.asarray(batch["op_bytes"])[None, None, :], wmask.shape)
+    vb_alt = int(value_bytes(wmask, prb))
+    slabs = slab_op_bytes(wmask, pob, iw, n_slabs)
+    ib = index_op_bytes(iw) if iw is not None else 0
+    return vb_alt, slabs, ib
+
+
+def split_overlapped(slab_bytes: list[int]) -> tuple[int, int]:
+    """Split a per-slab byte list into (overlapped, fence_exposed).
+
+    The fence-exposed tail is the LAST slab that carried committed bytes —
+    it ships closest to the fence, so charging it there is the
+    conservative attribution (trailing queue slots are often padding, and
+    crediting an empty final slab would claim a 100% hide)."""
+    if not slab_bytes:
+        return 0, 0
+    tail_i = max((i for i, b in enumerate(slab_bytes) if b > 0),
+                 default=len(slab_bytes) - 1)
+    tail = slab_bytes[tail_i]
+    return sum(slab_bytes) - tail, tail

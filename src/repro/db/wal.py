@@ -1,14 +1,26 @@
 """Durability: per-worker write-ahead logs + fuzzy checkpoints (§4.5.1, §5).
 
-Log entry = (key, value words, TID) — TID embeds the epoch.  Operation-
-replication messages are transformed before logging: the op is applied first
-and the WHOLE record value is logged (paper §5), so recovery can replay logs
-in ANY order under the Thomas write rule.
+Two record kinds per log entry:
 
-Checkpoints are fuzzy (no freeze): the checkpointer scans (value, TID) while
-writers proceed; recovery loads the checkpoint and replays all logs since the
-checkpoint's start epoch e_c, again Thomas-rule-merged.  ``recover`` is
-exercised by tests end-to-end (crash -> reload -> bit-identical state).
+* ``KIND_RECORD`` — (key, value words, TID).  Operation-replication
+  messages are transformed before logging: the op is applied first and the
+  WHOLE record value is logged (paper §5), so recovery can replay record
+  chunks in ANY order under the Thomas write rule.
+* ``KIND_INDEX`` — the ordered-index maintenance op stream
+  (step, kind, IX_* operand columns, TID).  Index ops are NOT
+  Thomas-mergeable: recovery replays each file's index chunks in file
+  order, step-group by step-group, exactly once (strictly after the
+  checkpoint epoch).  A partition's index ops all land in its owner's
+  file, so chunks from different files touch disjoint segments and
+  commute — per-file order is the only order that matters.
+
+Checkpoints are fuzzy for records (the checkpointer scans (value, TID)
+while writers proceed; over-replay is idempotent under the Thomas rule)
+and epoch-aligned for indexes (the index arrays are snapshotted at the
+commit fence of e_c and index chunks replay only for epochs > e_c —
+exactly-once, since double-applying an insert would duplicate the key).
+``recover`` / ``recover_full`` are exercised by tests end-to-end
+(crash -> reload -> bit-identical state, indexes included).
 """
 from __future__ import annotations
 
@@ -19,7 +31,11 @@ from pathlib import Path
 
 import numpy as np
 
-HEADER = struct.Struct("<IIQ")     # n_entries, n_cols, epoch
+HEADER = struct.Struct("<BIIQ")    # kind, n_entries, n_cols, epoch
+KIND_RECORD = 0
+KIND_INDEX = 1
+MAGIC = b"WAL2"                    # format marker: refuses pre-v2 files
+                                   # instead of mis-parsing them on resume
 
 
 class WriteAheadLog:
@@ -27,10 +43,25 @@ class WriteAheadLog:
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.path = self.dir / f"wal_{worker_id:03d}.log"
+        fresh = not self.path.exists() or self.path.stat().st_size == 0
+        if not fresh:
+            # resume-after-crash appends to the existing file: refuse a
+            # pre-v2 log NOW rather than corrupting it and only finding
+            # out at recovery time (the one moment the WAL matters)
+            with open(self.path, "rb") as fh:
+                if fh.read(len(MAGIC)) != MAGIC:
+                    raise ValueError(
+                        f"{self.path}: not a {MAGIC.decode()} write-ahead "
+                        "log — refusing to append to a pre-v2 file; start "
+                        "a fresh log directory")
         self._fh = open(self.path, "ab")
+        if fresh:
+            self._fh.write(MAGIC)
+            self._fh.flush()
         self.pending_rows: list[np.ndarray] = []
         self.pending_vals: list[np.ndarray] = []
         self.pending_tids: list[np.ndarray] = []
+        self.pending_idx: list[tuple] = []     # (step, kinds, delta, tids)
 
     def append(self, rows, vals, tids, write_mask):
         """Buffer committed writes (arrays of any shape; mask selects)."""
@@ -43,81 +74,177 @@ class WriteAheadLog:
             self.pending_vals.append(vals.astype(np.int32))
             self.pending_tids.append(tids.astype(np.uint32))
 
+    def append_index_ops(self, step, kinds, delta, tids):
+        """Buffer one committed index-op stream chunk (flat, step-major —
+        see ``replication.wal_index_streams``)."""
+        step = np.asarray(step).astype(np.int32).reshape(-1)
+        if step.size:
+            self.pending_idx.append(
+                (step, np.asarray(kinds, np.int32).reshape(-1),
+                 np.asarray(delta, np.int32).reshape(step.size, -1),
+                 np.asarray(tids, np.uint32).reshape(-1)))
+
     def flush(self, epoch: int):
         """Periodic flush; also called inside the replication fence."""
-        if not self.pending_rows:
-            return 0
-        rows = np.concatenate(self.pending_rows)
-        vals = np.concatenate(self.pending_vals)
-        tids = np.concatenate(self.pending_tids)
-        self._fh.write(HEADER.pack(len(rows), vals.shape[1], epoch))
-        self._fh.write(rows.tobytes())
-        self._fh.write(vals.tobytes())
-        self._fh.write(tids.tobytes())
-        self._fh.flush()
-        os.fsync(self._fh.fileno())
-        n = len(rows)
-        self.pending_rows, self.pending_vals, self.pending_tids = [], [], []
-        return n
+        n_total = 0
+        wrote = False
+        if self.pending_rows:
+            rows = np.concatenate(self.pending_rows)
+            vals = np.concatenate(self.pending_vals)
+            tids = np.concatenate(self.pending_tids)
+            self._fh.write(HEADER.pack(KIND_RECORD, len(rows),
+                                       vals.shape[1], epoch))
+            self._fh.write(rows.tobytes())
+            self._fh.write(vals.tobytes())
+            self._fh.write(tids.tobytes())
+            n_total += len(rows)
+            wrote = True
+            self.pending_rows, self.pending_vals, self.pending_tids = \
+                [], [], []
+        if self.pending_idx:
+            step = np.concatenate([c[0] for c in self.pending_idx])
+            kinds = np.concatenate([c[1] for c in self.pending_idx])
+            delta = np.concatenate([c[2] for c in self.pending_idx])
+            tids = np.concatenate([c[3] for c in self.pending_idx])
+            self._fh.write(HEADER.pack(KIND_INDEX, len(step),
+                                       delta.shape[1], epoch))
+            self._fh.write(step.tobytes())
+            self._fh.write(kinds.tobytes())
+            self._fh.write(delta.tobytes())
+            self._fh.write(tids.tobytes())
+            n_total += len(step)
+            wrote = True
+            self.pending_idx = []
+        if wrote:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+        return n_total
 
     def close(self):
         self._fh.close()
 
     @staticmethod
     def read_entries(path: Path, since_epoch: int = 0):
+        """Record chunks (Thomas-mergeable post-images) at/after
+        ``since_epoch``, in file order."""
+        return [payload for kind, epoch, payload in
+                WriteAheadLog.read_all(path)
+                if kind == KIND_RECORD and epoch >= since_epoch]
+
+    @staticmethod
+    def read_all(path: Path):
+        """Every entry as (kind, epoch, payload) in file order.  Record
+        payload: (rows, vals, tids); index payload:
+        (step, kinds, delta, tids)."""
         out = []
         raw = Path(path).read_bytes()
-        off = 0
+        if not raw:
+            return out
+        if raw[:len(MAGIC)] != MAGIC:
+            raise ValueError(
+                f"{path}: not a {MAGIC.decode()} write-ahead log — the "
+                "file predates the record-kind format (re-parse would "
+                "reconstruct garbage); start a fresh log directory")
+        off = len(MAGIC)
         while off < len(raw):
-            n, c, epoch = HEADER.unpack_from(raw, off)
+            kind, n, c, epoch = HEADER.unpack_from(raw, off)
             off += HEADER.size
-            rows = np.frombuffer(raw, np.int64, n, off); off += 8 * n
-            vals = np.frombuffer(raw, np.int32, n * c, off).reshape(n, c)
-            off += 4 * n * c
-            tids = np.frombuffer(raw, np.uint32, n, off); off += 4 * n
-            if epoch >= since_epoch:
-                out.append((rows, vals, tids))
+            if kind == KIND_RECORD:
+                rows = np.frombuffer(raw, np.int64, n, off); off += 8 * n
+                vals = np.frombuffer(raw, np.int32, n * c, off).reshape(n, c)
+                off += 4 * n * c
+                tids = np.frombuffer(raw, np.uint32, n, off); off += 4 * n
+                out.append((kind, epoch, (rows, vals, tids)))
+            else:
+                step = np.frombuffer(raw, np.int32, n, off); off += 4 * n
+                kinds = np.frombuffer(raw, np.int32, n, off); off += 4 * n
+                delta = np.frombuffer(raw, np.int32, n * c, off).reshape(n, c)
+                off += 4 * n * c
+                tids = np.frombuffer(raw, np.uint32, n, off); off += 4 * n
+                out.append((kind, epoch, (step, kinds, delta, tids)))
         return out
 
 
 def write_checkpoint(directory: str | Path, val: np.ndarray, tid: np.ndarray,
-                     epoch: int):
-    """Fuzzy checkpoint: records e_c; logs earlier than e_c become dead."""
+                     epoch: int, indexes=None):
+    """Fuzzy checkpoint: records e_c; logs earlier than e_c become dead.
+    ``indexes`` (optional list of {"key","prow","tid"}) snapshot alongside
+    — index chunks replay strictly AFTER e_c (exactly-once), so the index
+    arrays must be the state at e_c's commit fence."""
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     np.save(d / "ckpt_val.npy", np.asarray(val))
     np.save(d / "ckpt_tid.npy", np.asarray(tid))
-    (d / "ckpt_meta.json").write_text(json.dumps({"epoch": int(epoch)}))
+    n_idx = 0 if indexes is None else len(indexes)
+    for i in range(n_idx):
+        for fld in ("key", "prow", "tid"):
+            np.save(d / f"ckpt_idx{i}_{fld}.npy",
+                    np.asarray(indexes[i][fld]))
+    (d / "ckpt_meta.json").write_text(
+        json.dumps({"epoch": int(epoch), "n_indexes": n_idx}))
 
 
 def recover(directory: str | Path, shuffle_seed: int | None = None):
-    """Load checkpoint + replay all WALs since e_c with the Thomas rule.
-    Returns (val, tid, epoch).
+    """Load checkpoint + replay all record WAL chunks since e_c with the
+    Thomas rule.  Returns (val, tid, epoch) — records only; index-aware
+    callers use :func:`recover_full`.
 
     ``shuffle_seed`` permutes the replay order of every (file, flush-chunk)
-    pair before applying — the Thomas rule makes recovery order-free (each
-    entry is a whole-record post-image tagged with its commit TID, whose
-    epoch lives in the high bits), so any permutation must produce the
-    identical state; tests exercise this directly."""
+    pair before applying — the Thomas rule makes record recovery order-free
+    (each entry is a whole-record post-image tagged with its commit TID,
+    whose epoch lives in the high bits), so any permutation must produce
+    the identical state; tests exercise this directly."""
+    val, tid, _, epoch = recover_full(directory, shuffle_seed=shuffle_seed)
+    return val, tid, epoch
+
+
+def recover_full(directory: str | Path, shuffle_seed: int | None = None):
+    """Checkpoint + WAL replay, indexes included.  Returns
+    (val, tid, indexes | None, epoch).
+
+    Record chunks Thomas-merge in any order (``shuffle_seed`` exercises
+    that); index chunks replay per file in file order, grouped by their
+    step ids, only for epochs strictly after the checkpoint epoch
+    (exactly-once — the checkpointed index arrays already contain e_c)."""
     from repro.core.replication import thomas_apply
+    from repro.storage.index import apply_index_ops
     import jax.numpy as jnp
     d = Path(directory)
     meta = json.loads((d / "ckpt_meta.json").read_text())
+    e_c = meta["epoch"]
     val = jnp.asarray(np.load(d / "ckpt_val.npy"))
     tid = jnp.asarray(np.load(d / "ckpt_tid.npy"))
+    n_idx = int(meta.get("n_indexes", 0))
+    indexes = None
+    if n_idx:
+        indexes = [{fld: jnp.asarray(np.load(d / f"ckpt_idx{i}_{fld}.npy"))
+                    for fld in ("key", "prow", "tid")} for i in range(n_idx)]
     shape = val.shape
     fval = val.reshape(-1, shape[-1])
     ftid = tid.reshape(-1)
-    chunks = []
+    chunks, idx_chunks = [], []
     for wal in sorted(d.glob("wal_*.log")):
-        chunks.extend(WriteAheadLog.read_entries(wal, meta["epoch"]))
+        for kind, epoch, payload in WriteAheadLog.read_all(wal):
+            if kind == KIND_RECORD and epoch >= e_c:
+                chunks.append(payload)
+            elif kind == KIND_INDEX and epoch > e_c:
+                idx_chunks.append((epoch, payload))
     if shuffle_seed is not None:
         np.random.default_rng(shuffle_seed).shuffle(chunks)
     for rows, vals, tids in chunks:
         fval, ftid, _ = thomas_apply(
             fval, ftid, jnp.asarray(rows, jnp.int32), jnp.asarray(vals),
             jnp.asarray(tids))
-    return fval.reshape(shape), ftid.reshape(shape[:-1]), meta["epoch"]
+    if indexes is not None:
+        # per-file order is already epoch-ascending; replay each chunk's
+        # step groups in order (ops within a step group commuted live)
+        for _, (step, kinds, delta, tids) in idx_chunks:
+            for s in np.unique(step):          # np.unique sorts ascending
+                m = step == s
+                indexes, _ = apply_index_ops(
+                    indexes, jnp.asarray(kinds[m]), jnp.asarray(delta[m]),
+                    jnp.ones(int(m.sum()), bool), jnp.asarray(tids[m]))
+    return (fval.reshape(shape), ftid.reshape(shape[:-1]), indexes, e_c)
 
 
 # ---------------------------------------------------------------------------
@@ -128,14 +255,13 @@ class Durability:
 
     One instance serves one engine (single-host ``StarEngine`` or one
     ``ClusterRuntime``): each worker (paper: node; here: partition group)
-    appends its committed value stream to its own ``WriteAheadLog``, all
-    logs flush inside the epoch's commit fence, and every
-    ``checkpoint_every`` epochs the committed state is checkpointed fuzzily
-    (writers proceed; the checkpoint records its start epoch e_c and
-    recovery replays all logs since e_c — over-replay is idempotent under
-    the Thomas rule).  An epoch-0 checkpoint of the initial state is
-    written at attach time so recovery works before the first cadence
-    checkpoint.
+    appends its committed value stream — and, for index-bearing workloads,
+    its ordered index-op stream — to its own ``WriteAheadLog``, all logs
+    flush inside the epoch's commit fence, and every ``checkpoint_every``
+    epochs the committed state is checkpointed (fuzzily for records;
+    epoch-aligned index arrays ride along so index replay stays
+    exactly-once).  An epoch-0 checkpoint of the initial state is written
+    at attach time so recovery works before the first cadence checkpoint.
 
     TID epochs are 8 bits (``core.tid``): log retention beyond 255 epochs
     past the checkpoint would alias the Thomas ordering, so the cadence
@@ -153,14 +279,15 @@ class Durability:
         self.checkpoints = 0
         self.last_ckpt_epoch = 0
 
-    def attach(self, val, tid):
+    def attach(self, val, tid, indexes=None):
         """Write the epoch-0 baseline checkpoint of the initial state —
         unless the directory already holds one (an engine resuming after a
         crash keeps the existing checkpoint + logs: recovery replays from
         the recorded e_c, and overwriting with the fresh engine's initial
         state would discard the durable history)."""
         if not (self.dir / "ckpt_meta.json").exists():
-            write_checkpoint(self.dir, np.asarray(val), np.asarray(tid), 0)
+            write_checkpoint(self.dir, np.asarray(val), np.asarray(tid), 0,
+                             indexes=indexes)
 
     def log(self, worker: int, rows, vals, tids, write_mask):
         """Buffer one committed write stream chunk (global flat rows)."""
@@ -168,13 +295,19 @@ class Durability:
                                                   write_mask)
 
     def log_epoch_streams(self, plog, slog, R: int, C: int,
-                          worker_of_partition):
+                          worker_of_partition, cross_kinds=None,
+                          cross_delta=None):
         """Fan one committed epoch's streams out to the per-worker logs:
-        the partitioned op stream in its §5 transformed form and the
-        master's value stream split by row owner (see
-        ``replication.wal_partition_streams`` / ``wal_master_streams``).
+        the partitioned op stream in its §5 transformed form, the master's
+        value stream split by row owner, and — when the logs carry index
+        maintenance — the ordered index-op stream split by segment owner
+        (see ``replication.wal_partition_streams`` /
+        ``wal_master_streams`` / ``wal_index_streams``).
         ``worker_of_partition``: (P,) int map — ``p % n_workers`` on the
-        single-host engine, ``p // ppn`` on the cluster's node blocks."""
+        single-host engine, ``p // ppn`` on the cluster's node blocks.
+        ``cross_kinds``/``cross_delta``: the single-master batch's static
+        op arrays (index-op recovery re-applies (kind, operand), which the
+        SM log itself does not carry)."""
         from repro.core import replication as repl
         if plog is not None:
             for w, rows, vals, tids, mask in repl.wal_partition_streams(
@@ -184,8 +317,20 @@ class Durability:
             for w, rows, vals, tids, mask in repl.wal_master_streams(
                     slog, R, C, self.n_workers, worker_of_partition):
                 self.log(w, rows, vals, tids, mask)
+        has_pidx = plog is not None and "iwrite" in plog
+        has_sidx = slog is not None and "iwrite" in slog \
+            and cross_kinds is not None
+        if has_pidx or has_sidx:
+            for w, step, kinds, delta, tids in repl.wal_index_streams(
+                    plog if has_pidx else None, self.n_workers,
+                    worker_of_partition, cross_kinds=cross_kinds,
+                    cross_delta=cross_delta,
+                    slog=slog if has_sidx else None):
+                self.wals[w % self.n_workers].append_index_ops(
+                    step, kinds, delta, tids)
 
-    def commit_epoch(self, epoch: int, val=None, tid=None) -> int:
+    def commit_epoch(self, epoch: int, val=None, tid=None,
+                     indexes=None) -> int:
         """Inside the commit fence: fsync every worker's log; on cadence,
         also checkpoint the (committed) state passed in.  Returns the
         number of entries flushed."""
@@ -194,7 +339,7 @@ class Durability:
         if val is not None and epoch - self.last_ckpt_epoch >= \
                 self.checkpoint_every:
             write_checkpoint(self.dir, np.asarray(val), np.asarray(tid),
-                             epoch)
+                             epoch, indexes=indexes)
             self.checkpoints += 1
             self.last_ckpt_epoch = epoch
         return n

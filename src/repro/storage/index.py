@@ -194,13 +194,18 @@ def segment_scan(key, lo, hi, n_slots: int = SCAN_L + 1, use_pallas=False,
 # ---------------------------------------------------------------------------
 # batched maintenance shared by executors and replica replay
 # ---------------------------------------------------------------------------
-def apply_index_ops(indexes, kinds, delta, win, tids):
+def apply_index_ops(indexes, kinds, delta, win, tids, part_ids=None):
     """Apply one batch of committed index-maintenance ops to every index.
 
     indexes: list of {"key","prow","tid"} (P, cap_i) pytrees.
     kinds: (..., K) int32 op kinds; delta: (..., K, C) op params
     (IX_* column layout, see core.ops); win: (..., K) bool — the op
     committed in this round/step; tids: (..., K) uint32 commit TIDs.
+    part_ids: optional (P,) int32 — the GLOBAL partition id each segment
+    row holds.  Defaults to ``arange(P)`` (the whole-database layout); a
+    shard_map block passes its own slice of the global ids, and the rolled
+    secondary-replica arrays pass their home-major permutation, so the
+    same op batch lands on the right segments in any layout.
 
     Returns (indexes', overflow) where ``overflow`` (int32 scalar) counts
     live keys dropped by capacity-exceeding merges across all segments —
@@ -218,7 +223,9 @@ def apply_index_ops(indexes, kinds, delta, win, tids):
     delta = delta.reshape(kinds.shape[0], -1)
     iid = delta[:, IX_ID]
     part = key_partition(delta[:, IX_KEY])
-    parts_col = jnp.arange(P, dtype=jnp.int32)[:, None]          # (P, 1)
+    if part_ids is None:
+        part_ids = jnp.arange(P, dtype=jnp.int32)
+    parts_col = jnp.asarray(part_ids, jnp.int32)[:, None]        # (P, 1)
 
     out = []
     overflow = jnp.int32(0)

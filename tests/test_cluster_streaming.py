@@ -1,0 +1,249 @@
+"""In-phase op-stream shipping + cluster index durability + physical
+secondary partial replicas (this PR's tentpole), subprocess-driven on 4-8
+forced host devices like tests/test_cluster_runtime.
+
+Covers:
+* byte attribution: modeled stream bytes == sum of the stream slab sizes
+  (and index op bytes are counted — they were silently dropped from
+  ``t_fence_net_s`` before);
+* full five-transaction TPC-C mix on ``ClusterRuntime`` bit-equal to the
+  single-process ``StarEngine`` (records AND index segments) at every
+  fence;
+* mid-stream kill: the §4.5 revert discards the slabs the replicas
+  consumed (slab high-watermark) and the re-executed epoch applies each
+  slab to committed state exactly once;
+* case-2 recovery restores a dead node's block from the PHYSICAL
+  surviving secondary copy (the old committed-snapshot stand-in is gone);
+* WAL-index crash recovery: UNAVAILABLE under the full mix reloads
+  checkpoint + per-node logs (records and ordered index-op streams) and
+  every subsequent fence stays bit-equal to an independently surviving
+  replica.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.engine import StarEngine
+from repro.db import tpcc
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=480)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# byte attribution (host-side, no subprocess)
+# ---------------------------------------------------------------------------
+def _mk_engine(n_slabs):
+    cfg = tpcc.TPCCConfig(n_partitions=2, n_items=400, cust_per_district=40,
+                          order_ring=64, mix="full", delivery_gen_lag=256)
+    state = tpcc.TPCCState(cfg)
+    init = tpcc.init_values(cfg, np.random.default_rng(5), state=state)
+    eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg), n_slabs=n_slabs)
+    return cfg, state, eng
+
+
+def test_stream_bytes_pin_slab_sizes_and_count_index_ops():
+    """Modeled stream bytes == sum of stream slab sizes: the overlapped +
+    fence-exposed split partitions exactly the epoch's op-stream bytes,
+    and the n_slabs=1 baseline (ship everything at the fence) sees the
+    identical total with ALL of it fence-exposed.  Index op bytes must be
+    non-zero under the full mix (the fence-latency attribution fix)."""
+    cfg4, st4, eng4 = _mk_engine(n_slabs=4)
+    cfg1, st1, eng1 = _mk_engine(n_slabs=1)
+    for ep in range(3):
+        m4 = eng4.run_epoch(tpcc.make_batch(cfg4, st4, 128, seed=ep))
+        m1 = eng1.run_epoch(tpcc.make_batch(cfg1, st1, 128, seed=ep))
+        # per-epoch: the split partitions the epoch's stream bytes
+        assert m4["op_bytes_overlapped"] + m4["op_bytes_fence"] == \
+            m1["op_bytes_overlapped"] + m1["op_bytes_fence"]
+        assert m1["op_bytes_overlapped"] == 0          # baseline: no overlap
+    s4, s1 = eng4.stats, eng1.stats
+    # totals: overlapped + fence == sum of all slab sizes == hybrid stream
+    assert s4.op_bytes_overlapped + s4.op_bytes_fence == s4.op_bytes_hybrid
+    assert s1.op_bytes_fence == s1.op_bytes_hybrid
+    assert s4.op_bytes_hybrid == s1.op_bytes_hybrid    # same workload
+    # streaming strictly lowers the fence-exposed bytes vs the baseline
+    assert 0 < s4.op_bytes_fence < s1.op_bytes_fence
+    assert s4.op_bytes_overlapped > 0
+    # index ops hit the byte model (previously uncounted in t_fence_net_s)
+    assert s4.index_op_bytes > 0
+    assert s4.index_op_bytes == s1.index_op_bytes
+    assert eng4.replica_consistent() and eng1.replica_consistent()
+
+
+# ---------------------------------------------------------------------------
+# cluster runtime (subprocess, forced host devices)
+# ---------------------------------------------------------------------------
+def test_cluster_full_mix_bit_equal_to_star_engine():
+    """The five-transaction TPC-C mix rides ClusterRuntime end-to-end:
+    commit counts match StarEngine on the same batches, and records AND
+    every index segment are bit-equal across the full replica, the
+    sharded partials, the physical secondaries, and the single-process
+    engine at every fence."""
+    out = _run("""
+        import jax, numpy as np
+        from repro.cluster import ClusterRuntime
+        from repro.core.engine import StarEngine
+        from repro.db import tpcc
+        cfg = tpcc.TPCCConfig(n_partitions=4, n_items=400,
+                              cust_per_district=40, order_ring=64,
+                              mix="full", delivery_gen_lag=256)
+        s1, s2 = tpcc.TPCCState(cfg), tpcc.TPCCState(cfg)
+        init1 = tpcc.init_values(cfg, np.random.default_rng(7), state=s1)
+        init2 = tpcc.init_values(cfg, np.random.default_rng(7), state=s2)
+        mesh = jax.make_mesh((4,), ("part",), devices=jax.devices()[:4])
+        rt = ClusterRuntime(mesh, 4, cfg.rows_per_partition, init_val=init1,
+                            indexes=tpcc.index_specs(cfg))
+        eng = StarEngine(4, cfg.rows_per_partition, init_val=init2,
+                         indexes=tpcc.index_specs(cfg))
+        for ep in range(4):
+            mc = rt.run_epoch(tpcc.make_batch(cfg, s1, 192, seed=ep))
+            ms = eng.run_epoch(tpcc.make_batch(cfg, s2, 192, seed=ep))
+            assert mc["committed_single"] == ms["committed_single"], ep
+            assert mc["committed_cross"] == ms["committed_cross"], ep
+            assert rt.replica_consistent(), ep
+        assert np.array_equal(np.asarray(rt.eng.full_val),
+                              np.asarray(eng.master["val"]))
+        for i in range(3):
+            for k in ("key", "prow", "tid"):
+                assert np.array_equal(np.asarray(rt.eng.full_idx[i][k]),
+                                      np.asarray(eng.store.indexes[i][k]))
+        assert rt.stats.index_op_bytes > 0
+        assert rt.stats.op_bytes_overlapped > 0
+        print("OK fullmix", rt.stats.committed_single,
+              rt.stats.op_bytes_overlapped, rt.stats.op_bytes_fence)
+    """, devices=4)
+    assert "OK fullmix" in out
+
+
+def test_midstream_kill_discards_and_restreams_exactly_once():
+    """A node killed MID-STREAM (after slab s shipped) aborts the epoch
+    with a prefix of the op stream already consumed by the replicas; the
+    revert discards exactly those slabs (high-watermark) and the
+    re-executed epoch re-streams from slab 0 — every committed epoch's
+    slabs applied exactly once, replicas bit-equal after."""
+    out = _run("""
+        import jax
+        from collections import Counter
+        from repro.cluster import ClusterRuntime
+        from repro.core.fault import FaultInjector, RecoveryCase
+        from repro.db import ycsb
+        cfg = ycsb.YCSBConfig(n_partitions=8, records_per_partition=128)
+        mesh = jax.make_mesh((4,), ("part",), devices=jax.devices()[:4])
+        inj = FaultInjector(); inj.schedule_kill(2, epoch=3, slab=1)
+        rt = ClusterRuntime(mesh, 8, 128, injector=inj)
+        events = []
+        for ep in range(5):
+            m = rt.run_epoch(ycsb.make_batch(cfg, 128, seed=ep))
+            assert rt.replica_consistent(), ep
+            if "recovery" in m: events.append(m["recovery"])
+        [ev] = events
+        assert ev.case is RecoveryCase.PHASE_SWITCHING, ev
+        assert ev.aborted_at_slab == 1, ev
+        assert ev.slabs_discarded >= 1, ev
+        # exactly-once: each committed epoch applied each slab once
+        counts = Counter(rt.eng.slab_ledger)
+        assert max(counts.values()) == 1, counts
+        epochs = sorted({e for e, _ in rt.eng.slab_ledger})
+        per_epoch = Counter(e for e, _ in rt.eng.slab_ledger)
+        assert all(per_epoch[e] == per_epoch[epochs[0]] for e in epochs)
+        assert rt.stats.slabs_discarded == ev.slabs_discarded
+        print("OK midstream", ev.slabs_discarded, len(rt.eng.slab_ledger))
+    """, devices=4)
+    assert "OK midstream" in out
+
+
+def test_case2_restores_block_from_physical_secondary():
+    """Killing the full-replica holder (node 0) leaves no full replica but
+    a complete partial set: FALLBACK_DIST_CC.  Node 0's primary block is
+    physically scribbled and must be rebuilt from the PHYSICAL secondary
+    copy node 1 hosts — recovery being bit-consistent afterwards proves
+    the surviving copy (not a snapshot stand-in) was the source."""
+    out = _run("""
+        import jax
+        from repro.cluster import ClusterRuntime
+        from repro.core.fault import FaultInjector, RecoveryCase
+        from repro.db import ycsb
+        cfg = ycsb.YCSBConfig(n_partitions=8, records_per_partition=128)
+        mesh = jax.make_mesh((4,), ("part",), devices=jax.devices()[:4])
+        inj = FaultInjector(); inj.schedule_kill(0, epoch=3)
+        rt = ClusterRuntime(mesh, 8, 128, injector=inj)
+        events = []
+        for ep in range(5):
+            m = rt.run_epoch(ycsb.make_batch(cfg, 128, seed=10 + ep))
+            assert rt.replica_consistent(), ep
+            if "recovery" in m: events.append(m["recovery"])
+        [ev] = events
+        assert ev.case is RecoveryCase.FALLBACK_DIST_CC, ev
+        assert ev.run_mode == "dist_cc"
+        assert ev.restored_from_secondary == (0,), ev
+        print("OK case2 secondary", ev.restored_from_secondary)
+    """, devices=4)
+    assert "OK case2 secondary" in out
+
+
+def test_full_mix_wal_index_crash_recovery_bit_equal():
+    """Crash after epoch e under the full TPC-C mix on ClusterRuntime
+    (UNAVAILABLE: full holder + both homes of a block die), recover from
+    per-node WAL + checkpoint (records AND ordered index-op streams), and
+    assert records and all index segments bit-equal to an independently
+    surviving replica (a StarEngine fed the same batches) at every
+    subsequent fence."""
+    out = _run("""
+        import jax, numpy as np, tempfile
+        from repro.cluster import ClusterRuntime
+        from repro.core.engine import StarEngine
+        from repro.core.fault import FaultInjector, RecoveryCase
+        from repro.db import tpcc
+        from repro.db.wal import Durability
+        cfg = tpcc.TPCCConfig(n_partitions=4, n_items=400,
+                              cust_per_district=40, order_ring=64,
+                              mix="full", delivery_gen_lag=256)
+        s1, s2 = tpcc.TPCCState(cfg), tpcc.TPCCState(cfg)
+        init1 = tpcc.init_values(cfg, np.random.default_rng(7), state=s1)
+        init2 = tpcc.init_values(cfg, np.random.default_rng(7), state=s2)
+        mesh = jax.make_mesh((4,), ("part",), devices=jax.devices()[:4])
+        inj = FaultInjector()
+        for n in (0, 1, 2): inj.schedule_kill(n, epoch=4)
+        eng = StarEngine(4, cfg.rows_per_partition, init_val=init2,
+                         indexes=tpcc.index_specs(cfg))
+        with tempfile.TemporaryDirectory() as d:
+            dur = Durability(d, n_workers=4, checkpoint_every=2)
+            rt = ClusterRuntime(mesh, 4, cfg.rows_per_partition,
+                                init_val=init1,
+                                indexes=tpcc.index_specs(cfg),
+                                injector=inj, durability=dur)
+            events = []
+            for ep in range(6):
+                m = rt.run_epoch(tpcc.make_batch(cfg, s1, 160, seed=ep))
+                eng.run_epoch(tpcc.make_batch(cfg, s2, 160, seed=ep))
+                assert rt.replica_consistent(), ep
+                assert np.array_equal(np.asarray(rt.eng.full_val),
+                                      np.asarray(eng.master["val"])), ep
+                for i in range(3):
+                    for k in ("key", "prow", "tid"):
+                        assert np.array_equal(
+                            np.asarray(rt.eng.full_idx[i][k]),
+                            np.asarray(eng.store.indexes[i][k])), (ep, i, k)
+                if "recovery" in m: events.append(m["recovery"])
+            [ev] = events
+            assert ev.case is RecoveryCase.UNAVAILABLE, ev
+            assert ev.reloaded_from_disk and ev.run_mode == "halt"
+            assert dur.checkpoints >= 1 and dur.entries_logged > 0
+            print("OK walindex", dur.entries_logged)
+    """, devices=4)
+    assert "OK walindex" in out

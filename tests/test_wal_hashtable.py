@@ -136,3 +136,38 @@ def test_engine_durability_crash_recover_resume(tmp_path):
         assert np.array_equal(np.asarray(rt2),
                               np.asarray(eng2.replica_store.tid)), ep
     dur2.close()
+
+
+def test_engine_index_durability_recover_full_every_fence(tmp_path):
+    """StarEngine with ordered indexes AND durability (previously mutually
+    exclusive): the ordered index-op stream WALs per worker alongside the
+    record post-images, and ``recover_full`` rebuilds records + every
+    index segment bit-identical to the surviving replica at every fence
+    under the full five-transaction TPC-C mix."""
+    from repro.core.engine import StarEngine
+    from repro.db import tpcc
+    from repro.db.wal import Durability, recover_full
+
+    cfg = tpcc.TPCCConfig(n_partitions=2, n_items=400, cust_per_district=40,
+                          order_ring=64, mix="full", delivery_gen_lag=256)
+    state = tpcc.TPCCState(cfg)
+    init = tpcc.init_values(cfg, np.random.default_rng(11), state=state)
+    dur = Durability(tmp_path, n_workers=2, checkpoint_every=3)
+    eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg), durability=dur)
+    for ep in range(5):
+        eng.run_epoch(tpcc.make_batch(cfg, state, 128, seed=ep))
+        assert eng.replica_consistent()
+        rv, rt, ridx, e_c = recover_full(tmp_path, shuffle_seed=50 + ep)
+        assert np.array_equal(np.asarray(rv),
+                              np.asarray(eng.replica_store.val)), ep
+        assert np.array_equal(np.asarray(rt),
+                              np.asarray(eng.replica_store.tid)), ep
+        assert ridx is not None and len(ridx) == 3
+        for i in range(3):
+            for k in ("key", "prow", "tid"):
+                assert np.array_equal(
+                    np.asarray(ridx[i][k]),
+                    np.asarray(eng.replica_store.indexes[i][k])), (ep, i, k)
+    assert dur.checkpoints >= 1, "cadence checkpoint never fired"
+    dur.close()
