@@ -75,7 +75,140 @@ def measure_tpcc_mix(mix: str, n_txns: int = 512, epochs: int = 4,
         rows.append((f"fig11/tpcc_measured_mix_{tag}_sm_round_us",
                      1e6 * (eng.stats.sm_time_s - warm_sm)
                      / (eng.stats.sm_rounds - warm_rounds), 0))
+    # §5 op-stream shipping split: fence-exposed bytes (for BENCH snapshot)
+    rows.append((f"fig11/tpcc_measured_mix_{tag}_op_bytes_fence", 0.0,
+                 int(eng.stats.op_bytes_fence)))
+    rows.append((f"fig11/tpcc_measured_mix_{tag}_op_bytes_overlapped", 0.0,
+                 int(eng.stats.op_bytes_overlapped)))
     return rows
+
+
+def measure_read_tier(n_txns: int = 2048, epochs: int = 2, smoke: bool = False,
+                      max_staleness: int = 2):
+    """Full-mix TPC-C at equal offered load, read tier OFF vs ON.
+
+    OFF: every transaction (including the read-only OrderStatus/StockLevel
+    ~8%) burns a partitioned/OCC slot through ``run_epoch``.  ON: the same
+    per-epoch request stream (identical seeds; read-only txns write nothing
+    so the committed DB state evolves bit-identically) is split — writes run
+    through the engine, declared-read-only txns are served lock-free from
+    the replica snapshot catalog between fences.  Reports the read/write
+    split and the combined-throughput comparison the read tier exists for.
+
+    The full-scale default of 2048-txn epochs puts the engine in the
+    work-dominated regime where a read-only txn's marginal slot cost is
+    real (~ms); at smoke scale the epoch is fixed-overhead-bound and the
+    on-vs-off difference sits inside host noise, so smoke only gates the
+    scale-independent invariants (see main()).
+    """
+    import numpy as np
+    from repro.core.engine import StarEngine
+    from repro.db import tpcc
+    from repro.reads import SnapshotCatalog, SnapshotReadExecutor
+
+    if smoke:
+        n_txns, epochs = 128, 2
+
+    def build():
+        cfg = tpcc.TPCCConfig(n_partitions=4,
+                              n_items=1000 if smoke else 4000,
+                              cust_per_district=100, order_ring=128,
+                              mix="full", delivery_gen_lag=n_txns)
+        state = tpcc.TPCCState(cfg)
+        rng = np.random.default_rng(0)
+        init = tpcc.init_values(cfg, rng, state=state)
+        eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition,
+                         init_val=init, indexes=tpcc.index_specs(cfg))
+        return cfg, state, eng
+
+    def run_pass(serve_reads: bool):
+        """One full pass over the offered stream.  Both passes replay the
+        same seeds over a fresh engine+state, so the committed DB evolves
+        bit-identically (read-only txns write nothing) and every per-epoch
+        batch shape is deterministic — running each pass TWICE and timing
+        only the second run keeps jit compiles and other one-time costs
+        out of the measured region for both sides equally."""
+        cfg, state, eng = build()
+        execu = SnapshotReadExecutor() if serve_reads else None
+        catalog = (SnapshotCatalog(cfg.n_partitions, retain=max_staleness + 2)
+                   if serve_reads else None)
+        wb = tpcc.make_batch(cfg, state, n_txns, seed=1000)
+        tpcc.apply_consume_feedback(state, wb, eng.run_epoch(wb))
+        if serve_reads:
+            for v in eng.read_views():
+                catalog.stamp(v)
+        warm = eng.stats.part_time_s + eng.stats.sm_time_s
+        committed = reads = 0
+        read_s = 0.0
+        for ep in range(epochs):
+            raw = tpcc.make_raw(cfg, state, n_txns, np.random.default_rng(ep))
+            ro = raw["read_only"]
+            if serve_reads:     # writes only reach the engine (thinner T)
+                batch = tpcc.make_batch(
+                    cfg, state, 0, raw={k: v[~ro] for k, v in raw.items()})
+            else:
+                batch = tpcc.make_batch(cfg, state, 0, raw=raw)
+            m = eng.run_epoch(batch)
+            committed += m["committed_single"] + m["committed_cross"]
+            tpcc.apply_consume_feedback(state, batch, m)
+            if not serve_reads:
+                continue
+            for v in eng.read_views():   # fence passed: refresh catalog
+                catalog.stamp(v)
+            # serve the read lane: group by home partition onto the
+            # least-loaded fresh-enough replica, one batched gather each
+            sel = np.nonzero(ro)[0]
+            homes = raw["home"][sel]
+            t0 = time.perf_counter()
+            for p in np.unique(homes):
+                grp = sel[homes == p]
+                _ent, _ep, snap, arow = catalog.choose(
+                    int(p), max_staleness, weight=len(grp))
+                out = execu.run(snap, np.full(len(grp), arow, np.int32),
+                                raw["rows"][grp], raw["kinds"][grp],
+                                raw["deltas"][grp])
+                np.asarray(out["val"])        # block until served
+            read_s += time.perf_counter() - t0
+            reads += len(sel)
+        assert eng.replica_consistent()
+        return (committed, reads,
+                eng.stats.part_time_s + eng.stats.sm_time_s - warm, read_s)
+
+    # One untimed shape-warm run per pass (absorbs jit compiles), then
+    # best-of-N timed runs, INTERLEAVED so slow host stretches (frequency
+    # drift, scheduler contention) land on both sides: min-time filters
+    # the additive noise that otherwise swamps the ~read-share-sized
+    # structural difference.
+    reps = 3
+    run_pass(False)
+    run_pass(True)
+    offs, ons = [], []
+    for _ in range(reps):
+        offs.append(run_pass(False))
+        ons.append(run_pass(True))
+    off_committed = offs[0][0]
+    off_s = min(r[2] for r in offs)
+    on_write, on_read = ons[0][0], ons[0][1]
+    write_s = min(r[2] for r in ons)
+    read_s = min(r[3] for r in ons)
+
+    thr_off = off_committed / max(off_s, 1e-9)
+    thr_on = (on_write + on_read) / max(write_s + read_s, 1e-9)
+    return [
+        ("fig11/tpcc_read_tier_off_txn_s", 1e6 * off_s / max(off_committed, 1),
+         round(thr_off)),
+        ("fig11/tpcc_read_tier_on_txn_s", 1e6 * (write_s + read_s)
+         / max(on_write + on_read, 1), round(thr_on)),
+        ("fig11/tpcc_read_tier_write_txn_s", 0.0,
+         round(on_write / max(write_s, 1e-9))),
+        ("fig11/tpcc_read_tier_read_txn_s", 0.0,
+         round(on_read / max(read_s, 1e-9))),
+        ("fig11/tpcc_read_tier_off_committed", 0.0, int(off_committed)),
+        ("fig11/tpcc_read_tier_on_committed", 0.0, int(on_write + on_read)),
+        ("fig11/tpcc_read_tier_read_served", 0.0, int(on_read)),
+        ("fig11/tpcc_read_tier_speedup_pct", 0.0,
+         round(100.0 * (thr_on / max(thr_off, 1e-9) - 1.0), 1)),
+    ]
 
 
 def run(mix: str | None = None, smoke: bool = False, kernel: str = "jnp"):
@@ -86,6 +219,7 @@ def run(mix: str | None = None, smoke: bool = False, kernel: str = "jnp"):
         rows += measure_tpcc_mix(mix, smoke=smoke, kernel=kernel)
         if mix == "full":
             rows += measure_tpcc_mix("standard2", smoke=smoke, kernel=kernel)
+            rows += measure_read_tier(smoke=smoke)
     if smoke:
         return rows
     n = 4
@@ -152,11 +286,38 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny scale, measured rows only; fails the build "
                     "when throughput collapses (CI regression gate)")
+    ap.add_argument("--bench-json", metavar="PATH", default=None,
+                    help="write the measured-row snapshot (full-mix txn/s, "
+                    "read-tier split, SM round us, fence-exposed bytes) as "
+                    "JSON, e.g. BENCH_fig11.json")
     args = ap.parse_args()
     rows = run(mix=args.mix or ("full" if args.smoke else None),
                smoke=args.smoke, kernel=args.kernel)
     print("name,us_per_call,derived")
     emit(rows)
+    if args.bench_json:
+        import json
+        d = {r[0]: r[2] for r in rows if r[0].startswith("fig11/tpcc_")}
+        us = {r[0]: round(r[1], 3) for r in rows
+              if r[0].startswith("fig11/tpcc_") and r[1]}
+        k = args.kernel
+        bench = {
+            "schema": 1,
+            "full_mix_txn_s": d.get(f"fig11/tpcc_measured_mix_full_{k}_txn_s"),
+            "read_tier_on_txn_s": d.get("fig11/tpcc_read_tier_on_txn_s"),
+            "read_tier_off_txn_s": d.get("fig11/tpcc_read_tier_off_txn_s"),
+            "read_txn_s": d.get("fig11/tpcc_read_tier_read_txn_s"),
+            "write_txn_s": d.get("fig11/tpcc_read_tier_write_txn_s"),
+            "sm_round_us": us.get(
+                f"fig11/tpcc_measured_mix_full_{k}_sm_round_us"),
+            "fence_exposed_bytes": d.get(
+                f"fig11/tpcc_measured_mix_full_{k}_op_bytes_fence"),
+            "rows": d, "us_per_call": us,
+        }
+        with open(args.bench_json, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.bench_json}")
     if args.smoke:
         thr = {r[0]: r[2] for r in rows
                if r[0].endswith("_txn_s") or r[0].endswith("_committed")}
@@ -166,7 +327,22 @@ def main():
         assert rates and all(v > 5 for v in rates.values()), \
             f"throughput collapsed: {thr}"
         assert all(v > 100 for v in commits.values()), thr
-        print("SMOKE OK " + " ".join(f"{k.split('_mix_')[1]}" for k in rates))
+        if "fig11/tpcc_read_tier_read_txn_s" in rates:
+            # Scale-independent invariants only: serving a read from a
+            # snapshot must be much cheaper than committing a write through
+            # the engine, and on-vs-off must not collapse.  The strict
+            # on > off comparison is a FULL-scale result (2048-txn epochs,
+            # work-dominated regime) — at smoke scale both passes are
+            # fixed-overhead-bound and the ~0% difference is host noise.
+            assert (rates["fig11/tpcc_read_tier_read_txn_s"]
+                    > rates["fig11/tpcc_read_tier_write_txn_s"]), \
+                f"snapshot reads slower than engine writes: {thr}"
+            spd = next(r[2] for r in rows
+                       if r[0] == "fig11/tpcc_read_tier_speedup_pct")
+            assert spd > -15, \
+                f"read tier collapsed vs baseline: {spd}% {thr}"
+        print("SMOKE OK "
+              + " ".join(k.split("tpcc_")[1] for k in sorted(rates)))
 
 
 if __name__ == "__main__":

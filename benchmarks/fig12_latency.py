@@ -28,6 +28,38 @@ def _measure_async_service(duration_s=1.5, rate=1500.0):
     return out
 
 
+def _measure_read_tier_split(duration_s=2.0, rate=250.0, max_staleness=2):
+    """TPC-C full mix through TxnService WITH the read tier: the write path
+    (NewOrder/Payment/Delivery, enqueue -> commit fence) and the read path
+    (OrderStatus/StockLevel, enqueue -> snapshot serve) each get their own
+    measured percentiles — the latency half of the read/write split whose
+    throughput half fig11 reports.  The offered rate is set WELL below this
+    host's full-mix capacity: at overload the percentiles measure queue
+    buildup, not the serving paths."""
+    import numpy as np
+
+    from repro.core.engine import StarEngine
+    from repro.db import tpcc
+    from repro.reads import ReadTier
+    from repro.service import (AdmissionConfig, OpenLoopClient, TPCCSource,
+                               TxnService)
+    cfg = tpcc.TPCCConfig(n_partitions=4, n_items=400, cust_per_district=40,
+                          order_ring=64, mix="full", delivery_gen_lag=256)
+    state = tpcc.TPCCState(cfg)
+    init = tpcc.init_values(cfg, np.random.default_rng(7), state=state)
+    eng = StarEngine(4, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg))
+    client = OpenLoopClient(TPCCSource(cfg, state=state, seed=1),
+                            rate_txn_s=rate, seed=7)
+    tier = ReadTier(max_staleness_epochs=max_staleness, sec_refresh_every=2)
+    svc = TxnService(eng, [client], AdmissionConfig(64, 64),
+                     slots_per_partition=16, master_lanes=16,
+                     feedback=lambda b, m: tpcc.apply_consume_feedback(
+                         state, b, m),
+                     read_tier=tier)
+    return svc.run(duration_s=duration_s)
+
+
 def run():
     rows = []
     net = Network()
@@ -41,6 +73,18 @@ def run():
                  round(m["throughput_txn_s"], 1)))
     rows.append(("fig12/async_queue_delay_ms", epoch_us,
                  round(m["queue_delay_ms"], 2)))
+    # read-tier split: write path vs bounded-staleness snapshot-read path
+    rt = _measure_read_tier_split()
+    rows += [
+        ("fig12/read_tier_write_p50_ms", 0.0, round(rt["p50_ms"], 2)),
+        ("fig12/read_tier_write_p99_ms", 0.0, round(rt["p99_ms"], 2)),
+        ("fig12/read_tier_read_p50_ms", 0.0, round(rt["read_p50_ms"], 2)),
+        ("fig12/read_tier_read_p99_ms", 0.0, round(rt["read_p99_ms"], 2)),
+        ("fig12/read_tier_write_txn_s", 0.0, round(rt["write_txn_s"], 1)),
+        ("fig12/read_tier_read_txn_s", 0.0, round(rt["read_txn_s"], 1)),
+        ("fig12/read_tier_read_served", 0.0, rt["read_served"]),
+        ("fig12/read_tier_max_freshness", 0.0, rt["read_max_freshness"]),
+    ]
     for wl in ("ycsb", "tpcc"):
         cal = get_calibration(wl)
         for P in (0.1, 0.5, 0.9):

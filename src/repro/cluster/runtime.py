@@ -117,6 +117,13 @@ class ClusterRuntime:
     def n_nodes(self):
         return self.eng.n_nodes
 
+    @property
+    def committed_epoch(self):
+        return self.eng.committed_epoch
+
+    def read_views(self):
+        return self.eng.read_views()
+
     def replica_consistent(self) -> bool:
         return self.eng.consistent()
 

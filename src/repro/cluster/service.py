@@ -31,13 +31,14 @@ class ClusterTxnService(TxnService):
     def __init__(self, runtime: ClusterRuntime, clients: list,
                  admission_cfg: AdmissionConfig | None = None,
                  slots_per_partition: int = 64, master_lanes: int = 64,
-                 max_ops: int | None = None, feedback=None):
+                 max_ops: int | None = None, feedback=None, read_tier=None):
         self.node_of_partition = np.arange(runtime.P) // runtime.topology.ppn
         super().__init__(runtime, clients, admission_cfg,
                          slots_per_partition=slots_per_partition,
                          master_lanes=master_lanes, max_ops=max_ops,
                          feedback=feedback,
-                         node_of_partition=self.node_of_partition)
+                         node_of_partition=self.node_of_partition,
+                         read_tier=read_tier)
         self.runtime = runtime
         N = runtime.n_nodes
         self.node_depth_max = np.zeros(N, np.int64)
@@ -54,11 +55,16 @@ class ClusterTxnService(TxnService):
 
     def node_shed(self) -> np.ndarray:
         """Rejected-arrival counts grouped by owning node (master-queue
-        rejections charge the designated master, node 0)."""
+        rejections charge the designated master, node 0).  Indexes the
+        P + 2 attribution layout EXPLICITLY — the read-lane slot (index
+        P + 1) is a mesh-wide lane, reported separately as ``read_shed``,
+        never charged to a node (``rq[:-1]``/``rq[-1]`` here would
+        silently misattribute read-lane sheds to the master)."""
+        P = self.admission.P
         rq = self.admission.stats.rejected_by_queue
-        by_node = np.bincount(self.node_of_partition, weights=rq[:-1],
+        by_node = np.bincount(self.node_of_partition, weights=rq[:P],
                               minlength=self.runtime.n_nodes).astype(np.int64)
-        by_node[0] += int(rq[-1])
+        by_node[0] += int(rq[P])
         return by_node
 
     def summary(self) -> dict:
@@ -80,5 +86,7 @@ class ClusterTxnService(TxnService):
             "op_bytes_fence": int(eng.stats.op_bytes_fence),
             "slabs_shipped": int(eng.stats.slabs_shipped),
             "slabs_discarded": int(eng.stats.slabs_discarded),
+            "read_shed": int(
+                self.admission.stats.rejected_by_queue[self.admission.P + 1]),
         })
         return out

@@ -173,6 +173,9 @@ class ClusterStarEngine:
         # re-executed epochs
         self._slab_hwm = 0
         self.slab_ledger: list[tuple[int, int]] = []   # committed (ep, s)
+        # read-tier watermark: the fence epoch the committed snapshot
+        # (``_snap``) corresponds to — 0 until the first commit
+        self.committed_epoch = 0
         self._build()
         self._snap = self._state()
 
@@ -589,6 +592,7 @@ class ClusterStarEngine:
 
     def snapshot_commit(self):
         self._snap = self._state()
+        self.committed_epoch = self.epoch
         # the in-flight slabs are now committed state: retire them (the
         # slabs_shipped stat counts COMMITTED slabs only, so it stays
         # consistent with the committed-epoch byte split — warm-up and
@@ -617,6 +621,40 @@ class ClusterStarEngine:
         """The node holding the physical secondary copy of ``node``'s
         block (round-robin: the next node)."""
         return (node + 1) % self.n_nodes
+
+    def read_views(self):
+        """Committed snapshot views for the read tier's SnapshotCatalog —
+        one per physical replica copy: the master's full copy (covers
+        every partition, identity row mapping) and each node's hosted
+        secondary block (home-major rolled layout: partition p lives at
+        array row (p + ppn) mod P; node m's view covers node m-1's
+        partitions).  Always the COMMITTED two-version snapshot, so an
+        in-flight or reverted epoch is never visible to a read."""
+        wm = repl.snapshot_watermark(self.committed_epoch, self.slab_ledger)
+        P = self.P
+        views = [{
+            "id": "full", "kind": "full", "node": 0,
+            "epoch": self.committed_epoch, "watermark": wm,
+            "cover": np.ones(P, bool),
+            "row_of_partition": np.arange(P, dtype=np.int64),
+            "val": self._snap["full_val"], "tid": self._snap["full_tid"],
+            "idx": self._snap["full_idx"],
+        }]
+        if self.secondary:
+            rop = (np.arange(P, dtype=np.int64) + self.ppn) % P
+            for m in range(self.n_nodes):
+                owner = (m - 1) % self.n_nodes
+                cover = np.zeros(P, bool)
+                cover[self.node_slice(owner)] = True
+                views.append({
+                    "id": f"sec{m}", "kind": "secondary", "node": m,
+                    "epoch": self.committed_epoch, "watermark": wm,
+                    "cover": cover, "row_of_partition": rop,
+                    "val": self._snap["sec_val"],
+                    "tid": self._snap["sec_tid"],
+                    "idx": self._snap["sec_idx"],
+                })
+        return views
 
     @staticmethod
     def _scribble_tree(tree, sl):
@@ -760,6 +798,9 @@ class ClusterStarEngine:
             self.sec_idx = jax.device_put(self._roll_home(self.part_idx),
                                           self._shard)
         self.snapshot_commit()
+        # the reloaded state is the LAST COMMITTED epoch's — the in-flight
+        # epoch (self.epoch) re-executes on top of it after recovery
+        self.committed_epoch = self.epoch - 1
 
     # ------------------------------------------------------------------
     def consistent(self) -> bool:

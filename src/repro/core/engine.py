@@ -99,6 +99,9 @@ class StarEngine:
                                            index_specs=indexes)
         self.has_index = bool(indexes)
         self.epoch = 1
+        # read-tier watermark: the fence epoch the committed snapshots
+        # correspond to — 0 until the first epoch's commit fence
+        self.committed_epoch = 0
         self.part_seq = jnp.zeros((P,), jnp.uint32)
         self.sm_last_tid = None
         self.hybrid = hybrid_replication
@@ -363,6 +366,8 @@ class StarEngine:
         self.store.snapshot_commit()
         self.replica_store.snapshot_commit()
         self.stats.fences += 1
+        if commit_epoch is not None:
+            self.committed_epoch = int(commit_epoch)
         if commit_epoch is not None and self.durability is not None:
             self.durability.commit_epoch(
                 commit_epoch, self.store.val, self.store.tid,
@@ -385,6 +390,28 @@ class StarEngine:
 
     def replica_consistent(self) -> bool:
         return self.store.equals(self.replica_store)
+
+    def read_views(self):
+        """Committed snapshot views for the read tier's SnapshotCatalog:
+        the master copy plus the (single-host) operation replica, both
+        covering every partition with the identity row mapping — two
+        independently load-balanceable serving copies.  Views reference
+        the COMMITTED two-version snapshot, never the working arrays."""
+        wm = repl.snapshot_watermark(self.committed_epoch, [])
+        P = self.P
+        cover = np.ones(P, bool)
+        rop = np.arange(P, dtype=np.int64)
+        views = []
+        for rid, kind, store in (("full", "full", self.store),
+                                 ("replica", "secondary",
+                                  self.replica_store)):
+            sn = store.snapshot
+            views.append({"id": rid, "kind": kind, "node": 0,
+                          "epoch": self.committed_epoch, "watermark": wm,
+                          "cover": cover, "row_of_partition": rop,
+                          "val": sn["val"], "tid": sn["tid"],
+                          "idx": sn["indexes"] if self.has_index else []})
+        return views
 
     # ------------------------------------------------------------------
     # fault tolerance (§4.5)

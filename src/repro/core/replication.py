@@ -371,3 +371,14 @@ def split_overlapped(slab_bytes: list[int]) -> tuple[int, int]:
                  default=len(slab_bytes) - 1)
     tail = slab_bytes[tail_i]
     return sum(slab_bytes) - tail, tail
+
+
+def snapshot_watermark(committed_epoch: int, slab_ledger) -> tuple[int, int]:
+    """Per-replica applied watermark for the read tier's snapshot catalog:
+    (last-applied fence epoch, stream slabs of that epoch the replicas had
+    consumed when it committed).  A committed snapshot's watermark always
+    covers its whole epoch — the fence waited on the unshipped tail — so
+    the slab count is telemetry (how much of the commit the in-phase
+    stream hid), while the epoch is the freshness authority."""
+    slabs = sum(1 for (e, _s) in slab_ledger if e == committed_epoch)
+    return int(committed_epoch), slabs

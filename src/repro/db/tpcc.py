@@ -51,6 +51,11 @@ N_DIST = 10
 #   orders_by_cust:           d * 2^20 | c_id * 2^8 | o_id % order_ring
 # the partition (warehouse) id fills the high bits (storage.index.full_key)
 NO_IDX, OID_IDX, CUST_IDX = 0, 1, 2
+
+# txn_type codes: 0 NewOrder, 1 Payment, 2 OrderStatus, 3 Delivery,
+# 4 StockLevel — OrderStatus and StockLevel are pure READ/SCAN_READ
+# profiles the read tier can serve from replica snapshots
+READ_ONLY_TYPES = (2, 4)
 D_SHIFT, C_SHIFT = 20, 8
 
 # true TPC-C row byte sizes (for replication accounting)
@@ -601,12 +606,16 @@ def make_raw(cfg: TPCCConfig, state: TPCCState, n_txns: int,
         all_type.append(t)
 
     kinds = np.stack(all_kinds)
+    txn_type = np.array(all_type, np.int32)
     return {
         "parts": np.stack(all_parts), "rows": np.stack(all_rows),
         "kinds": kinds, "deltas": np.stack(all_deltas),
         "user_abort": np.array(all_abort), "home": np.array(all_home, np.int32),
         "declared_cross": np.array(all_cross),
-        "txn_type": np.array(all_type, np.int32),
+        "txn_type": txn_type,
+        # read-only profiles (OrderStatus, StockLevel): pure READ/SCAN_READ
+        # op lists — the read tier serves these from replica snapshots
+        "read_only": np.isin(txn_type, READ_ONLY_TYPES),
         "row_bytes": np.array([[ROW_BYTES[t] for t in ts]
                                for ts in all_tables], np.int32),
         "op_bytes": np.vectorize(lambda k: OP_BYTES[int(k)])(kinds).astype(np.int32),
@@ -614,9 +623,12 @@ def make_raw(cfg: TPCCConfig, state: TPCCState, n_txns: int,
 
 
 def make_batch(cfg: TPCCConfig, state: TPCCState, n_txns: int,
-               seed: int | None = None, raw: dict | None = None):
+               seed: int | None = None, raw: dict | None = None,
+               T: int | None = None):
     """Route one epoch's transactions into phase queues.  ``raw`` lets a
-    caller reuse an existing ``make_raw`` draw (tests/ledgers)."""
+    caller reuse an existing ``make_raw`` draw (tests/ledgers); ``T``
+    overrides the per-partition slot count (benchmarks pin it so batch
+    shapes — and thus compiled programs — stay constant across epochs)."""
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
     P, R = cfg.n_partitions, cfg.rows_per_partition
 
@@ -630,7 +642,8 @@ def make_batch(cfg: TPCCConfig, state: TPCCState, n_txns: int,
 
     single = ~is_cross
     n_single = int(single.sum())
-    T = max(1, int(np.ceil(n_single / P * 1.5)) + 2)
+    if T is None:
+        T = max(1, int(np.ceil(n_single / P * 1.5)) + 2)
     ptxn = {
         "valid": np.zeros((P, T), bool),
         "row": np.zeros((P, T, M), np.int32),

@@ -96,7 +96,10 @@ def make_raw(cfg: YCSBConfig, n_txns: int, rng: np.random.Generator):
 
     return {"parts": op_part.astype(np.int32), "rows": op_idx, "kinds": kinds,
             "deltas": deltas, "user_abort": np.zeros(n_txns, bool),
-            "home": home, "declared_cross": is_cross}
+            "home": home, "declared_cross": is_cross,
+            # read-tier eligibility: an all-READ op list (write_ops=0
+            # configs) can be served from a replica snapshot
+            "read_only": (kinds == READ).all(axis=1)}
 
 
 def route_single(cfg, home, rows, kinds, deltas, T):

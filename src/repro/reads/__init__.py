@@ -1,0 +1,29 @@
+"""Bounded-staleness read-replica serving tier (SCAR-style snapshot reads).
+
+STAR's asymmetric replication materializes a full copy of the database on
+the master node and physical partial secondary copies across the mesh —
+but until this subsystem they were write targets only.  The read tier
+serves read-only transactions directly from those replicas' COMMITTED
+two-version snapshots *between* epoch fences, validated by epoch/slab
+watermarks instead of OCC:
+
+* :class:`~repro.reads.catalog.SnapshotCatalog` — stamps every replica
+  copy with its last-applied fence epoch + slab high-watermark and exposes
+  ``freshness(replica) = current_epoch - applied_epoch``;
+* :class:`~repro.reads.executor.SnapshotReadExecutor` — one jitted
+  batched program of point-read gathers + ``segment_scan`` index probes
+  over a chosen replica's ``val/tid`` + index segments, lock-free, every
+  result tagged with its snapshot epoch;
+* :class:`~repro.reads.tier.ReadTier` — the serving loop: drains the read
+  admission lane, load-balances across eligible replicas within the
+  ``max_staleness_epochs`` bound, falls back to the OCC path when no
+  replica is fresh enough (over-stale data is NEVER returned), and
+  removes a killed node's hosted secondary from the catalog until
+  recovery re-materializes it.
+"""
+from repro.reads.catalog import SnapshotCatalog
+from repro.reads.executor import SnapshotReadExecutor, reference_read
+from repro.reads.tier import ReadTier, ReadTierStats
+
+__all__ = ["ReadTier", "ReadTierStats", "SnapshotCatalog",
+           "SnapshotReadExecutor", "reference_read"]

@@ -1,0 +1,157 @@
+"""Vectorized snapshot read executor: one jitted batched program per shape.
+
+Read-only transactions carry only READ point ops and SCAN_READ index
+probes (their first ``IDX_OPS`` op slots), so serving a batch needs no
+locks, no validation rounds, and no scatter — a fancy-indexed gather of
+``val/tid`` plus vmapped ``segment_scan`` probes over the chosen replica's
+committed index segments, all inside one jit.  ``arow`` maps each
+transaction's home partition to the ARRAY ROW of that partition in the
+replica's physical layout (identity for the full copy, the home-major
+roll for secondary copies), so the same program serves every replica.
+
+Results are raw committed state — the caller (:class:`ReadTier`) tags
+them with the snapshot epoch they were drained against.
+``reference_read`` is the numpy oracle the staleness property tests
+compare against, bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ops import IDX_OPS, IX_HI, IX_ID, IX_LO, SCAN_READ
+from repro.storage.index import SCAN_L, SENTINEL, segment_scan
+
+
+def _read_program(val, tid, idx_keys, idx_prows, idx_tids, arow, rows,
+                  kinds, deltas):
+    """val (P,R,C), tid (P,R), idx_* lists of (P,cap_i); arow (B,),
+    rows/kinds (B,M), deltas (B,M,C).  Returns the read payload dict."""
+    B, M = rows.shape
+    out = {"val": val[arow[:, None], rows],          # (B, M, C)
+           "tid": tid[arow[:, None], rows]}          # (B, M)
+    n_idx = len(idx_keys)
+    if not n_idx:
+        return out
+    K = min(IDX_OPS, M)
+    L = SCAN_L
+    is_scan = kinds[:, :K] == SCAN_READ              # (B, K)
+    lo = deltas[:, :K, IX_LO]
+    hi = deltas[:, :K, IX_HI]
+    iid = deltas[:, :K, IX_ID]
+    scan_key = jnp.full((B, K, L), SENTINEL, jnp.int32)
+    scan_prow = jnp.zeros((B, K, L), jnp.int32)
+    scan_tid = jnp.zeros((B, K, L), jnp.uint32)
+    scan_live = jnp.zeros((B, K, L), bool)
+    for i in range(n_idx):
+        seg_b = idx_keys[i][arow]                    # (B, cap_i)
+
+        def probe(seg, lo_k, hi_k):
+            return jax.vmap(
+                lambda l, h: segment_scan(seg, l, h, L + 1))(lo_k, hi_k)
+
+        slots, keys_at, in_r = jax.vmap(probe)(seg_b, lo, hi)  # (B,K,L+1)
+        slots, keys_at, in_r = slots[..., :L], keys_at[..., :L], \
+            in_r[..., :L]
+        sel = (is_scan & (iid == i))[..., None]      # (B, K, 1)
+        prow = idx_prows[i][arow[:, None, None], slots]
+        ptid = idx_tids[i][arow[:, None, None], slots]
+        scan_key = jnp.where(sel, keys_at, scan_key)
+        scan_prow = jnp.where(sel, prow, scan_prow)
+        scan_tid = jnp.where(sel, ptid, scan_tid)
+        scan_live = jnp.where(sel, in_r, scan_live)
+    scan_live = scan_live & is_scan[..., None]
+    # the scanned window joins the read result: gather the pointed rows
+    prow_safe = jnp.clip(scan_prow, 0, val.shape[1] - 1)
+    out.update({
+        "scan_key": jnp.where(scan_live, scan_key, SENTINEL),
+        "scan_prow": jnp.where(scan_live, scan_prow, 0),
+        "scan_tid": jnp.where(scan_live, scan_tid, 0),
+        "scan_live": scan_live,
+        "scan_val": jnp.where(scan_live[..., None],
+                              val[arow[:, None, None], prow_safe], 0),
+    })
+    return out
+
+
+class SnapshotReadExecutor:
+    """Shape-cached jit dispatch over `_read_program`.  Batches pad to the
+    next power of two (dummy lanes read row 0 of partition-row 0, results
+    sliced away), so live traffic compiles at most log2(B_max) program
+    variants per (M, n_indexes) instead of one per instantaneous load."""
+
+    def __init__(self):
+        self._jit = jax.jit(_read_program)
+
+    def run(self, snap: dict, arow, rows, kinds, deltas) -> dict:
+        idx = snap.get("idx") or []
+        arow = np.asarray(arow, np.int32)
+        rows = np.asarray(rows, np.int32)
+        kinds = np.asarray(kinds, np.int32)
+        deltas = np.asarray(deltas, np.int32)
+        B = rows.shape[0]
+        Bp = 1 << max(0, int(B - 1).bit_length())
+        if Bp != B:
+            pad = Bp - B
+            arow = np.concatenate([arow, np.zeros(pad, np.int32)])
+            rows = np.concatenate([rows, np.zeros((pad,) + rows.shape[1:],
+                                                  np.int32)])
+            kinds = np.concatenate([kinds, np.zeros((pad,) + kinds.shape[1:],
+                                                    np.int32)])
+            deltas = np.concatenate(
+                [deltas, np.zeros((pad,) + deltas.shape[1:], np.int32)])
+        out = self._jit(snap["val"], snap["tid"],
+                        [ix["key"] for ix in idx],
+                        [ix["prow"] for ix in idx],
+                        [ix["tid"] for ix in idx],
+                        jnp.asarray(arow), jnp.asarray(rows),
+                        jnp.asarray(kinds), jnp.asarray(deltas))
+        if Bp != B:
+            out = {k: v[:B] for k, v in out.items()}
+        return out
+
+
+def reference_read(snap: dict, arow, rows, kinds, deltas) -> dict:
+    """Numpy oracle mirroring `_read_program` bit-for-bit (tests only)."""
+    val = np.asarray(snap["val"])
+    tid = np.asarray(snap["tid"])
+    idx = snap.get("idx") or []
+    arow = np.asarray(arow, np.int64)
+    rows = np.asarray(rows, np.int64)
+    kinds = np.asarray(kinds)
+    deltas = np.asarray(deltas)
+    B, M = rows.shape
+    out = {"val": val[arow[:, None], rows], "tid": tid[arow[:, None], rows]}
+    if not idx:
+        return out
+    K, L = min(IDX_OPS, M), SCAN_L
+    scan_key = np.full((B, K, L), SENTINEL, np.int32)
+    scan_prow = np.zeros((B, K, L), np.int32)
+    scan_tid = np.zeros((B, K, L), np.uint32)
+    scan_live = np.zeros((B, K, L), bool)
+    scan_val = np.zeros((B, K, L, val.shape[2]), np.int32)
+    for b in range(B):
+        for k in range(K):
+            if kinds[b, k] != SCAN_READ:
+                continue
+            i = int(deltas[b, k, IX_ID])
+            lo, hi = int(deltas[b, k, IX_LO]), int(deltas[b, k, IX_HI])
+            seg = np.asarray(idx[i]["key"][arow[b]])
+            cap = seg.shape[0]
+            pos0 = int(np.searchsorted(seg, lo))
+            for j in range(L):
+                raw = pos0 + j
+                s = min(max(raw, 0), cap - 1)
+                key = int(seg[s])
+                live = raw < cap and lo <= key < hi and key != SENTINEL
+                if live:
+                    scan_key[b, k, j] = key
+                    scan_prow[b, k, j] = np.asarray(idx[i]["prow"][arow[b]])[s]
+                    scan_tid[b, k, j] = np.asarray(idx[i]["tid"][arow[b]])[s]
+                    scan_live[b, k, j] = True
+                    scan_val[b, k, j] = val[arow[b], scan_prow[b, k, j]]
+    out.update({"scan_key": scan_key, "scan_prow": scan_prow,
+                "scan_tid": scan_tid, "scan_live": scan_live,
+                "scan_val": scan_val})
+    return out

@@ -1,0 +1,172 @@
+"""ReadTier: the between-fence serving loop over the snapshot catalog.
+
+Wired into the service epoch pipeline after every commit fence:
+
+  1. ``observe_epoch`` — purge replicas that died with a killed node
+     (their retained snapshots are gone; §4.5 recovery re-registers them
+     at the next fence stamp), then stamp the engine's committed read
+     views into the catalog.  Secondary views refresh on a configurable
+     cadence (``sec_refresh_every``) — the modeled cost of materializing
+     a queryable snapshot off the replication stream — which is what
+     makes ``freshness > 0`` real and the staleness bound meaningful.
+  2. ``serve`` — drain the read admission lane, group by home partition,
+     load-balance each group across the replicas whose freshness is
+     within ``max_staleness_epochs``, and execute one jitted snapshot
+     read program per chosen replica.  Transactions with NO replica
+     inside the bound re-enter their home partition's OCC queue (the
+     fallback path: a bound violation is never served, it is re-routed).
+
+Served reads commit at serve time (group-"commit" at the snapshot they
+drained against) into the tier's own LatencyRecorder, so fig12 reports
+the read vs write latency split from the same machinery.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.reads.catalog import SnapshotCatalog
+from repro.reads.executor import SnapshotReadExecutor
+from repro.service import latency as lat
+
+
+@dataclass
+class ReadTierStats:
+    served: int = 0
+    batches: int = 0
+    fallbacks: int = 0             # reads re-routed to the OCC path
+    stale_violations: int = 0      # served past the bound (must stay 0)
+    replicas_removed: int = 0      # catalog entries purged by node death
+    max_freshness_served: int = 0
+    serve_time_s: float = 0.0
+    served_by_freshness: dict = field(default_factory=dict)
+
+
+class ReadTier:
+    def __init__(self, max_staleness_epochs: int = 0,
+                 sec_refresh_every: int = 1, serve_limit: int = 256,
+                 retain: int | None = None):
+        self.k = int(max_staleness_epochs)
+        self.sec_refresh_every = max(1, int(sec_refresh_every))
+        self.serve_limit = int(serve_limit)
+        self.catalog = SnapshotCatalog(
+            n_partitions=0, retain=retain if retain is not None
+            else self.k + 2)
+        self.executor = SnapshotReadExecutor()
+        self.recorder = lat.LatencyRecorder()
+        self.stats = ReadTierStats()
+
+    # ------------------------------------------------------------------
+    def observe_epoch(self, engine, metrics: dict | None = None):
+        """Commit fence reached: update the catalog from the engine's
+        committed read views (and first purge what a failure killed)."""
+        ev = (metrics or {}).get("recovery")
+        if ev is not None:
+            self._on_failure(ev)
+        for view in engine.read_views():
+            if self.catalog.P == 0:
+                self.catalog.P = len(np.asarray(view["cover"]))
+            fresh_stamp = (view["kind"] == "full"
+                           or int(view["epoch"]) % self.sec_refresh_every == 0
+                           or view["id"] not in self.catalog.entries)
+            if fresh_stamp:
+                self.catalog.stamp(view)
+            else:
+                self.catalog.announce_epoch(int(view["epoch"]))
+
+    def _on_failure(self, event):
+        """A killed node's memory is gone: every copy it hosted leaves the
+        catalog (retained snapshots included) until recovery re-stamps."""
+        for n in event.failed:
+            self.stats.replicas_removed += self.catalog.remove(f"sec{n}")
+        if event.case.name in ("FALLBACK_DIST_CC", "UNAVAILABLE"):
+            # no full replica survived the failure — it is re-replicated
+            # (or disk-reloaded) by recovery and re-stamped at that fence
+            self.stats.replicas_removed += self.catalog.remove("full")
+
+    # ------------------------------------------------------------------
+    def serve(self, admission, now_s: float = 0.0,
+              limit: int | None = None) -> list[dict]:
+        """Drain + execute one round of the read lane.  Returns the group
+        results [{replica, epoch, freshness, slots, out}, ...] so callers
+        (tests, ledgers) can verify the served snapshots."""
+        got = admission.drain_reads(limit if limit is not None
+                                    else self.serve_limit)
+        if not got:
+            return []
+        pool = admission.pool
+        slots = np.asarray(got, np.int64)
+        homes = pool.home[slots].astype(np.int64)
+        groups: dict[str, dict] = {}
+        fallback: list[int] = []
+        for p in np.unique(homes):
+            sel = slots[homes == p]
+            choice = self.catalog.choose(int(p), self.k, weight=len(sel))
+            if choice is None:
+                fallback.extend(int(s) for s in sel)
+                continue
+            ent, epoch, snap, arow = choice
+            g = groups.setdefault(ent.replica_id,
+                                  {"ent": ent, "epoch": epoch, "snap": snap,
+                                   "slots": [], "arow": []})
+            g["slots"].extend(int(s) for s in sel)
+            g["arow"].extend([arow] * len(sel))
+
+        results = []
+        served: list[np.ndarray] = []
+        for rid, g in groups.items():
+            freshness = self.catalog.current_epoch - g["epoch"]
+            if freshness > self.k:
+                # belt and braces: eligibility already enforced the bound —
+                # over-stale data is NEVER returned, it re-routes to OCC
+                self.stats.stale_violations += len(g["slots"])
+                fallback.extend(g["slots"])
+                continue
+            gs = np.asarray(g["slots"], np.int64)
+            t0 = time.perf_counter()
+            out = self.executor.run(g["snap"],
+                                    np.asarray(g["arow"], np.int64),
+                                    pool.row[gs], pool.kind[gs],
+                                    pool.delta[gs])
+            jax.block_until_ready(out["val"])
+            self.stats.serve_time_s += time.perf_counter() - t0
+            self.stats.batches += 1
+            self.stats.served += gs.size
+            self.stats.max_freshness_served = max(
+                self.stats.max_freshness_served, freshness)
+            byf = self.stats.served_by_freshness
+            byf[freshness] = byf.get(freshness, 0) + gs.size
+            n = gs.size
+            self.recorder.record(pool.tenant[gs], pool.arrival_s[gs],
+                                 pool.admit_s[gs], np.full(n, now_s),
+                                 np.full(n, now_s),
+                                 np.full(n, lat.COMMITTED))
+            served.append(gs)
+            results.append({"replica": rid, "epoch": g["epoch"],
+                            "freshness": freshness, "slots": gs,
+                            "out": out})
+        if served:
+            admission.pool.release(np.concatenate(served))
+        if fallback:
+            admission.requeue_reads_occ(fallback)
+            self.stats.fallbacks += len(fallback)
+        return results
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        p = self.recorder.percentiles()
+        s = self.stats
+        return {
+            "read_served": s.served,
+            "read_txn_s": self.recorder.throughput_txn_s(),
+            "read_p50_ms": p.p50_ms, "read_p99_ms": p.p99_ms,
+            "read_fallbacks": s.fallbacks,
+            "read_stale_violations": s.stale_violations,
+            "read_max_freshness": s.max_freshness_served,
+            "read_by_replica": self.catalog.serves_by_replica(),
+            "read_replicas_removed": s.replicas_removed,
+            "read_serve_time_s": round(s.serve_time_s, 6),
+        }

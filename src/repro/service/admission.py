@@ -37,6 +37,9 @@ class AdmissionConfig:
     # node_of_partition on the controller) — a hot node sheds before its
     # partitions individually fill, modeling per-node ingest memory
     node_queue_cap: int | None = None
+    # read tier: bound on the snapshot-read lane (active only when the
+    # controller is built with read_lane=True)
+    read_queue_cap: int = 1024
 
 
 @dataclass
@@ -48,8 +51,11 @@ class AdmissionStats:
     requeued: int = 0               # starved OCC txns pushed back (front)
     max_part_depth: int = 0
     max_master_depth: int = 0
-    # per-queue rejection attribution: index p < P = partition p's queue,
-    # index P = the master queue (cluster telemetry: group by node)
+    max_read_depth: int = 0
+    # per-queue rejection attribution — the array is ALWAYS sized P + 2:
+    # index p < P = partition p's queue, index P = the master queue,
+    # index P + 1 = the read-tier lane (0 when no read lane is wired);
+    # cluster telemetry groups the first P + 1 by node (node_shed)
     rejected_by_queue: np.ndarray | None = None
 
 
@@ -104,7 +110,7 @@ class AdmissionController:
                  cfg: AdmissionConfig | None = None,
                  router: Router | None = None,
                  pool: RequestPool | None = None,
-                 node_of_partition=None):
+                 node_of_partition=None, read_lane: bool = False):
         self.P, self.R = n_partitions, rows_per_partition
         self.cfg = cfg or AdmissionConfig()
         self.router = router or Router(n_partitions, rows_per_partition,
@@ -112,12 +118,18 @@ class AdmissionController:
         self.pool = pool or RequestPool(max_ops, n_cols)
         self.part_queues = [deque() for _ in range(n_partitions)]
         self.master_queue = deque()
+        # read tier: declared-read-only single-home transactions bypass the
+        # OCC queues into this bounded lane (drained by reads.ReadTier)
+        self.read_lane = bool(read_lane)
+        self.read_queue = deque()
         # cluster: which node owns each partition's queue (per-node caps
         # + per-node shed/depth telemetry); None = single-node service
         self.node_of_partition = (np.asarray(node_of_partition, np.int64)
                                   if node_of_partition is not None else None)
         self.stats = AdmissionStats()
-        self.stats.rejected_by_queue = np.zeros(n_partitions + 1, np.int64)
+        # sized P + 2 unconditionally (read-lane slot is zero without a
+        # read lane) so every consumer indexes one fixed layout
+        self.stats.rejected_by_queue = np.zeros(n_partitions + 2, np.int64)
 
     # ------------------------------------------------------------------
     def offer(self, req: dict, now_s: float):
@@ -136,6 +148,12 @@ class AdmissionController:
 
         admitted = np.zeros(B, bool)
         dest = np.where(is_cross, -1, home).astype(np.int64)
+        # read tier: declared-read-only single-home transactions take the
+        # bounded read lane instead of the OCC queues
+        ro = req.get("read_only")
+        to_read = (np.asarray(ro, bool) & ~is_cross
+                   if self.read_lane and ro is not None
+                   else np.zeros(B, bool))
         # per-node ingest budget (cluster): a node's partition queues share
         # one bound on top of the per-partition caps
         node_budget = None
@@ -153,7 +171,7 @@ class AdmissionController:
             if node_budget is not None:
                 n = self.node_of_partition[p]
                 room = min(room, int(node_budget[n]))
-            sel = np.nonzero(dest == p)[0]
+            sel = np.nonzero((dest == p) & ~to_read)[0]
             take = sel[:room]
             if node_budget is not None:
                 node_budget[self.node_of_partition[p]] -= len(take)
@@ -162,6 +180,10 @@ class AdmissionController:
         cross_take = cross_sel[:max(0, self.cfg.master_queue_cap
                                     - len(self.master_queue))]
         admitted[cross_take] = True
+        read_sel = np.nonzero(to_read)[0]
+        read_take = read_sel[:max(0, self.cfg.read_queue_cap
+                                  - len(self.read_queue))]
+        admitted[read_take] = True
 
         aidx = np.nonzero(admitted)[0]
         if aidx.size:
@@ -181,7 +203,9 @@ class AdmissionController:
             pool.arrival_s[slots] = req["arrival_s"][aidx]
             pool.admit_s[slots] = now_s
             for k, i in zip(aidx, slots):
-                if is_cross[k]:
+                if to_read[k]:
+                    self.read_queue.append(int(i))
+                elif is_cross[k]:
                     self.master_queue.append(int(i))
                 else:
                     self.part_queues[int(home[k])].append(int(i))
@@ -191,6 +215,7 @@ class AdmissionController:
         self.stats.admitted += int(aidx.size)
         if n_rej:
             rq = np.where(dest[rejected] >= 0, dest[rejected], self.P)
+            rq = np.where(to_read[rejected], self.P + 1, rq)
             np.add.at(self.stats.rejected_by_queue, rq, 1)
         if self.cfg.policy == SHED:
             self.stats.shed += n_rej
@@ -201,6 +226,8 @@ class AdmissionController:
             max((len(q) for q in self.part_queues), default=0))
         self.stats.max_master_depth = max(self.stats.max_master_depth,
                                           len(self.master_queue))
+        self.stats.max_read_depth = max(self.stats.max_read_depth,
+                                        len(self.read_queue))
         return rejected
 
     # ------------------------------------------------------------------
@@ -217,8 +244,26 @@ class AdmissionController:
         self.master_queue.extendleft(reversed([int(s) for s in slots]))
         self.stats.requeued += len(slots)
 
+    # -- read tier -------------------------------------------------------
+    def drain_reads(self, limit: int) -> list[int]:
+        q = self.read_queue
+        return [q.popleft() for _ in range(min(limit, len(q)))]
+
+    def requeue_reads_occ(self, slots):
+        """Staleness-bound fallback: reads with NO replica inside the bound
+        re-enter their home partition's OCC queue at the FRONT (they are
+        the oldest admitted work) — over-stale data is never served, the
+        transaction executes fence-fresh through the normal phases."""
+        for s in reversed([int(s) for s in slots]):
+            self.part_queues[int(self.pool.home[s])].appendleft(int(s))
+        self.stats.requeued += len(slots)
+
+    def read_depth(self) -> int:
+        return len(self.read_queue)
+
     def depth(self) -> int:
-        return sum(len(q) for q in self.part_queues) + len(self.master_queue)
+        return sum(len(q) for q in self.part_queues) \
+            + len(self.master_queue) + len(self.read_queue)
 
     def depths(self):
         """(per-partition queue depths (P,), master queue depth)."""

@@ -20,7 +20,7 @@ from repro.db import tpcc, ycsb
 _GEN_CHUNK = 256      # payload pre-generation granularity
 
 _REQ_FIELDS = ("parts", "rows", "kinds", "deltas", "user_abort", "home",
-               "txn_id", "tenant", "arrival_s")
+               "read_only", "txn_id", "tenant", "arrival_s")
 
 
 def empty_request(M: int, C: int) -> dict:
@@ -30,6 +30,7 @@ def empty_request(M: int, C: int) -> dict:
             "deltas": np.zeros((0, M, C), np.int32),
             "user_abort": np.zeros(0, bool),
             "home": np.zeros(0, np.int32),
+            "read_only": np.zeros(0, bool),
             "txn_id": np.zeros(0, np.int64),
             "tenant": np.zeros(0, np.int32),
             "arrival_s": np.zeros(0, np.float64)}

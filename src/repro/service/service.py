@@ -44,21 +44,26 @@ class TxnService:
                  admission_cfg: AdmissionConfig | None = None,
                  slots_per_partition: int = 64, master_lanes: int = 64,
                  max_ops: int | None = None, feedback=None,
-                 node_of_partition=None):
+                 node_of_partition=None, read_tier=None):
         """feedback: optional callable(batch, metrics) invoked after every
         epoch's commit fence — the service-level consume-feedback hook
         (e.g. ``lambda b, m: tpcc.apply_consume_feedback(state, b, m)``
         re-queues Delivery districts the device skipped).
         node_of_partition: cluster deployments pass the partition→node map
         so admission enforces per-node queue bounds and attributes
-        shed/depth telemetry per node (see ClusterTxnService)."""
+        shed/depth telemetry per node (see ClusterTxnService).
+        read_tier: optional ``reads.ReadTier`` — declared-read-only
+        transactions route to a bounded read lane and are served from
+        replica snapshots between fences instead of burning OCC slots."""
         self.engine = engine
         self.clients = list(clients)
         self.feedback = feedback
+        self.read_tier = read_tier
         M = max_ops if max_ops is not None else self.clients[0].source.M
         self.admission = AdmissionController(
             engine.P, engine.R, M, engine.C, cfg=admission_cfg,
-            node_of_partition=node_of_partition)
+            node_of_partition=node_of_partition,
+            read_lane=read_tier is not None)
         src = self.clients[0].source
         self.batcher = EpochBatcher(self.admission, slots_per_partition,
                                     master_lanes, row_bytes=src.row_bytes,
@@ -158,6 +163,9 @@ class TxnService:
         self._t0 = time.perf_counter()
         self._deadline = duration_s
         self.recorder.started_s = 0.0
+        if self.read_tier is not None:
+            self.read_tier.recorder.started_s = 0.0
+            self.read_tier.observe_epoch(self.engine)   # initial catalog
         self._ingest(self.clock())
         batch, plan = self.batcher.form(self.clock())
         nxt = {}
@@ -188,9 +196,17 @@ class TxnService:
                 self.feedback(batch, m)
             self._complete(plan, m)
             self._observe_epoch(m)
+            if self.read_tier is not None:
+                # commit fence passed: refresh the snapshot catalog, then
+                # serve the read lane BETWEEN fences from the committed
+                # replica snapshots (no OCC slots burned)
+                self.read_tier.observe_epoch(self.engine, m)
+                self.read_tier.serve(self.admission, self.clock())
             batch, plan = nxt["formed"]
 
         self.recorder.finished_s = self.clock()
+        if self.read_tier is not None:
+            self.read_tier.recorder.finished_s = self.clock()
         return self.summary()
 
     def _observe_epoch(self, metrics: dict):
@@ -200,7 +216,7 @@ class TxnService:
     def summary(self) -> dict:
         rec, adm = self.recorder, self.admission.stats
         p = rec.percentiles()
-        return {
+        out = {
             "epochs": self.stats.epochs,
             "committed": self.stats.committed,
             "user_aborted": self.stats.user_aborted,
@@ -219,3 +235,10 @@ class TxnService:
             "ingest_overlap_s": self.stats.ingest_time_s,
             "epoch_time_s": self.stats.epoch_time_s,
         }
+        if self.read_tier is not None:
+            out.update(self.read_tier.summary())
+            out["write_committed"] = self.stats.committed
+            out["write_txn_s"] = out["throughput_txn_s"]
+            out["combined_txn_s"] = (out["throughput_txn_s"]
+                                     + out["read_txn_s"])
+        return out

@@ -1,0 +1,351 @@
+"""Bounded-staleness read tier: snapshot catalog, read-lane admission,
+executor parity, and the freshness-bound property.
+
+The property under test (ISSUE 6 acceptance): any read served at freshness
+bound k is bit-equal to the engine's committed state at SOME fence within
+the last k epochs — never torn, never a future/in-flight epoch — and a
+read that cannot meet the bound is re-routed to the OCC path, never served
+stale.  The cluster variant re-checks the property across a mid-stream
+kill of the full-replica node (§4.5 case 2: FALLBACK_DIST_CC), where the
+killed node's hosted secondary leaves the catalog until recovery
+re-materializes it.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.core.engine import StarEngine
+from repro.db import tpcc
+from repro.reads import ReadTier, SnapshotCatalog, reference_read
+from repro.service.admission import AdmissionConfig, AdmissionController
+from tests._hyp import given, settings, st
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+# ---------------------------------------------------------------------------
+# read-lane admission + P + 2 rejection attribution
+# ---------------------------------------------------------------------------
+def _read_req(n, home_p, P=2, M=2, C=3, read_only=True):
+    return {
+        "parts": np.full((n, M), home_p, np.int32),
+        "rows": np.tile(np.arange(M, dtype=np.int32), (n, 1)),
+        "kinds": np.zeros((n, M), np.int32),
+        "deltas": np.zeros((n, M, C), np.int32),
+        "user_abort": np.zeros(n, bool),
+        "home": np.full(n, home_p, np.int32),
+        "read_only": np.full(n, read_only, bool),
+        "txn_id": np.arange(n, dtype=np.int64),
+        "tenant": np.zeros(n, np.int32),
+        "arrival_s": np.zeros(n),
+    }
+
+
+def test_read_lane_admission_caps_and_shed_attribution():
+    """Declared-read-only singles route to the bounded read lane; overflow
+    sheds are attributed to the read-lane slot (index P + 1) — and the
+    attribution array is ALWAYS sized P + 2 so per-node accounting
+    (ClusterTxnService.node_shed) can index it explicitly."""
+    adm = AdmissionController(2, 64, max_ops=2, n_cols=3,
+                              cfg=AdmissionConfig(64, 64, read_queue_cap=2),
+                              read_lane=True)
+    assert adm.stats.rejected_by_queue.shape == (2 + 2,)
+    rejected = adm.offer(_read_req(5, home_p=1), 0.0)
+    assert rejected.sum() == 3                       # cap 2 admitted
+    assert adm.read_depth() == 2
+    assert len(adm.part_queues[1]) == 0              # bypassed the OCC queue
+    assert adm.stats.rejected_by_queue.tolist() == [0, 0, 0, 3]
+    assert adm.stats.max_read_depth == 2
+    # FIFO drain hands the admitted slots to the tier
+    slots = adm.drain_reads(10)
+    assert len(slots) == 2 and adm.read_depth() == 0
+    # staleness-bound fallback: back to the FRONT of the home OCC queue
+    adm.requeue_reads_occ(slots)
+    assert list(adm.part_queues[1]) == slots
+    assert adm.depth() == 2
+
+
+def test_read_lane_disabled_routes_reads_to_occ():
+    """Without a read tier the same declared-read-only request takes the
+    normal partition queue; the attribution layout stays P + 2."""
+    adm = AdmissionController(2, 64, max_ops=2, n_cols=3)
+    rejected = adm.offer(_read_req(3, home_p=0), 0.0)
+    assert not rejected.any()
+    assert adm.read_depth() == 0
+    assert len(adm.part_queues[0]) == 3
+    assert adm.stats.rejected_by_queue.shape == (2 + 2,)
+    assert adm.stats.rejected_by_queue[3] == 0
+
+
+def test_fallback_never_serves_without_eligible_replica():
+    """An EMPTY catalog (no replica inside any bound) must serve nothing:
+    every drained read re-enters its home partition queue, order intact."""
+    adm = AdmissionController(2, 64, max_ops=2, n_cols=3, read_lane=True)
+    assert not adm.offer(_read_req(3, home_p=1), 0.0).any()
+    queued = list(adm.read_queue)
+    tier = ReadTier(max_staleness_epochs=4)
+    results = tier.serve(adm)
+    assert results == []
+    assert tier.stats.served == 0 and tier.stats.fallbacks == 3
+    assert adm.read_depth() == 0
+    assert list(adm.part_queues[1]) == queued        # FIFO preserved
+
+
+# ---------------------------------------------------------------------------
+# snapshot catalog lifecycle
+# ---------------------------------------------------------------------------
+def _view(rid, epoch, P=2, kind="secondary", node=1):
+    return {"id": rid, "kind": kind, "node": node, "epoch": epoch,
+            "watermark": (epoch, 0), "cover": np.ones(P, bool),
+            "row_of_partition": np.arange(P), "val": np.zeros((P, 4, 2)),
+            "tid": np.zeros((P, 4)), "idx": []}
+
+
+def test_catalog_ring_freshness_choose_and_remove():
+    cat = SnapshotCatalog(2, retain=2)
+    for e in (1, 2, 3):
+        cat.stamp(_view("sec1", e))
+    assert len(cat.entries["sec1"].snaps) == 2       # ring bounded
+    assert cat.freshness("sec1") == 0
+    cat.stamp(_view("full", 3, kind="full", node=0))
+    cat.announce_epoch(4)                            # nobody refreshed
+    assert cat.freshness("sec1") == 1 and cat.freshness("full") == 1
+    assert cat.eligible(0, 0) == []                  # bound 0: none fresh
+    got = cat.choose(0, 1, weight=2)
+    assert got is not None and got[0].serves == 2
+    # least-served balancing: next choice goes to the other replica
+    other = cat.choose(0, 1, weight=1)
+    assert other[0].replica_id != got[0].replica_id
+    # node death purges the entry AND its retained snapshots
+    assert cat.remove("sec1") and cat.freshness("sec1") is None
+    assert not cat.remove("sec1")                    # idempotent
+
+
+# ---------------------------------------------------------------------------
+# engine-backed fixture: full-mix TPC-C, every fence state recorded
+# ---------------------------------------------------------------------------
+_FX = None
+
+
+def _engine_fixture():
+    """Run 5 full-mix epochs once, recording every replica view's committed
+    state per fence (numpy copies — the oracle the property compares
+    against).  5 epochs (odd) leaves the secondary view one fence stale
+    under the cadence-2 refresh, so k=0 vs k>=1 really differ."""
+    global _FX
+    if _FX is not None:
+        return _FX
+    cfg = tpcc.TPCCConfig(n_partitions=4, n_items=400, cust_per_district=40,
+                          order_ring=64, mix="full", delivery_gen_lag=96)
+    state = tpcc.TPCCState(cfg)
+    init = tpcc.init_values(cfg, np.random.default_rng(0), state=state)
+    eng = StarEngine(4, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg))
+    tier = ReadTier(max_staleness_epochs=3, sec_refresh_every=2)
+    recorded, reads = {}, []
+
+    def record():
+        for v in eng.read_views():
+            recorded[(v["id"], int(v["epoch"]))] = {
+                "val": np.asarray(v["val"]).copy(),
+                "tid": np.asarray(v["tid"]).copy(),
+                "idx": [{k: np.asarray(ix[k]).copy()
+                         for k in ("key", "prow", "tid")}
+                        for ix in (v.get("idx") or [])]}
+
+    tier.observe_epoch(eng)
+    record()
+    for ep in range(5):
+        raw = tpcc.make_raw(cfg, state, 96, np.random.default_rng(ep))
+        batch = tpcc.make_batch(cfg, state, 0, raw=raw)
+        m = eng.run_epoch(batch)
+        tpcc.apply_consume_feedback(state, batch, m)
+        tier.observe_epoch(eng)
+        record()
+        sel = raw["read_only"]
+        reads.append({k: raw[k][sel] for k in
+                      ("parts", "rows", "kinds", "deltas", "user_abort",
+                       "home")})
+    _FX = SimpleNamespace(
+        cfg=cfg, eng=eng, tier=tier, recorded=recorded,
+        reads={k: np.concatenate([r[k] for r in reads]) for k in reads[0]},
+        final_epoch=int(eng.committed_epoch))
+    assert _FX.reads["home"].shape[0] > 0, "mix drew no read-only txns"
+    return _FX
+
+
+def _offer_reads(fx, pick):
+    n = pick.size
+    adm = AdmissionController(4, fx.cfg.rows_per_partition,
+                              max_ops=fx.reads["rows"].shape[1],
+                              n_cols=fx.reads["deltas"].shape[2],
+                              read_lane=True)
+    req = {k: v[pick] for k, v in fx.reads.items()}
+    req.update(read_only=np.ones(n, bool),
+               txn_id=np.arange(n, dtype=np.int64),
+               tenant=np.zeros(n, np.int32), arrival_s=np.zeros(n))
+    assert not adm.offer(req, 0.0).any()
+    return adm
+
+
+def _check_results(fx, tier, adm, results, k):
+    pool = adm.pool
+    cur = tier.catalog.current_epoch
+    for r in results:
+        assert 0 <= r["freshness"] <= k, r        # never future, never past k
+        assert r["freshness"] == cur - r["epoch"]
+        if k == 0:
+            assert r["epoch"] == fx.final_epoch   # fence-fresh serving
+        ent = tier.catalog.entries[r["replica"]]
+        arow = ent.row_of_partition[pool.home[r["slots"]].astype(np.int64)]
+        exp = reference_read(fx.recorded[(r["replica"], r["epoch"])], arow,
+                             pool.row[r["slots"]], pool.kind[r["slots"]],
+                             pool.delta[r["slots"]])
+        for key, want in exp.items():             # bit-equal to the fence
+            assert np.array_equal(np.asarray(r["out"][key]), want), \
+                (r["replica"], r["epoch"], key)
+
+
+def test_k0_reads_bit_equal_current_fence():
+    """k = 0: every read is served from a snapshot of exactly the current
+    committed fence, bit-equal to the recorded engine state."""
+    fx = _engine_fixture()
+    fx.tier.k = 0
+    adm = _offer_reads(fx, np.arange(fx.reads["home"].shape[0]))
+    results = fx.tier.serve(adm)
+    assert sum(r["slots"].size for r in results) == fx.reads["home"].shape[0]
+    assert fx.tier.stats.stale_violations == 0
+    _check_results(fx, fx.tier, adm, results, k=0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 3), st.integers(0, 2 ** 31 - 1))
+def test_freshness_bound_property(k, seed):
+    """Any read served at bound k is bit-equal to a recorded fence within
+    the last k epochs; nothing is dropped (served + fallbacks == offered)
+    and nothing is ever served past the bound."""
+    fx = _engine_fixture()
+    tier = fx.tier
+    tier.k = int(k)
+    rng = np.random.default_rng(seed)
+    total = fx.reads["home"].shape[0]
+    pick = rng.choice(total, size=int(rng.integers(1, total + 1)),
+                      replace=False)
+    adm = _offer_reads(fx, pick)
+    before = tier.stats.fallbacks
+    results = tier.serve(adm)
+    served = sum(r["slots"].size for r in results)
+    # the full copy is stamped every fence, so nothing needs the fallback
+    assert served == pick.size and tier.stats.fallbacks == before
+    assert tier.stats.stale_violations == 0
+    _check_results(fx, tier, adm, results, k=int(k))
+
+
+# ---------------------------------------------------------------------------
+# cluster: property holds across a mid-stream kill + case-2 recovery
+# ---------------------------------------------------------------------------
+def test_cluster_read_property_across_midstream_kill_case2():
+    """Kill the full-replica node MID-STREAM (aborted at slab 1).  The
+    coordinator classifies FALLBACK_DIST_CC (§4.5 case 2); the killed
+    node's hosted secondary AND the full copy leave the catalog (their
+    snapshots died with the node) until recovery re-materializes and the
+    next fence re-stamps them.  Every read served before, during, and
+    after stays bit-equal to a committed fence within the bound — the
+    reverted in-flight epoch is never visible."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.cluster import ClusterRuntime
+        from repro.core.fault import FaultInjector, RecoveryCase
+        from repro.db import tpcc
+        from repro.reads import ReadTier, reference_read
+        from repro.service.admission import AdmissionController
+
+        P = 8
+        cfg = tpcc.TPCCConfig(n_partitions=P, n_items=400,
+                              cust_per_district=40, order_ring=64,
+                              mix="full", delivery_gen_lag=96)
+        state = tpcc.TPCCState(cfg)
+        init = tpcc.init_values(cfg, np.random.default_rng(0), state=state)
+        mesh = jax.make_mesh((4,), ("part",), devices=jax.devices()[:4])
+        inj = FaultInjector()
+        inj.schedule_kill(0, epoch=3, slab=1)     # full-replica node, mid-stream
+        rt = ClusterRuntime(mesh, P, cfg.rows_per_partition, init_val=init,
+                            indexes=tpcc.index_specs(cfg), injector=inj)
+        tier = ReadTier(max_staleness_epochs=2, sec_refresh_every=2)
+        tier.observe_epoch(rt)
+        recorded, events, removed_seen = {}, [], False
+
+        def record():
+            for v in rt.read_views():
+                recorded[(v["id"], int(v["epoch"]))] = {
+                    "val": np.asarray(v["val"]).copy(),
+                    "tid": np.asarray(v["tid"]).copy(),
+                    "idx": [{k: np.asarray(ix[k]).copy()
+                             for k in ("key", "prow", "tid")}
+                            for ix in (v.get("idx") or [])]}
+
+        record()
+        for ep in range(6):
+            raw = tpcc.make_raw(cfg, state, 96, np.random.default_rng(ep))
+            batch = tpcc.make_batch(cfg, state, 0, raw=raw)
+            m = rt.run_epoch(batch)
+            tpcc.apply_consume_feedback(state, batch, m)
+            if "recovery" in m:
+                events.append(m["recovery"])
+            tier.observe_epoch(rt, m)
+            record()
+            sel = np.nonzero(raw["read_only"])[0]
+            if not sel.size:
+                continue
+            adm = AdmissionController(P, cfg.rows_per_partition,
+                                      max_ops=raw["rows"].shape[1],
+                                      n_cols=raw["deltas"].shape[2],
+                                      read_lane=True)
+            n = sel.size
+            req = {k: raw[k][sel] for k in
+                   ("parts", "rows", "kinds", "deltas", "user_abort",
+                    "home", "read_only")}
+            req.update(txn_id=np.arange(n, dtype=np.int64),
+                       tenant=np.zeros(n, np.int32), arrival_s=np.zeros(n))
+            assert not adm.offer(req, 0.0).any()
+            results = tier.serve(adm)
+            pool = adm.pool
+            cur = tier.catalog.current_epoch
+            for r in results:
+                assert 0 <= r["freshness"] <= 2, r
+                assert r["freshness"] == cur - r["epoch"]
+                ent = tier.catalog.entries[r["replica"]]
+                arow = ent.row_of_partition[
+                    pool.home[r["slots"]].astype(np.int64)]
+                exp = reference_read(recorded[(r["replica"], r["epoch"])],
+                                     arow, pool.row[r["slots"]],
+                                     pool.kind[r["slots"]],
+                                     pool.delta[r["slots"]])
+                for key, want in exp.items():
+                    assert np.array_equal(np.asarray(r["out"][key]), want), \
+                        (r["replica"], r["epoch"], key)
+            assert rt.replica_consistent(), ep
+
+        [ev] = events
+        assert ev.case is RecoveryCase.FALLBACK_DIST_CC, ev
+        assert ev.aborted_at_slab == 1, ev
+        assert tier.stats.replicas_removed >= 2      # sec0 + the full copy
+        assert "full" in tier.catalog.entries        # re-registered post-recovery
+        assert "sec0" in tier.catalog.entries
+        assert tier.stats.stale_violations == 0
+        assert tier.stats.served > 0
+        print("OK case2 reads", tier.stats.served,
+              "removed", tier.stats.replicas_removed)
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=480)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK case2 reads" in out.stdout

@@ -221,6 +221,10 @@ def test_router_reroute_detected_and_deferred_to_master():
            "arrival_s": np.zeros(3)}
     rejected = adm.offer(req, now_s=0.0)
     assert not rejected.any()
+    # P partitions + master + read lane: the attribution array is ALWAYS
+    # P + 2 (read-lane slot present even with the lane disabled) so shed
+    # accounting can index rq[:P], rq[P], rq[P + 1] unconditionally
+    assert adm.stats.rejected_by_queue.shape == (4 + 2,)
     assert adm.router.stats.rerouted == 1          # only the mis-declared one
     assert adm.router.stats.cross == 2             # rerouted + honest cross
     assert len(adm.master_queue) == 2
