@@ -72,9 +72,15 @@ def measure_tpcc_mix(mix: str, n_txns: int = 512, epochs: int = 4,
          eng.stats.consume_skips),
     ]
     if eng.stats.sm_rounds > warm_rounds:     # per-round OCC kernel time
+        sm_us = (1e6 * (eng.stats.sm_time_s - warm_sm)
+                 / (eng.stats.sm_rounds - warm_rounds))
+        # stamp the measured value into the derived column too: the BENCH
+        # snapshot's "rows" dict keeps derived values only, and a literal 0
+        # here once shipped `sm_round_us: 0` per mix while the headline
+        # showed the real number
+        assert sm_us > 0.0, (mix, kernel, eng.stats)
         rows.append((f"fig11/tpcc_measured_mix_{tag}_sm_round_us",
-                     1e6 * (eng.stats.sm_time_s - warm_sm)
-                     / (eng.stats.sm_rounds - warm_rounds), 0))
+                     sm_us, round(sm_us, 3)))
     # §5 op-stream shipping split: fence-exposed bytes (for BENCH snapshot)
     rows.append((f"fig11/tpcc_measured_mix_{tag}_op_bytes_fence", 0.0,
                  int(eng.stats.op_bytes_fence)))
@@ -327,6 +333,12 @@ def main():
         assert rates and all(v > 5 for v in rates.values()), \
             f"throughput collapsed: {thr}"
         assert all(v > 100 for v in commits.values()), thr
+        # per-mix SM-round attribution must survive into the derived column
+        # (regression gate for the sm_round_us: 0 snapshot bug)
+        sm_rows = {r[0]: r[2] for r in rows
+                   if r[0].endswith("_sm_round_us")}
+        assert sm_rows and all(v > 0 for v in sm_rows.values()), \
+            f"per-mix sm_round attribution lost: {sm_rows}"
         if "fig11/tpcc_read_tier_read_txn_s" in rates:
             # Scale-independent invariants only: serving a read from a
             # snapshot must be much cheaper than committing a write through

@@ -31,6 +31,27 @@ def occ_rows():
     return rows
 
 
+def index_merge_rows():
+    """Index-maintenance traffic per vmapped merge call, three generations:
+    the original full-segment argsort merge, the gather-form jnp merge and
+    the fused Pallas kernel (repro.kernels.index_merge.index_merge_bytes)."""
+    from repro.kernels.index_merge.ops import index_merge_bytes
+    from repro.launch.roofline import HBM_BW
+
+    rows = []
+    for label, P, cap, Q in (("tpcc_p4_ol", 4, 11520, 1536),
+                             ("tpcc_p16_ol", 16, 11520, 1536),
+                             ("tpcc_p4_big", 4, 65536, 1536)):
+        bts = index_merge_bytes(P, cap, Q)
+        for k in ("argsort", "jnp", "pallas"):
+            rows.append((f"roofline/index_merge/{label}/{k}",
+                         bts[k] / HBM_BW * 1e6,          # us at v5e HBM bw
+                         f"{bts[k] / 1e6:.1f}MB"))
+        rows.append((f"roofline/index_merge/{label}/fusion_traffic_x", 0.0,
+                     round(bts["jnp"] / max(bts["pallas"], 1), 1)))
+    return rows
+
+
 def run():
     rows = []
     for f in sorted(glob.glob(str(RESULTS / "*pod16x16.json"))):
@@ -44,4 +65,5 @@ def run():
         rows.append((f"roofline/{cell}/{ro['bottleneck']}", 0.0,
                      f"{dom * 1e3:.1f}ms useful={ro['useful_flops_ratio']:.2f}"))
     rows += occ_rows()
+    rows += index_merge_rows()
     return rows

@@ -105,8 +105,14 @@ class ClusterStarEngine:
                  iteration_ms: float = 10.0, adaptive_epoch: bool = False,
                  indexes: list[IndexSpec] | None = None,
                  net: Network | None = None, n_slabs: int = 4,
-                 secondary: bool | None = None):
+                 secondary: bool | None = None, kernel: str = "jnp"):
         assert "part" in mesh.axis_names
+        assert kernel in ("jnp", "pallas"), kernel
+        # "pallas" rides the fused kernels everywhere index maintenance /
+        # OCC rounds run: the sharded partitioned phase, the single-master
+        # phase on the full copy, and every partial-replica replay —
+        # bit-identical results either way (interpreted off-TPU)
+        self.kernel = kernel
         self.mesh = mesh
         self.n_nodes = int(mesh.shape["part"])
         assert n_partitions % self.n_nodes == 0, \
@@ -183,6 +189,7 @@ class ClusterStarEngine:
         mesh = self.mesh
         ppn, R, C, N = self.ppn, self.R, self.C, self.n_nodes
         has_index = self.has_index
+        kernel = self.kernel
 
         def part_phase(val, tid, index, seq, ptxn, epoch):
             # NO collectives inside: single-partition txns need none (§4.1).
@@ -192,7 +199,8 @@ class ClusterStarEngine:
             part_ids = pid * ppn + jnp.arange(ppn, dtype=jnp.int32)
             v, t, out, stats = run_partitioned(
                 val, tid, ptxn, epoch, seq0=seq,
-                index=index if has_index else None, part_ids=part_ids)
+                index=index if has_index else None, part_ids=part_ids,
+                kernel=kernel)
             idx = out.get("index", index)
             extras = jnp.stack([stats["committed"],
                                 stats["consume_skips"],
@@ -232,7 +240,7 @@ class ClusterStarEngine:
         self._sm = jax.jit(
             lambda v, t, idx, txns, epoch: run_single_master(
                 v, t, txns, epoch, max_rounds=self.max_rounds,
-                index=idx if has_index else None))
+                index=idx if has_index else None, kernel=kernel))
 
         def scatter_back(part_val, part_tid, rows, vals, tids):
             """Apply the master's write stream to the partition owners:
@@ -273,7 +281,7 @@ class ClusterStarEngine:
         # = one jitted replay of its slot range (records + index ops).
         self._replay_full = jax.jit(
             lambda v, t, log, idx: repl.replay_partitioned(
-                v, t, log, idx if has_index else None))
+                v, t, log, idx if has_index else None, kernel=kernel))
 
         part_ids_sec = (jnp.arange(self.P, dtype=jnp.int32) - ppn) \
             % self.P
@@ -284,7 +292,7 @@ class ClusterStarEngine:
             rl = jax.tree.map(lambda a: jnp.roll(a, ppn, axis=0), log)
             return repl.replay_partitioned(
                 v, t, rl, idx if has_index else None,
-                part_ids=part_ids_sec)
+                part_ids=part_ids_sec, kernel=kernel)
 
         self._replay_sec = jax.jit(replay_sec)
 
@@ -293,7 +301,8 @@ class ClusterStarEngine:
                 pid = jax.lax.axis_index("part")
                 part_ids = pid * ppn + jnp.arange(ppn, dtype=jnp.int32)
                 return repl.replay_index_rounds(idx, kinds, delta, iwrite,
-                                                tids, part_ids=part_ids)
+                                                tids, part_ids=part_ids,
+                                                kernel=kernel)
 
             def sm_idx_replay_sec(idx, kinds, delta, iwrite, tids):
                 pid = jax.lax.axis_index("part")
@@ -301,7 +310,8 @@ class ClusterStarEngine:
                     pid * ppn + jnp.arange(ppn, dtype=jnp.int32) - ppn,
                     self.P)
                 return repl.replay_index_rounds(idx, kinds, delta, iwrite,
-                                                tids, part_ids=part_ids)
+                                                tids, part_ids=part_ids,
+                                                kernel=kernel)
 
             bspecs = (idx_spec, P(), P(), P(), P())
             self._sm_idx_replay = jax.jit(shard_map(

@@ -125,8 +125,10 @@ class StarEngine:
                                static_argnames=("max_rounds", "deterministic",
                                                 "kernel"))
         self._jit_thomas = jax.jit(repl.thomas_apply_batch)
-        self._jit_replay = jax.jit(repl.replay_partitioned)
-        self._jit_replay_idx = jax.jit(repl.replay_index_rounds)
+        self._jit_replay = jax.jit(repl.replay_partitioned,
+                                   static_argnames=("kernel",))
+        self._jit_replay_idx = jax.jit(repl.replay_index_rounds,
+                                       static_argnames=("kernel",))
 
     # -- dict views kept for callers/tests that read engine state --------
     @property
@@ -195,7 +197,8 @@ class StarEngine:
         # operation replication (ordered per-partition replay) — or value
         rep_val, rep_tid, rep_idx = self._jit_replay(
             self.replica_store.val, self.replica_store.tid, part_out["log"],
-            self.replica_store.indexes if self.has_index else None)
+            self.replica_store.indexes if self.has_index else None,
+            kernel=self.kernel)
         self.replica_store.val, self.replica_store.tid = rep_val, rep_tid
         if self.has_index:
             self.replica_store.indexes = rep_idx
@@ -251,7 +254,8 @@ class StarEngine:
             if self.has_index:
                 self.replica_store.indexes = self._jit_replay_idx(
                     self.replica_store.indexes, cross["kind"], cross["delta"],
-                    sm_out["log"]["iwrite"], sm_out["log"]["tid"])
+                    sm_out["log"]["iwrite"], sm_out["log"]["tid"],
+                    kernel=self.kernel)
         else:
             sstats = {"committed": jnp.int32(0), "retries": jnp.int32(0),
                       "user_aborts": jnp.int32(0), "starved": jnp.int32(0),

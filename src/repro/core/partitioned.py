@@ -117,7 +117,8 @@ def run_partitioned(val, tidw, ptxn, epoch, seq0=None, index=None,
             index, ov = apply_index_ops(
                 index, kind[:, :K], delta[:, :K], iw,
                 jnp.broadcast_to(new_tid[:, None], (P, K)),
-                part_ids=part_ids)
+                part_ids=part_ids,
+                use_pallas=(kernel == "pallas"), interpret=interpret)
             overflow = overflow + ov
             log["iwrite"] = iw
             # per-op skipped-consume mask — the consume-feedback stream the

@@ -85,7 +85,8 @@ def replay_operations(val, tidw, log):
     return val, tidw
 
 
-def replay_partitioned(val, tidw, log, index=None, part_ids=None):
+def replay_partitioned(val, tidw, log, index=None, part_ids=None,
+                       kernel: str = "jnp", interpret=None):
     """Ordered replay of the whole partitioned-phase stream, all partitions
     at once (the vectorized form of ``replay_operations``), with optional
     index maintenance.
@@ -95,6 +96,8 @@ def replay_partitioned(val, tidw, log, index=None, part_ids=None):
     index: list of {"key","prow","tid"} (P, cap_i) pytrees.
     part_ids: optional (P,) global partition id per array row (rolled
     secondary-replica layouts pass their home-major permutation).
+    kernel: "pallas" replays index maintenance through the fused
+    index-merge kernel — the same path the master ran, bit-equal arrays.
     """
     P, T, M = log["row"].shape
     K = min(IDX_OPS, M)
@@ -117,7 +120,8 @@ def replay_partitioned(val, tidw, log, index=None, part_ids=None):
             # executors already counted it
             index, _ = apply_index_ops(
                 index, slot["kind"][:, :K], slot["delta"][:, :K],
-                slot["iwrite"], slot["tid"][:, :K], part_ids=part_ids)
+                slot["iwrite"], slot["tid"][:, :K], part_ids=part_ids,
+                use_pallas=(kernel == "pallas"), interpret=interpret)
         return (val, tidw, index), None
 
     slots = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), log)   # (T, P, …)
@@ -125,7 +129,8 @@ def replay_partitioned(val, tidw, log, index=None, part_ids=None):
     return val, tidw, index
 
 
-def replay_index_rounds(index, kinds, delta, iwrite, tids, part_ids=None):
+def replay_index_rounds(index, kinds, delta, iwrite, tids, part_ids=None,
+                        kernel: str = "jnp", interpret=None):
     """Replay the single-master phase's index-maintenance stream.
 
     Within one OCC round committed index ops hold disjoint position locks,
@@ -137,13 +142,16 @@ def replay_index_rounds(index, kinds, delta, iwrite, tids, part_ids=None):
     iwrite: (rounds, B, K) committed-index-op masks; tids: (rounds, B, M).
     part_ids: optional (P,) global partition id per segment row (partial /
     rolled-secondary replica layouts).
+    kernel: "pallas" replays through the fused index-merge kernel.
     """
     K = iwrite.shape[-1]
 
     def step(index, per_round):
         iw, tid_r = per_round
         return apply_index_ops(index, kinds[:, :K], delta[:, :K], iw,
-                               tid_r[:, :K], part_ids=part_ids)[0], None
+                               tid_r[:, :K], part_ids=part_ids,
+                               use_pallas=(kernel == "pallas"),
+                               interpret=interpret)[0], None
 
     index, _ = jax.lax.scan(step, index, (iwrite, tids))
     return index

@@ -114,7 +114,8 @@ def run_single_master(val, tidw, txns, epoch, max_rounds: int = 16,
             iw = iwrite & commit_now[:, None]                           # (B,K)
             index, ov = apply_index_ops(
                 index, kind[:, :K], delta[:, :K], iw,
-                jnp.broadcast_to(new_tid[:, None], (B, K)))
+                jnp.broadcast_to(new_tid[:, None], (B, K)),
+                use_pallas=(kernel == "pallas"), interpret=interpret)
             overflow = overflow + ov
             log["iwrite"] = iw
             # which consume ops a COMMITTED txn skipped this round — the

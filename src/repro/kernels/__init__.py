@@ -8,6 +8,10 @@ tiling), ops.py (jit'd public wrapper, interpret=True off-TPU) and ref.py
                      install over the flat row+index lock space) + the
                      searchsorted/window index probe (SS4.2; ref.py is the
                      exact former inline executor code);
+* index_merge     -- fused sorted-segment index maintenance (delete-compact
+                     + both rank passes + merged scatter in one launch,
+                     tiled over destination slots; ref.py is the exact
+                     former storage/index.py segment_apply body);
 * thomas_merge    -- replication-stream apply under the Thomas write rule
                      (the paper's replica-side hot loop, SS3/SS5);
 * flash_attention -- online-softmax attention; causal / window / encoder /
@@ -16,10 +20,11 @@ tiling), ops.py (jit'd public wrapper, interpret=True off-TPU) and ref.py
 * rmsnorm         -- fused residual-add + RMSNorm epilogue.
 """
 from repro.kernels.flash_attention import ops as flash_attention
+from repro.kernels.index_merge import ops as index_merge
 from repro.kernels.mamba2_ssd import ops as mamba2_ssd
 from repro.kernels.occ import ops as occ
 from repro.kernels.rmsnorm import ops as rmsnorm
 from repro.kernels.thomas_merge import ops as thomas_merge
 
-__all__ = ["flash_attention", "mamba2_ssd", "occ", "rmsnorm",
-           "thomas_merge"]
+__all__ = ["flash_attention", "index_merge", "mamba2_ssd", "occ",
+           "rmsnorm", "thomas_merge"]

@@ -1,0 +1,85 @@
+"""Dispatch + HBM traffic model for the fused index-merge kernel.
+
+``index_merge`` is the batched entry point both executors and replica
+replay reach through ``storage.index.apply_index_ops(use_pallas=...)``:
+it hoists the oracle's per-segment stable insert argsort (Ki log Ki, done
+once in jnp), pads empty op batches with inert SENTINEL columns, and
+launches the fused kernel — or falls back to the vmapped jnp oracle.
+
+``index_merge_bytes`` models the HBM bytes each implementation moves per
+vmapped call so benchmarks/roofline_report.py and benchmarks/kernel_bench.py
+print the traffic claim instead of asserting it.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.index_merge.kernel import index_merge_pallas
+from repro.kernels.occ.ops import resolve_interpret
+from repro.storage.index import SENTINEL
+
+W = 4                                  # int32/uint32 word bytes
+
+
+def index_merge(key, prow, tid, del_pq, ins_pq, prow_pq, tid_pq, *,
+                use_pallas=True, interpret=None, block_slots=None):
+    """Apply one (P, Q) masked delete/insert batch to P sorted segments.
+
+    key/prow/tid: (P, cap).  del_pq/ins_pq: (P, Q) int32 with SENTINEL =
+    masked out; prow_pq/tid_pq the insert payloads (exactly the
+    partition-aligned batches ``apply_index_ops`` builds).  Returns
+    (key', prow', tid', overflow (P,)) — the pallas path is bit-identical
+    to the vmapped jnp oracle (``ref.segment_merge_ref``).
+    """
+    if not use_pallas:
+        from repro.kernels.index_merge.ref import segment_merge_ref
+        return jax.vmap(segment_merge_ref)(key, prow, tid, del_pq, ins_pq,
+                                           prow_pq, tid_pq)
+    interpret = resolve_interpret(interpret)
+    P = key.shape[0]
+    if del_pq.shape[1] == 0:           # inert: SENTINEL dels never hit
+        del_pq = jnp.full((P, 1), SENTINEL, jnp.int32)
+    if ins_pq.shape[1] == 0:           # the oracle's Ki == 0 pad
+        ins_pq = jnp.full((P, 1), SENTINEL, jnp.int32)
+        prow_pq = jnp.zeros((P, 1), prow.dtype)
+        tid_pq = jnp.zeros((P, 1), tid.dtype)
+    # the oracle's per-segment stable argsort, hoisted out of the kernel
+    iorder = jnp.argsort(ins_pq, axis=1)
+    ik = jnp.take_along_axis(ins_pq, iorder, axis=1)
+    ip = jnp.take_along_axis(prow_pq, iorder, axis=1)
+    it = jnp.take_along_axis(tid_pq, iorder, axis=1)
+    return index_merge_pallas(key, prow, tid, del_pq, ik, ip, it,
+                              block_slots=block_slots, interpret=interpret)
+
+
+def _lg(x):
+    return max(1, math.ceil(math.log2(max(int(x), 2))))
+
+
+def index_merge_bytes(P, cap, Q):
+    """Modeled HBM bytes per vmapped merge call: P segments of ``cap``
+    slots, a (P, Q) masked op batch each.  Three generations:
+
+    * ``argsort`` — the original concat + full-segment sort: every batch
+      re-sorts (cap + Q) keys and re-gathers all three payload runs;
+    * ``jnp`` — the current gather-form oracle: segment I/O + two rank
+      passes, two (cap+1,) step-function scatter/cumsums and the (Q, Q)
+      dead-below bool compare it materializes per segment;
+    * ``pallas`` — the fused kernel: the three runs stream in and out
+      once, op batches once; rank passes are VMEM-local binary searches
+      (only the hoisted Ki log Ki insert sort stays in jnp).
+    """
+    seg_io = 6 * cap                   # read + write key/prow/tid runs
+    argsort = P * W * (seg_io + 3 * (cap + Q)
+                       + (cap + Q) * _lg(cap + Q)     # full-segment sort
+                       + Q * _lg(cap))                # delete probes
+    gather = P * (W * (seg_io + 4 * Q                 # masked op batches
+                       + Q * _lg(cap) + Q * _lg(Q)    # rank passes + sort
+                       + 4 * (cap + 1)                # step scatter+cumsum
+                       + 4 * cap)                     # merge-rank gathers
+                  + Q * Q)                            # dead-below bools
+    fused = P * W * (seg_io + 4 * Q + Q * _lg(Q) + 1)
+    return {"argsort": argsort, "jnp": gather, "pallas": fused}

@@ -1,0 +1,98 @@
+"""jnp oracle for the fused index-merge kernel.
+
+``segment_merge_ref`` is the exact former ``storage/index.py:segment_apply``
+body — the gather-form sorted-run merge (delete-scatter + two searchsorted
+rank passes + step-function cumsums) that replaced the original full-segment
+argsort.  It stays the semantic source of truth: the Pallas kernel in
+``kernel.py`` must be bit-identical to it (enforced by the hypothesis suite
+in tests/test_occ_kernels.py), and ``storage.index.segment_apply`` dispatches
+here on the jnp path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.storage.index import SENTINEL
+
+
+def segment_merge_ref(key, prow, tid, del_key, ins_key, ins_prow, ins_tid):
+    """Apply one batch of deletes + inserts to one sorted segment.
+
+    key/prow/tid: (cap,).  del_key: (Kd,) with SENTINEL = masked out.
+    ins_key: (Ki,) with SENTINEL = masked out; ins_prow/ins_tid payloads.
+    Deletes resolve against the *pre-batch* segment; inserts merge after.
+    Returns (key', prow', tid', overflow): the re-sorted canonical segment
+    plus the number of LIVE keys dropped because the merge exceeded ``cap``
+    (largest-key-first).  Overflow is deterministic and identical on master
+    and replica (both apply the same batches), so it never diverges state —
+    but it IS data loss; the engine counts it as ``index_overflow`` and can
+    raise in strict mode (capacity sizing is the caller's responsibility —
+    see IndexSpec).
+    """
+    cap = key.shape[0]
+    Ki = ins_key.shape[0]
+    o32 = jnp.int32
+    # -- deletes: searchsorted position, exact-match test — the hit slots
+    # become holes in the (still untouched, still sorted) existing run
+    pos = jnp.clip(jnp.searchsorted(key, del_key), 0, cap - 1).astype(o32)
+    hit = (key[pos] == del_key) & (del_key != SENTINEL)
+    tgt = jnp.where(hit, pos, cap)                        # (Kd,), cap = miss
+    # dedup: two del ops hitting the same slot make ONE hole
+    tgt_s = jnp.sort(tgt)
+    uniq = jnp.concatenate([tgt_s[:1] < cap,
+                            (tgt_s[1:] != tgt_s[:-1]) & (tgt_s[1:] < cap)])
+    n_dead = jnp.sum(uniq, dtype=o32)
+    # live rank just below each hole: its index minus the holes before it
+    holes_before = jnp.cumsum(uniq) - uniq                # (Kd,) exclusive
+    r_hole = tgt_s - holes_before.astype(o32)
+
+    # -- inserts: sorted-run merge in GATHER form — the old concat + full-
+    # segment argsort is replaced by two step-function cumsums over the
+    # output domain plus gathers; only the Ki incoming keys are sorted.
+    # Output slot o holds the o-th element of merge(live existing, live
+    # incoming): an incoming element when an incoming landed exactly at o,
+    # else the live existing element of rank o − (#incoming before o),
+    # whose original index adds back the holes the deletes punched.
+    if Ki == 0:                                           # delete-only batch
+        ins_key = jnp.full((1,), SENTINEL, jnp.int32)
+        ins_prow = jnp.zeros((1,), prow.dtype)
+        ins_tid = jnp.zeros((1,), tid.dtype)
+        Ki = 1
+    iorder = jnp.argsort(ins_key)                         # Ki log Ki only
+    ik, ip, it = ins_key[iorder], ins_prow[iorder], ins_tid[iorder]
+    ilive = ik != SENTINEL
+    n_ilive = jnp.sum(ilive, dtype=o32)
+    # live-existing count: keys before the first free SENTINEL, minus holes
+    n_live = jnp.searchsorted(key, SENTINEL).astype(o32) - n_dead
+    # merged position of live incoming j: j + #live existing ≤ ik[j]
+    # (side="right" keeps the old stable order: existing first on ties);
+    # dead (hole) slots still carry their old keys, so subtract the holes
+    # sitting below the searchsorted point (small Ki×Kd compare)
+    ss = jnp.searchsorted(key, ik, side="right").astype(o32)
+    dead_below = jnp.sum(uniq[None, :] & (tgt_s[None, :] < ss[:, None]),
+                         axis=1, dtype=o32)
+    pos_i = jnp.arange(Ki, dtype=o32) + ss - dead_below
+    # step function J(o) = #incoming at output slots ≤ o (small scatter of
+    # the Ki positions + one cumsum — pos_i is strictly increasing over
+    # live incoming, so no duplicate live positions)
+    inc_at = jnp.zeros((cap + 1,), o32).at[
+        jnp.where(ilive, jnp.minimum(pos_i, cap), cap)].add(1)[:cap]
+    # step function D(r) = #holes at live rank ≤ r (small scatter + cumsum)
+    d_at = jnp.zeros((cap + 1,), o32).at[
+        jnp.where(uniq, jnp.clip(r_hole, 0, cap - 1), cap)].add(1)[:cap]
+    J, D = jnp.cumsum(jnp.stack([inc_at, d_at]), axis=1)  # one fused pass
+    o = jnp.arange(cap, dtype=o32)
+    is_inc = inc_at > 0
+    j_excl = J - inc_at                                   # #incoming < o
+    r = o - j_excl                                        # live-exist rank
+    i_src = jnp.clip(r + D[jnp.clip(r, 0, cap - 1)], 0, cap - 1)
+    jidx = jnp.clip(j_excl, 0, max(Ki - 1, 0))
+    n_merged = n_live + n_ilive
+    valid = o < n_merged
+    k2 = jnp.where(valid, jnp.where(is_inc, ik[jidx], key[i_src]), SENTINEL)
+    live = k2 != SENTINEL                                 # canonical free
+    p2 = jnp.where(live, jnp.where(is_inc, ip[jidx], prow[i_src]), 0)
+    t2 = jnp.where(live, jnp.where(is_inc, it[jidx], tid[i_src]),
+                   jnp.uint32(0))
+    overflow = jnp.maximum(n_merged - cap, 0).astype(o32)
+    return k2, p2, t2, overflow

@@ -145,6 +145,20 @@ class StorageEngine:
         self.tid = self.tid.reshape(-1).at[flat].set(
             jnp.asarray(tids).reshape(-1)).reshape(self.P, self.R)
 
+    # -- batched index maintenance ---------------------------------------
+    def apply_index_batch(self, kinds, delta, win, tids, part_ids=None,
+                          use_pallas: bool = False, interpret=None):
+        """Apply one committed index-op batch to every index (the same
+        ``storage.index.apply_index_ops`` the executors and replica replay
+        run).  ``use_pallas`` routes the segment merges through the fused
+        Pallas index-merge kernel — bit-identical arrays either way.
+        Returns the overflow count (live keys dropped by full segments)."""
+        from repro.storage.index import apply_index_ops
+        self.indexes, overflow = apply_index_ops(
+            self.indexes, kinds, delta, win, tids, part_ids=part_ids,
+            use_pallas=use_pallas, interpret=interpret)
+        return overflow
+
     # -- range scan over one index segment ------------------------------
     def index_id(self, name: str) -> int:
         for i, s in enumerate(self.index_specs):

@@ -69,7 +69,8 @@ def key_partition(key):
 # ---------------------------------------------------------------------------
 # one-segment primitives (vmap over partitions / ops at the call sites)
 # ---------------------------------------------------------------------------
-def segment_apply(key, prow, tid, del_key, ins_key, ins_prow, ins_tid):
+def segment_apply(key, prow, tid, del_key, ins_key, ins_prow, ins_tid,
+                  use_pallas=False, interpret=None):
     """Apply one batch of deletes + inserts to one sorted segment.
 
     key/prow/tid: (cap,).  del_key: (Kd,) with SENTINEL = masked out.
@@ -82,74 +83,22 @@ def segment_apply(key, prow, tid, del_key, ins_key, ins_prow, ins_tid):
     but it IS data loss; the engine counts it as ``index_overflow`` and can
     raise in strict mode (capacity sizing is the caller's responsibility —
     see IndexSpec).
-    """
-    cap = key.shape[0]
-    Ki = ins_key.shape[0]
-    o32 = jnp.int32
-    # -- deletes: searchsorted position, exact-match test — the hit slots
-    # become holes in the (still untouched, still sorted) existing run
-    pos = jnp.clip(jnp.searchsorted(key, del_key), 0, cap - 1).astype(o32)
-    hit = (key[pos] == del_key) & (del_key != SENTINEL)
-    tgt = jnp.where(hit, pos, cap)                        # (Kd,), cap = miss
-    # dedup: two del ops hitting the same slot make ONE hole
-    tgt_s = jnp.sort(tgt)
-    uniq = jnp.concatenate([tgt_s[:1] < cap,
-                            (tgt_s[1:] != tgt_s[:-1]) & (tgt_s[1:] < cap)])
-    n_dead = jnp.sum(uniq, dtype=o32)
-    # live rank just below each hole: its index minus the holes before it
-    holes_before = jnp.cumsum(uniq) - uniq                # (Kd,) exclusive
-    r_hole = tgt_s - holes_before.astype(o32)
 
-    # -- inserts: sorted-run merge in GATHER form — the old concat + full-
-    # segment argsort is replaced by two step-function cumsums over the
-    # output domain plus gathers; only the Ki incoming keys are sorted.
-    # Output slot o holds the o-th element of merge(live existing, live
-    # incoming): an incoming element when an incoming landed exactly at o,
-    # else the live existing element of rank o − (#incoming before o),
-    # whose original index adds back the holes the deletes punched.
-    if Ki == 0:                                           # delete-only batch
-        ins_key = jnp.full((1,), SENTINEL, jnp.int32)
-        ins_prow = jnp.zeros((1,), prow.dtype)
-        ins_tid = jnp.zeros((1,), tid.dtype)
-        Ki = 1
-    iorder = jnp.argsort(ins_key)                         # Ki log Ki only
-    ik, ip, it = ins_key[iorder], ins_prow[iorder], ins_tid[iorder]
-    ilive = ik != SENTINEL
-    n_ilive = jnp.sum(ilive, dtype=o32)
-    # live-existing count: keys before the first free SENTINEL, minus holes
-    n_live = jnp.searchsorted(key, SENTINEL).astype(o32) - n_dead
-    # merged position of live incoming j: j + #live existing ≤ ik[j]
-    # (side="right" keeps the old stable order: existing first on ties);
-    # dead (hole) slots still carry their old keys, so subtract the holes
-    # sitting below the searchsorted point (small Ki×Kd compare)
-    ss = jnp.searchsorted(key, ik, side="right").astype(o32)
-    dead_below = jnp.sum(uniq[None, :] & (tgt_s[None, :] < ss[:, None]),
-                         axis=1, dtype=o32)
-    pos_i = jnp.arange(Ki, dtype=o32) + ss - dead_below
-    # step function J(o) = #incoming at output slots ≤ o (small scatter of
-    # the Ki positions + one cumsum — pos_i is strictly increasing over
-    # live incoming, so no duplicate live positions)
-    inc_at = jnp.zeros((cap + 1,), o32).at[
-        jnp.where(ilive, jnp.minimum(pos_i, cap), cap)].add(1)[:cap]
-    # step function D(r) = #holes at live rank ≤ r (small scatter + cumsum)
-    d_at = jnp.zeros((cap + 1,), o32).at[
-        jnp.where(uniq, jnp.clip(r_hole, 0, cap - 1), cap)].add(1)[:cap]
-    J, D = jnp.cumsum(jnp.stack([inc_at, d_at]), axis=1)  # one fused pass
-    o = jnp.arange(cap, dtype=o32)
-    is_inc = inc_at > 0
-    j_excl = J - inc_at                                   # #incoming < o
-    r = o - j_excl                                        # live-exist rank
-    i_src = jnp.clip(r + D[jnp.clip(r, 0, cap - 1)], 0, cap - 1)
-    jidx = jnp.clip(j_excl, 0, max(Ki - 1, 0))
-    n_merged = n_live + n_ilive
-    valid = o < n_merged
-    k2 = jnp.where(valid, jnp.where(is_inc, ik[jidx], key[i_src]), SENTINEL)
-    live = k2 != SENTINEL                                 # canonical free
-    p2 = jnp.where(live, jnp.where(is_inc, ip[jidx], prow[i_src]), 0)
-    t2 = jnp.where(live, jnp.where(is_inc, it[jidx], tid[i_src]),
-                   jnp.uint32(0))
-    overflow = jnp.maximum(n_merged - cap, 0).astype(o32)
-    return k2, p2, t2, overflow
+    ``use_pallas`` dispatches to the fused index-merge kernel
+    (repro.kernels.index_merge, interpreted off-TPU) — one launch fusing
+    the delete-compact, both rank passes and the merged scatter; results
+    are bit-identical to the jnp oracle (``ref.segment_merge_ref``, the
+    exact former body of this function).
+    """
+    if use_pallas:
+        from repro.kernels.index_merge.ops import index_merge
+        k2, p2, t2, ov = index_merge(
+            key[None], prow[None], tid[None], del_key[None], ins_key[None],
+            ins_prow[None], ins_tid[None], interpret=interpret)
+        return k2[0], p2[0], t2[0], ov[0]
+    from repro.kernels.index_merge.ref import segment_merge_ref
+    return segment_merge_ref(key, prow, tid, del_key, ins_key, ins_prow,
+                             ins_tid)
 
 
 def segment_scan(key, lo, hi, n_slots: int = SCAN_L + 1, use_pallas=False,
@@ -194,7 +143,8 @@ def segment_scan(key, lo, hi, n_slots: int = SCAN_L + 1, use_pallas=False,
 # ---------------------------------------------------------------------------
 # batched maintenance shared by executors and replica replay
 # ---------------------------------------------------------------------------
-def apply_index_ops(indexes, kinds, delta, win, tids, part_ids=None):
+def apply_index_ops(indexes, kinds, delta, win, tids, part_ids=None,
+                    use_pallas=False, interpret=None):
     """Apply one batch of committed index-maintenance ops to every index.
 
     indexes: list of {"key","prow","tid"} (P, cap_i) pytrees.
@@ -210,6 +160,12 @@ def apply_index_ops(indexes, kinds, delta, win, tids, part_ids=None):
     Returns (indexes', overflow) where ``overflow`` (int32 scalar) counts
     live keys dropped by capacity-exceeding merges across all segments —
     deterministic and replica-identical, surfaced as ``index_overflow``.
+
+    ``use_pallas`` routes every segment merge through the fused Pallas
+    index-merge kernel (one launch per index covering all P segments)
+    instead of the vmapped jnp oracle — bit-identical outputs; the
+    executors and replica replay pass ``kernel == "pallas"`` down here so
+    master and replicas run the same code path.
 
     The SAME function runs in the executors' install phase and in replica
     replay, so both sides evolve bit-equal index arrays from the same
@@ -245,9 +201,15 @@ def apply_index_ops(indexes, kinds, delta, win, tids, part_ids=None):
         ins_pq = jnp.where(mine, ins_key[None, :], SENTINEL)
         prow_pq = jnp.where(mine, ins_prow[None, :], 0)
         tid_pq = jnp.where(mine, ins_tid[None, :], jnp.uint32(0))
-        k, p, t, ov = jax.vmap(segment_apply)(
-            idx["key"], idx["prow"], idx["tid"], del_pq, ins_pq, prow_pq,
-            tid_pq)
+        if use_pallas:
+            from repro.kernels.index_merge.ops import index_merge
+            k, p, t, ov = index_merge(
+                idx["key"], idx["prow"], idx["tid"], del_pq, ins_pq,
+                prow_pq, tid_pq, interpret=interpret)
+        else:
+            k, p, t, ov = jax.vmap(segment_apply)(
+                idx["key"], idx["prow"], idx["tid"], del_pq, ins_pq,
+                prow_pq, tid_pq)
         overflow = overflow + jnp.sum(ov)
         out.append({"key": k, "prow": p, "tid": t})
     return out, overflow

@@ -234,3 +234,180 @@ def test_storage_engine_range_scan_pallas():
                        use_pallas=True)
     assert _tree_equal(tuple(a), tuple(b))
     assert bool(b[3][0]) and int(b[0][0]) == ((1 << 24) | 7)
+
+
+# ---------------------------------------------------------------------------
+# fused index-merge kernel vs the gather-form oracle
+# ---------------------------------------------------------------------------
+def _random_merge_batch(rng, P, cap, Kd, Ki, key_space=10_000):
+    """Random sorted segments (SENTINEL-padded, canonical free slots) plus a
+    random delete/insert batch — deletes mix live hits with misses, inserts
+    mix fresh keys with masked (SENTINEL) slots."""
+    key = np.full((P, cap), SENTINEL, np.int32)
+    for p in range(P):
+        n_live = int(rng.integers(0, cap + 1))
+        key[p, :n_live] = np.sort(
+            rng.choice(key_space, n_live, replace=False)).astype(np.int32)
+    live = key != SENTINEL
+    prow = np.where(live, rng.integers(0, 1000, (P, cap)), 0).astype(np.int32)
+    tid = np.where(live, rng.integers(1, 99, (P, cap)), 0).astype(np.uint32)
+
+    del_pq = np.full((P, Kd), SENTINEL, np.int32)
+    for p in range(P):
+        for j in range(Kd):
+            r = rng.random()
+            if r < 0.4 and live[p].any():
+                del_pq[p, j] = rng.choice(key[p][live[p]])   # live hit
+            elif r < 0.7:
+                del_pq[p, j] = int(rng.integers(0, key_space))  # maybe miss
+    ins_pq = np.full((P, Ki), SENTINEL, np.int32)
+    mask = rng.random((P, Ki)) < 0.8
+    ins_pq[mask] = rng.integers(0, key_space, int(mask.sum()))
+    prow_pq = np.where(ins_pq != SENTINEL,
+                       rng.integers(0, 1000, (P, Ki)), 0).astype(np.int32)
+    tid_pq = np.where(ins_pq != SENTINEL,
+                      rng.integers(1, 99, (P, Ki)), 0).astype(np.uint32)
+    return tuple(jnp.asarray(a) for a in
+                 (key, prow, tid, del_pq, ins_pq.astype(np.int32),
+                  prow_pq, tid_pq))
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=15, deadline=None)
+def test_index_merge_pallas_parity_random(seed):
+    """Fused kernel == gather-form oracle bit-exact: keys, prows, TIDs and
+    overflow counts — overflow (dropped live keys) and empty segments
+    arise by construction from small caps + dense inserts."""
+    from repro.kernels.index_merge.ops import index_merge
+    from repro.kernels.index_merge.ref import segment_merge_ref
+    rng = np.random.default_rng(seed)
+    P = int(rng.integers(1, 4))
+    cap = int(rng.integers(2, 32))
+    Kd = int(rng.integers(1, 8))
+    Ki = int(rng.integers(1, 8))
+    batch = _random_merge_batch(rng, P, cap, Kd, Ki, key_space=60)
+    ref = jax.vmap(segment_merge_ref)(*batch)
+    for kwargs in ({"use_pallas": False},
+                   {"use_pallas": True},
+                   {"use_pallas": True, "block_slots": 8}):  # multi-tile
+        out = index_merge(*batch, **kwargs)
+        assert _tree_equal(tuple(ref), tuple(out)), kwargs
+
+
+def test_index_merge_edge_cases():
+    """Deterministic corners: overflow dropping live keys, the all-SENTINEL
+    segment, delete-only and insert-only batches."""
+    from repro.kernels.index_merge.ops import index_merge
+    from repro.kernels.index_merge.ref import segment_merge_ref
+    cap = 6
+    # full segment + 4 inserts -> overflow 4, tail live keys dropped
+    key = jnp.asarray([[10, 20, 30, 40, 50, 60]], jnp.int32)
+    prow = jnp.arange(6, dtype=jnp.int32)[None]
+    tid = jnp.arange(1, 7, dtype=jnp.uint32)[None]
+    dels = jnp.full((1, 2), SENTINEL, jnp.int32)
+    ins = jnp.asarray([[5, 15, 25, 35]], jnp.int32)
+    ipr = jnp.asarray([[9, 9, 9, 9]], jnp.int32)
+    itd = jnp.asarray([[7, 7, 7, 7]], jnp.uint32)
+    ref = jax.vmap(segment_merge_ref)(key, prow, tid, dels, ins, ipr, itd)
+    out = index_merge(key, prow, tid, dels, ins, ipr, itd, use_pallas=True)
+    assert _tree_equal(tuple(ref), tuple(out))
+    assert int(out[3][0]) == 4
+
+    # all-SENTINEL segment: inserts land from slot 0
+    empty = jnp.full((1, cap), SENTINEL, jnp.int32)
+    z = jnp.zeros((1, cap), jnp.int32)
+    zt = jnp.zeros((1, cap), jnp.uint32)
+    ref = jax.vmap(segment_merge_ref)(empty, z, zt, dels, ins, ipr, itd)
+    out = index_merge(empty, z, zt, dels, ins, ipr, itd, use_pallas=True)
+    assert _tree_equal(tuple(ref), tuple(out))
+    assert int(out[0][0, 0]) == 5 and int(out[3][0]) == 0
+
+    # delete-only (Ki == 0 pad path) and insert-only (Kd == 0 pad path)
+    d2 = jnp.asarray([[20, 40]], jnp.int32)
+    e_i = jnp.zeros((1, 0), jnp.int32)
+    out = index_merge(key, prow, tid, d2, e_i, e_i, e_i.astype(jnp.uint32),
+                      use_pallas=True)
+    ref = jax.vmap(segment_merge_ref)(
+        key, prow, tid, d2, jnp.full((1, 1), SENTINEL, jnp.int32),
+        jnp.zeros((1, 1), jnp.int32), jnp.zeros((1, 1), jnp.uint32))
+    assert _tree_equal(tuple(ref), tuple(out))
+    e_d = jnp.zeros((1, 0), jnp.int32)
+    out = index_merge(key, prow, tid, e_d, ins, ipr, itd, use_pallas=True)
+    ref = jax.vmap(segment_merge_ref)(
+        key, prow, tid, jnp.full((1, 1), SENTINEL, jnp.int32), ins, ipr, itd)
+    assert _tree_equal(tuple(ref), tuple(out))
+
+
+def test_index_merge_vmapped_tpcc_scale():
+    """A TPC-C-sized segment batch (cap=11520) under jax.vmap over the
+    pallas dispatch — the shape the ORDER-LINE index replays at."""
+    from repro.kernels.index_merge.ops import index_merge
+    from repro.kernels.index_merge.ref import segment_merge_ref
+    rng = np.random.default_rng(7)
+    P, cap, Kd, Ki = 4, 11520, 16, 16
+    batches = [_random_merge_batch(rng, P, cap, Kd, Ki, key_space=50_000)
+               for _ in range(2)]
+    stacked = tuple(jnp.stack([b[i] for b in batches]) for i in range(7))
+    ref = jax.vmap(lambda *a: jax.vmap(segment_merge_ref)(*a))(*stacked)
+    out = jax.vmap(lambda *a: index_merge(*a, use_pallas=True))(*stacked)
+    assert _tree_equal(tuple(ref), tuple(out))
+
+
+# ---------------------------------------------------------------------------
+# tiled OCC grids: forced multi-tile blocks == auto single-tile == oracle
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 100_000))
+@settings(max_examples=8, deadline=None)
+def test_occ_round_tiled_grid_parity(seed):
+    """The 3-launch pipeline with forced small blocks (multi-tile lock,
+    lane and row grids, with padding remainders) matches the auto
+    single-tile blocks bit-for-bit, Silo and deterministic modes both."""
+    from repro.kernels.occ.kernel import occ_round_pallas
+    rng = np.random.default_rng(seed)
+    N, B, Mm = 37, 11, 4
+    val = jnp.asarray(rng.integers(0, 100, (N, C)), jnp.int32)
+    tidw = jnp.asarray(rng.integers(0, 50, (N,)), jnp.uint32)
+    rows = jnp.asarray(
+        np.stack([rng.choice(N, Mm, replace=False) for _ in range(B)]),
+        jnp.int32)
+    kind = jnp.asarray(rng.integers(0, 4, (B, Mm)), jnp.int32)
+    delta = jnp.asarray(rng.integers(-3, 3, (B, Mm, C)), jnp.int32)
+    wmask = jnp.asarray(rng.random((B, Mm)) < 0.5)
+    amask = wmask | jnp.asarray(rng.random((B, Mm)) < 0.5)
+    active = jnp.asarray(rng.random((B,)) < 0.8)
+    epoch_arr = jnp.asarray([3], jnp.uint32)
+    last_tid = jnp.asarray(rng.integers(0, 50, (B,)), jnp.uint32)
+    K, L1, S = 3, 4, 20
+    NT = N + S
+    ix = (jnp.asarray(rng.integers(N, NT, (B, K)), jnp.int32),
+          jnp.asarray(rng.integers(0, 50, (B, K)), jnp.uint32),
+          jnp.asarray(rng.integers(N, NT + 1, (B, K, L1)), jnp.int32),
+          jnp.asarray(rng.integers(0, 50, (B, K, L1)), jnp.uint32),
+          jnp.asarray(rng.random((B, K, L1)) < 0.5),
+          jnp.asarray(rng.random((B, K)) < 0.5))
+    args = (val, tidw, rows, kind, delta, wmask, amask, active, epoch_arr,
+            last_tid)
+    for det in (False, True):
+        for ixa, nt in ((None, N), (ix, NT)):
+            base = occ_round_pallas(*args, ixa, NT=nt, deterministic=det)
+            tiled = occ_round_pallas(*args, ixa, NT=nt, deterministic=det,
+                                     block_nt=8, block_b=4, block_rows=16)
+            assert all(bool(jnp.array_equal(a, b))
+                       for a, b in zip(base, tiled)), (det, nt)
+
+
+def test_scan_window_block_q_parity():
+    """Query-block grid (scalar-prefetched probe streams) with a padded
+    remainder block matches the single-tile launch."""
+    from repro.kernels.occ.kernel import scan_window_pallas
+    rng = np.random.default_rng(3)
+    S, Q = 64, 13
+    fk = jnp.sort(jnp.asarray(rng.integers(0, 1000, (S,)), jnp.int32))
+    ft = jnp.asarray(rng.integers(0, 50, (S,)), jnp.uint32)
+    q = jnp.asarray(rng.integers(0, 1000, (Q,)), jnp.int32)
+    sb = jnp.zeros((Q,), jnp.int32)
+    sc = jnp.full((Q,), S, jnp.int32)
+    a = scan_window_pallas(fk, ft, q, sb, sc, n_slots=3, n_iters=7)
+    b = scan_window_pallas(fk, ft, q, sb, sc, n_slots=3, n_iters=7,
+                           block_q=4)
+    assert _tree_equal(tuple(a), tuple(b))
