@@ -1,0 +1,13 @@
+"""changelog: the one ordered op stream + its subscribers (CDC for STAR).
+
+``ChangeLog`` owns the epoch/slab-structured record + index op stream
+both engines publish; every consumer — full-replica replay, secondary
+roll-ship, WAL durability, snapshot-catalog stamping, fence byte
+attribution, and the HTAP materialized views — is a ``Subscriber``.
+"""
+from repro.changelog.log import Attribution, ChangeLog
+from repro.changelog.views import MaterializedViews, VIEW_COLS
+from repro.changelog.analytics import AnalyticsLane
+
+__all__ = ["Attribution", "ChangeLog", "MaterializedViews", "VIEW_COLS",
+           "AnalyticsLane"]

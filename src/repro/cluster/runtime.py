@@ -87,6 +87,26 @@ class ClusterRuntime:
                               np.asarray(self.eng.part_tid),
                               indexes=self.eng.part_idx
                               if self.eng.has_index else None)
+            # the WAL is a changelog subscriber: at every commit fence the
+            # sink fans the epoch's streams to the per-node logs and
+            # flushes (the disk part of the group commit), checkpointing
+            # the committed snapshot on cadence
+            self.eng.changelog.subscribe(walmod.WalSink(
+                durability, self.eng.R, self.eng.C,
+                np.arange(self.eng.P) // self.eng.ppn,
+                self._committed_snapshot))
+
+    def _committed_snapshot(self):
+        """(val, tid, indexes) of the committed partition set, as host
+        arrays — the WAL sink's checkpoint source."""
+        eng = self.eng
+        snap = eng._snap
+        idx = None
+        if eng.has_index:
+            idx = [{k: np.asarray(ix[k]) for k in ("key", "prow", "tid")}
+                   for ix in snap["part_idx"]]
+        return (np.asarray(snap["part_val"]), np.asarray(snap["part_tid"]),
+                idx)
 
     # -- StarEngine-compatible surface ----------------------------------
     @property
@@ -121,6 +141,13 @@ class ClusterRuntime:
     def committed_epoch(self):
         return self.eng.committed_epoch
 
+    @property
+    def changelog(self):
+        return self.eng.changelog
+
+    def committed_state(self):
+        return self.eng.committed_state()
+
     def read_views(self):
         return self.eng.read_views()
 
@@ -134,9 +161,7 @@ class ClusterRuntime:
         kills = (self.injector.poll(self.epoch)
                  if self.injector is not None else set())
         if not kills:
-            m = self.eng.run_epoch(batch, ingest=ingest)
-            self._commit_durable()
-            return m
+            return self.eng.run_epoch(batch, ingest=ingest)
         # ---- failure epoch: the phases run, the fence detects the miss —
         # nothing commits, the doomed wall time is real lost work.  A
         # mid-stream kill aborts the phase at the killed slab: a PREFIX of
@@ -163,10 +188,9 @@ class ClusterRuntime:
         self.coordinator.recovered(event, set(kills))
         self.injector.revive(kills)
         # ---- resume: re-execute the reverted epoch (ingest already ran);
-        # the slab high-watermark was reset by the revert, so the stream
-        # re-ships from slab 0 onto the reverted base — exactly once
+        # the changelog's watermark was reset by the revert, so the stream
+        # re-publishes from slab 0 onto the reverted base — exactly once
         m = self.eng.run_epoch(batch)
-        self._commit_durable()
         m["recovery"] = event
         return m
 
@@ -224,25 +248,3 @@ class ClusterRuntime:
             reloaded_from_disk=reloaded,
             restored_from_secondary=from_secondary,
             slabs_discarded=hwm_before)
-
-    # ------------------------------------------------------------------
-    def _commit_durable(self):
-        """Append the committed epoch's streams to the per-node WALs and
-        flush (the disk part of the group commit); checkpoint on cadence
-        (index segments ride along for index-bearing workloads)."""
-        if self.durability is None:
-            return
-        d, eng = self.durability, self.eng
-        logs = eng._last_logs or {}
-        d.log_epoch_streams(logs.get("part"), logs.get("sm"), eng.R, eng.C,
-                            np.arange(eng.P) // eng.ppn,
-                            cross_kinds=logs.get("cross_kinds"),
-                            cross_delta=logs.get("cross_delta"))
-        snap = eng._snap
-        idx = None
-        if eng.has_index:
-            idx = [{k: np.asarray(ix[k]) for k in ("key", "prow", "tid")}
-                   for ix in snap["part_idx"]]
-        d.commit_epoch(eng.epoch - 1, np.asarray(snap["part_val"]),
-                       np.asarray(snap["part_tid"]), indexes=idx)
-        eng._last_logs = None

@@ -31,14 +31,15 @@ class ClusterTxnService(TxnService):
     def __init__(self, runtime: ClusterRuntime, clients: list,
                  admission_cfg: AdmissionConfig | None = None,
                  slots_per_partition: int = 64, master_lanes: int = 64,
-                 max_ops: int | None = None, feedback=None, read_tier=None):
+                 max_ops: int | None = None, feedback=None, read_tier=None,
+                 analytics=None):
         self.node_of_partition = np.arange(runtime.P) // runtime.topology.ppn
         super().__init__(runtime, clients, admission_cfg,
                          slots_per_partition=slots_per_partition,
                          master_lanes=master_lanes, max_ops=max_ops,
                          feedback=feedback,
                          node_of_partition=self.node_of_partition,
-                         read_tier=read_tier)
+                         read_tier=read_tier, analytics=analytics)
         self.runtime = runtime
         N = runtime.n_nodes
         self.node_depth_max = np.zeros(N, np.int64)

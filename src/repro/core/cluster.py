@@ -60,6 +60,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.baselines.cost_model import Network
+from repro.changelog.log import ChangeLog
 from repro.compat import shard_map
 from repro.core import replication as repl
 from repro.core.engine import EngineStats
@@ -81,6 +82,57 @@ def _pad_pow2(tree, axis: int):
         widths[axis] = (0, target - n)
         return np.pad(np.asarray(a), widths)
     return jax.tree.map(pad, tree)
+
+
+class _ReplicaShip:
+    """ChangeLog subscriber doing the physical replica shipping: each
+    published slab device-transfers to the master's device (the §5
+    network ship) and replays in order on the full replica, then — rolled
+    home-major — onto the physical secondary homes; the single-master
+    stream scatters back to the partition owners and secondary homes
+    under the Thomas write rule, index rounds replaying on every partial
+    copy.  Fires while the NEXT slab executes, so the fence only ever
+    waits on the tail."""
+
+    def __init__(self, eng):
+        self.eng = eng
+
+    def on_slab(self, log, info):
+        eng = self.eng
+        log_m = jax.device_put(log, eng._master_dev)
+        eng.full_val, eng.full_tid, fidx = eng._replay_full(
+            eng.full_val, eng.full_tid, log_m, eng.full_idx)
+        if eng.has_index:
+            eng.full_idx = fidx
+        if eng.secondary:
+            eng.sec_val, eng.sec_tid, sidx = eng._replay_sec(
+                eng.sec_val, eng.sec_tid, log, eng.sec_idx)
+            if eng.has_index:
+                eng.sec_idx = sidx
+
+    def on_master(self, stream):
+        eng = self.eng
+        slog = stream["log"]
+        w = slog["write"].reshape(-1)
+        rows = jax.device_put(
+            jnp.where(w, slog["row"].reshape(-1), -1), eng._bcast)
+        vals = jax.device_put(slog["val"].reshape(-1, eng.C), eng._bcast)
+        tids = jax.device_put(slog["tid"].reshape(-1), eng._bcast)
+        eng.part_val, eng.part_tid = eng._scatter(
+            eng.part_val, eng.part_tid, rows, vals, tids)
+        if eng.secondary:
+            eng.sec_val, eng.sec_tid = eng._scatter_sec(
+                eng.sec_val, eng.sec_tid, rows, vals, tids)
+        if eng.has_index:
+            kb = jax.device_put(stream["kinds"], eng._bcast)
+            db = jax.device_put(stream["delta"], eng._bcast)
+            iwb = jax.device_put(slog["iwrite"], eng._bcast)
+            tdb = jax.device_put(slog["tid"], eng._bcast)
+            eng.part_idx = eng._sm_idx_replay(eng.part_idx, kb, db,
+                                              iwb, tdb)
+            if eng.secondary:
+                eng.sec_idx = eng._sm_idx_replay_sec(eng.sec_idx, kb, db,
+                                                     iwb, tdb)
 
 
 class ClusterStarEngine:
@@ -170,15 +222,17 @@ class ClusterStarEngine:
         # fence wait (the slowest node sets the fence; everyone else waits)
         self.node_committed = np.zeros(self.n_nodes, np.int64)
         self.node_fence_wait_s = np.zeros(self.n_nodes)
-        self._last_logs = None        # {"part","sm","cross_*"} for WALs
-        # slab high-watermark: stream slabs of the IN-FLIGHT epoch already
-        # consumed by the replicas; snapshot_commit retires them into the
-        # committed ledger (a bounded telemetry window — tests assert
-        # exactly-once application from it), revert_to_snapshot discards
-        # them — the §4.5 revert path's exactly-once guarantee for
-        # re-executed epochs
-        self._slab_hwm = 0
-        self.slab_ledger: list[tuple[int, int]] = []   # committed (ep, s)
+        # the one ordered op stream: the engine PUBLISHES (slabs, master
+        # stream, commit/revert) and every consumer subscribes — the
+        # physical replica shipper first (stream order), then any sink
+        # (WAL, materialized views) the runtime/service registers.  The
+        # changelog owns the slab high-watermark (in-flight slabs the
+        # subscribers consumed; a §4.5 revert discards them so a
+        # re-executed epoch applies each slab exactly once) and the
+        # committed slab ledger (bounded, explicit drop-oldest — tests
+        # assert exactly-once application from it)
+        self.changelog = ChangeLog(n_slabs, ledger_cap=self.LEDGER_CAP)
+        self.changelog.subscribe(_ReplicaShip(self))
         # read-tier watermark: the fence epoch the committed snapshot
         # (``_snap``) corresponds to — 0 until the first commit
         self.committed_epoch = 0
@@ -321,27 +375,24 @@ class ClusterStarEngine:
                 out_specs=idx_spec))
 
     # ------------------------------------------------------------------
-    def _ship_slab(self, log):
-        """Ship one committed slab of the partitioned op stream: device
-        transfer to the master's device (the §5 network ship) + ordered
-        replay on the full replica, and the rolled replay onto the
-        secondary homes.  Runs while the NEXT slab executes — the fence
-        only ever waits on the tail."""
-        log_m = jax.device_put(log, self._master_dev)
-        self.full_val, self.full_tid, fidx = self._replay_full(
-            self.full_val, self.full_tid, log_m, self.full_idx)
-        if self.has_index:
-            self.full_idx = fidx
-        if self.secondary:
-            self.sec_val, self.sec_tid, sidx = self._replay_sec(
-                self.sec_val, self.sec_tid, log, self.sec_idx)
-            if self.has_index:
-                self.sec_idx = sidx
-        self._slab_hwm += 1
+    @property
+    def _slab_hwm(self) -> int:
+        """In-flight slabs the subscribers already consumed (changelog
+        high-watermark; kept as a property for the runtime/tests)."""
+        return self.changelog.slab_hwm
+
+    @property
+    def slab_ledger(self) -> list:
+        """Committed (epoch, slab) ledger — owned by the changelog."""
+        return self.changelog.ledger
+
+    def committed_state(self):
+        """(val, tid) of the committed full-replica snapshot — the seed
+        state changelog subscribers (MVs, analytics) reset from."""
+        return self._snap["full_val"], self._snap["full_tid"]
 
     def _slab_bounds(self, T: int):
-        S = max(1, min(self.n_slabs, T))
-        return [T * s // S for s in range(S + 1)]
+        return self.changelog.slab_bounds(T)
 
     # ------------------------------------------------------------------
     def run_epoch(self, batch, ingest=None, commit=True,
@@ -383,7 +434,7 @@ class ClusterStarEngine:
                 pv, pt, pidx, seq, slab, epoch_u)
             if s > 0:
                 # previous slab's stream ships while THIS slab executes
-                self._ship_slab(slab_logs[s - 1])
+                self.changelog.publish_slab(slab_logs[s - 1], self.epoch)
             slab_logs.append(log)
             committed_chunks.append(comm)
             counts = extras if counts is None else counts + extras
@@ -409,20 +460,19 @@ class ClusterStarEngine:
                     "slabs_consumed": self._slab_hwm}
 
         # ---- tail ship: the ONLY stream transfer the fence waits on -----
-        self._ship_slab(slab_logs[-1])
-        plog = (slab_logs[0] if S == 1 else
-                jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
-                             *slab_logs))
+        self.changelog.publish_slab(slab_logs[-1], self.epoch)
+        plog = self.changelog.epoch_plog()
         p_committed = (committed_chunks[0] if S == 1 else
                        jnp.concatenate(committed_chunks, axis=1))
 
-        # ---- stream byte attribution (overlapped vs fence-exposed) ------
+        # ---- stream byte attribution (the changelog's single source) ----
         vb = 0
-        vb_alt, slab_bytes, ib = repl.epoch_stream_bytes(
-            batch, plog, self.has_index, self.n_slabs,
-            lambda a: _pad_pow2(a, 1))
-        ob = sum(slab_bytes)
-        ob_head, ob_tail = repl.split_overlapped(slab_bytes)
+        attr = self.changelog.attribute(batch, plog, self.has_index,
+                                        lambda a: _pad_pow2(a, 1))
+        vb_alt, slab_bytes, ib = (attr.value_bytes_alt, attr.slab_bytes,
+                                  attr.index_op_bytes)
+        ob = attr.total
+        ob_head, ob_tail = attr.overlapped, attr.fence
 
         # ---- fence 1 (commit-statistics psum barrier) --------------------
         tf0 = time.perf_counter()
@@ -454,31 +504,14 @@ class ClusterStarEngine:
             self.full_tid = ft.reshape(self.P, self.R)
             if self.has_index:
                 self.full_idx = out["index"]
-            # value-replicate the master's writes back to partition owners
-            # and secondary homes (the device_put broadcast is the
-            # value-stream ship, §5)
+            # publish the master stream: the subscriber value-replicates
+            # the writes back to partition owners and secondary homes (the
+            # device_put broadcast is the value-stream ship, §5) and
+            # replays the index-op rounds on every partial copy
             slog = out["log"]
-            w = slog["write"].reshape(-1)
-            rows = jax.device_put(
-                jnp.where(w, slog["row"].reshape(-1), -1), self._bcast)
-            vals = jax.device_put(slog["val"].reshape(-1, self.C),
-                                  self._bcast)
-            tids = jax.device_put(slog["tid"].reshape(-1), self._bcast)
-            self.part_val, self.part_tid = self._scatter(
-                self.part_val, self.part_tid, rows, vals, tids)
-            if self.secondary:
-                self.sec_val, self.sec_tid = self._scatter_sec(
-                    self.sec_val, self.sec_tid, rows, vals, tids)
+            self.changelog.publish_master(slog, kinds=cross["kind"],
+                                          delta=cross["delta"])
             if self.has_index:
-                kb = jax.device_put(cross["kind"], self._bcast)
-                db = jax.device_put(cross["delta"], self._bcast)
-                iwb = jax.device_put(slog["iwrite"], self._bcast)
-                tdb = jax.device_put(slog["tid"], self._bcast)
-                self.part_idx = self._sm_idx_replay(self.part_idx, kb, db,
-                                                    iwb, tdb)
-                if self.secondary:
-                    self.sec_idx = self._sm_idx_replay_sec(
-                        self.sec_idx, kb, db, iwb, tdb)
                 ib_sm = repl.index_op_bytes(slog["iwrite"])
             if "c_row_bytes" in batch:
                 cw = np.asarray(slog["write"])
@@ -525,11 +558,6 @@ class ClusterStarEngine:
         if commit:
             self.snapshot_commit()
             self.epoch += 1
-            self._last_logs = {"part": plog, "sm": slog,
-                               "cross_kinds": cross["kind"] if B > 0
-                               else None,
-                               "cross_delta": cross["delta"] if B > 0
-                               else None}
             self.node_committed += node_c
             self.node_fence_wait_s += wait
             self.controller.observe_fence_wait(float(wait.max()) * 1e3)
@@ -603,26 +631,24 @@ class ClusterStarEngine:
     def snapshot_commit(self):
         self._snap = self._state()
         self.committed_epoch = self.epoch
-        # the in-flight slabs are now committed state: retire them (the
-        # slabs_shipped stat counts COMMITTED slabs only, so it stays
-        # consistent with the committed-epoch byte split — warm-up and
-        # doomed epochs' ships land in slabs_discarded instead)
-        for s in range(self._slab_hwm):
-            self.slab_ledger.append((self.epoch, s))
-        if len(self.slab_ledger) > self.LEDGER_CAP:    # bounded telemetry
-            del self.slab_ledger[:len(self.slab_ledger) - self.LEDGER_CAP]
-        self.stats.slabs_shipped += self._slab_hwm
-        self._slab_hwm = 0
+        # the in-flight slabs are now committed state: the changelog
+        # retires them into its ledger and fires on_commit (WAL sink, MV
+        # stamping) inside the fence.  slabs_shipped counts COMMITTED
+        # slabs only, so it stays consistent with the committed-epoch
+        # byte split — warm-up and doomed epochs' ships land in
+        # slabs_discarded instead
+        shipped, dropped = self.changelog.commit(self.epoch)
+        self.stats.slabs_shipped += shipped
+        self.stats.ledger_dropped += dropped
 
     def revert_to_snapshot(self):
         """Discard the in-flight epoch on every replica (two-version
-        records, §4.5.2) — including every stream slab the replicas
-        consumed mid-phase (slab high-watermark reset: the re-executed
-        epoch re-streams from slab 0 onto the reverted base, so each slab
+        records, §4.5.2) — including every stream slab the subscribers
+        consumed mid-phase (changelog revert: the re-executed epoch
+        re-publishes from slab 0 onto the reverted base, so each slab
         applies to committed state exactly once)."""
         self._load_state(self._snap)
-        self.stats.slabs_discarded += self._slab_hwm
-        self._slab_hwm = 0
+        self.stats.slabs_discarded += self.changelog.revert(self.epoch)
 
     def node_slice(self, node: int) -> slice:
         return slice(node * self.ppn, (node + 1) * self.ppn)
@@ -640,7 +666,7 @@ class ClusterStarEngine:
         array row (p + ppn) mod P; node m's view covers node m-1's
         partitions).  Always the COMMITTED two-version snapshot, so an
         in-flight or reverted epoch is never visible to a read."""
-        wm = repl.snapshot_watermark(self.committed_epoch, self.slab_ledger)
+        wm = self.changelog.watermark(self.committed_epoch)
         P = self.P
         views = [{
             "id": "full", "kind": "full", "node": 0,
@@ -807,10 +833,16 @@ class ClusterStarEngine:
                                           self._shard)
             self.sec_idx = jax.device_put(self._roll_home(self.part_idx),
                                           self._shard)
-        self.snapshot_commit()
         # the reloaded state is the LAST COMMITTED epoch's — the in-flight
-        # epoch (self.epoch) re-executes on top of it after recovery
+        # epoch (self.epoch) re-executes on top of it after recovery.
+        # Deliberately NOT a changelog.commit: a commit here would hand
+        # the WAL sink epoch-(e-1) state labeled epoch e, and epoch e's
+        # index ops (replayed strictly-after e_c) would be lost on the
+        # next recovery.  The stream history is gone — subscribers reset
+        # from the recovered arrays instead.
+        self._snap = self._state()
         self.committed_epoch = self.epoch - 1
+        self.changelog.reset_from_state(val, tid, self.committed_epoch)
 
     # ------------------------------------------------------------------
     def consistent(self) -> bool:

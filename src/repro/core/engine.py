@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.baselines.cost_model import Network
+from repro.changelog.log import ChangeLog
 from repro.core import replication as repl
 from repro.core.fault import ClusterConfig, make_recovery_plan
 from repro.core.partitioned import run_partitioned
@@ -55,11 +56,50 @@ class EngineStats:
     op_bytes_fence: int = 0         # the unshipped tail the fence waits on
     slabs_shipped: int = 0          # stream slabs applied to replicas
     slabs_discarded: int = 0        # in-flight slabs dropped by a revert
+    ledger_dropped: int = 0         # slab-ledger entries aged out at the cap
     part_time_s: float = 0.0
     sm_time_s: float = 0.0
     sm_rounds: int = 0              # OCC rounds executed (kernel launches)
     fence_time_s: float = 0.0
     fence_net_s: float = 0.0
+
+
+class _ReplicaReplay:
+    """ChangeLog subscriber keeping the operation replica consistent: the
+    ordered partitioned stream replays per slab (``replay_partitioned``),
+    the single-master stream merges under the Thomas write rule with its
+    round-ordered index ops (``replay_index_rounds``) — the same §5 hybrid
+    strategy the engine used to hand-feed."""
+
+    def __init__(self, eng):
+        self.eng = eng
+
+    def on_slab(self, log, info):
+        eng = self.eng
+        rv, rt, ri = eng._jit_replay(
+            eng.replica_store.val, eng.replica_store.tid, log,
+            eng.replica_store.indexes if eng.has_index else None,
+            kernel=eng.kernel)
+        eng.replica_store.val, eng.replica_store.tid = rv, rt
+        if eng.has_index:
+            eng.replica_store.indexes = ri
+
+    def on_master(self, stream):
+        eng = self.eng
+        log = stream["log"]
+        P, R, C = eng.P, eng.R, eng.C
+        rflat_val = eng.replica_store.val.reshape(P * R, C)
+        rflat_tid = eng.replica_store.tid.reshape(P * R)
+        rv, rt, _ = eng._jit_thomas(rflat_val, rflat_tid, log)
+        eng.replica_store.val = rv.reshape(P, R, C)
+        eng.replica_store.tid = rt.reshape(P, R)
+        if eng.has_index:
+            eng.replica_store.indexes = eng._jit_replay_idx(
+                eng.replica_store.indexes, stream["kinds"], stream["delta"],
+                log["iwrite"], log["tid"], kernel=eng.kernel)
+
+    def on_reset(self, val, tid, epoch):
+        self.eng.replica_store.load_state(self.eng.store.snapshot)
 
 
 class StarEngine:
@@ -114,10 +154,6 @@ class StarEngine:
         assert n_slabs >= 1, n_slabs
         self.n_slabs = n_slabs
         self.durability = durability
-        if durability is not None:
-            durability.attach(self.store.val, self.store.tid,
-                              indexes=self.store.indexes
-                              if self.has_index else None)
         self.stats = EngineStats()
         self._jit_part = jax.jit(run_partitioned,
                                  static_argnames=("kernel",))
@@ -129,6 +165,21 @@ class StarEngine:
                                    static_argnames=("kernel",))
         self._jit_replay_idx = jax.jit(repl.replay_index_rounds,
                                        static_argnames=("kernel",))
+        # the one ordered op stream: the engine PUBLISHES (slabs, master
+        # stream, commit/revert) and every consumer subscribes — the
+        # operation replica first (stream order), then the WAL sink
+        self.changelog = ChangeLog(n_slabs)
+        self.changelog.subscribe(_ReplicaReplay(self))
+        if durability is not None:
+            from repro.db.wal import WalSink
+            durability.attach(self.store.val, self.store.tid,
+                              indexes=self.store.indexes
+                              if self.has_index else None)
+            self.changelog.subscribe(WalSink(
+                durability, self.R, self.C,
+                np.arange(self.P) % durability.n_workers,
+                lambda: (self.store.val, self.store.tid,
+                         self.store.indexes if self.has_index else None)))
 
     # -- dict views kept for callers/tests that read engine state --------
     @property
@@ -194,14 +245,10 @@ class StarEngine:
         if self.has_index:
             self.store.indexes = part_out["index"]
 
-        # operation replication (ordered per-partition replay) — or value
-        rep_val, rep_tid, rep_idx = self._jit_replay(
-            self.replica_store.val, self.replica_store.tid, part_out["log"],
-            self.replica_store.indexes if self.has_index else None,
-            kernel=self.kernel)
-        self.replica_store.val, self.replica_store.tid = rep_val, rep_tid
-        if self.has_index:
-            self.replica_store.indexes = rep_idx
+        # operation replication: publish the epoch's ordered stream as one
+        # slab — the replica-replay subscriber applies it, and any other
+        # subscriber (materialized views, ...) rides the same publish
+        self.changelog.publish_slab(part_out["log"], self.epoch)
 
         # ---- replication byte accounting, partitioned stream (Fig. 15) --
         # (host-side np on the write mask: the device is already idle here —
@@ -209,17 +256,19 @@ class StarEngine:
         # needs the stream bytes to model its network drain; skipped
         # entirely when the batch carries no byte tables)
         vb = 0
-        vb_alt, slab_bytes, ib = repl.epoch_stream_bytes(
-            batch, part_out["log"], self.has_index, self.n_slabs,
-            lambda a: self._pad_axis(a, 1))
-        ob = sum(slab_bytes)                     # incl. index op bytes now
+        attr = self.changelog.attribute(batch, part_out["log"],
+                                        self.has_index,
+                                        lambda a: self._pad_axis(a, 1))
+        vb_alt, slab_bytes, ib = attr.value_bytes_alt, attr.slab_bytes, \
+            attr.index_op_bytes
+        ob = attr.total                          # incl. index op bytes now
 
         # ---- fence 1: all streams applied, snapshot commit --------------
         # §5 overlap: the first n_slabs-1 stream slabs shipped DURING the
         # phase (their transfer hides under t_part); the fence waits only
         # on the unshipped tail slab
         t0 = time.perf_counter()
-        ob_head, ob_tail = repl.split_overlapped(slab_bytes)
+        ob_head, ob_tail = attr.overlapped, attr.fence
         if self.hybrid:
             t_net1 = self._fence(ob_tail, overlapped_bytes=ob_head,
                                  t_exec_s=t_part)
@@ -245,17 +294,12 @@ class StarEngine:
             if self.has_index:
                 self.store.indexes = sm_out["index"]
             # value replication, Thomas write rule (order-free) + the
-            # round-ordered index-maintenance stream
-            rflat_val = self.replica_store.val.reshape(self.P * self.R, self.C)
-            rflat_tid = self.replica_store.tid.reshape(self.P * self.R)
-            rv, rt, _ = self._jit_thomas(rflat_val, rflat_tid, sm_out["log"])
-            self.replica_store.val = rv.reshape(self.P, self.R, self.C)
-            self.replica_store.tid = rt.reshape(self.P, self.R)
-            if self.has_index:
-                self.replica_store.indexes = self._jit_replay_idx(
-                    self.replica_store.indexes, cross["kind"], cross["delta"],
-                    sm_out["log"]["iwrite"], sm_out["log"]["tid"],
-                    kernel=self.kernel)
+            # round-ordered index-maintenance stream — published once,
+            # applied by every subscriber
+            self.changelog.publish_master(
+                sm_out["log"],
+                kinds=cross["kind"] if self.has_index else None,
+                delta=cross["delta"] if self.has_index else None)
         else:
             sstats = {"committed": jnp.int32(0), "retries": jnp.int32(0),
                       "user_aborts": jnp.int32(0), "starved": jnp.int32(0),
@@ -282,9 +326,6 @@ class StarEngine:
 
         # ---- fence 2: epoch boundary ------------------------------------
         t0 = time.perf_counter()
-        if self.durability is not None:
-            self._log_epoch(part_out["log"],
-                            sm_out["log"] if B > 0 else None, cross)
         t_net2 = self._fence(vb + ib_sm, commit_epoch=self.epoch)
         self.epoch += 1
         t_fence2 = time.perf_counter()
@@ -364,33 +405,27 @@ class StarEngine:
         ``t_exec_s`` of execution (§5 op-stream overlap) and surface at the
         fence only as the residue their transfer did not hide.
 
-        ``commit_epoch`` (fence 2 only, when durability is attached) fsyncs
-        every worker's write-ahead log inside the fence — the disk group
-        commit — and checkpoints the committed state on cadence."""
+        ``commit_epoch`` (fence 2 only) retires the epoch through the
+        changelog: the WAL sink appends the committed streams and fsyncs
+        every worker's log inside the fence — the disk group commit — and
+        the materialized views stamp the fence's aggregate snapshot."""
         self.store.snapshot_commit()
         self.replica_store.snapshot_commit()
         self.stats.fences += 1
         if commit_epoch is not None:
             self.committed_epoch = int(commit_epoch)
-        if commit_epoch is not None and self.durability is not None:
-            self.durability.commit_epoch(
-                commit_epoch, self.store.val, self.store.tid,
-                indexes=self.store.indexes if self.has_index else None)
+            _shipped, dropped = self.changelog.commit(commit_epoch)
+            self.stats.ledger_dropped += dropped
         t_net = repl.fence_net_seconds(self.net, stream_bytes,
                                        overlapped_bytes, t_exec_s)
         self.stats.fence_net_s += t_net
         return t_net
 
-    def _log_epoch(self, plog, slog, cross=None):
-        """Append this epoch's committed value streams — and the ordered
-        index-op streams when indexes are attached — to the per-worker
-        WALs (worker w owns partitions p ≡ w mod n_workers)."""
-        d = self.durability
-        with_idx = self.has_index and cross is not None
-        d.log_epoch_streams(plog, slog, self.R, self.C,
-                            np.arange(self.P) % d.n_workers,
-                            cross_kinds=cross["kind"] if with_idx else None,
-                            cross_delta=cross["delta"] if with_idx else None)
+    def committed_state(self):
+        """The committed full-replica arrays — what a new changelog
+        subscriber seeds its projection from."""
+        sn = self.store.snapshot
+        return sn["val"], sn["tid"]
 
     def replica_consistent(self) -> bool:
         return self.store.equals(self.replica_store)
@@ -401,7 +436,7 @@ class StarEngine:
         covering every partition with the identity row mapping — two
         independently load-balanceable serving copies.  Views reference
         the COMMITTED two-version snapshot, never the working arrays."""
-        wm = repl.snapshot_watermark(self.committed_epoch, [])
+        wm = self.changelog.watermark(self.committed_epoch)
         P = self.P
         cover = np.ones(P, bool)
         rop = np.arange(P, dtype=np.int64)
@@ -428,9 +463,11 @@ class StarEngine:
             self.store.tid = self.store.tid.at[:, 0].add(jnp.uint32(2))
         plan = make_recovery_plan(self.cluster, failed, self.epoch - 1)
         # revert to last committed epoch (two-version records, §4.5.2 —
-        # indexes roll back with the records they point at)
+        # indexes roll back with the records they point at); in-flight
+        # stream slabs are discarded by every subscriber
         self.store.revert_to_snapshot()
         self.replica_store.load_state(self.store.snapshot)
+        self.stats.slabs_discarded += self.changelog.revert(self.epoch)
         return plan
 
     def recover_node(self, plan):

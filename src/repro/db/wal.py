@@ -198,14 +198,39 @@ def recover(directory: str | Path, shuffle_seed: int | None = None):
     return val, tid, epoch
 
 
+def iter_changelog(directory: str | Path, since_epoch: int = 0):
+    """The durable changelog as an ordered stream source: every surviving
+    entry across the per-worker logs, yielded as ``(kind, epoch, payload)``
+    with kind ``"record"`` or ``"index"``, per-file in file order (the only
+    order the stream guarantees — cross-file chunks commute by
+    construction).
+
+    The two kinds carry the stream's two ordering disciplines past a
+    checkpoint at ``since_epoch``: record chunks are Thomas-mergeable
+    post-images and replay for every epoch AT or after it (over-replay of
+    the checkpointed epoch is idempotent under the Thomas rule — the fuzzy
+    checkpoint may straddle it), while index chunks replay exactly-once
+    and only STRICTLY after it (the checkpointed index arrays already
+    contain ``since_epoch``)."""
+    d = Path(directory)
+    for wal in sorted(d.glob("wal_*.log")):
+        for kind, epoch, payload in WriteAheadLog.read_all(wal):
+            if kind == KIND_RECORD and epoch >= since_epoch:
+                yield "record", epoch, payload
+            elif kind == KIND_INDEX and epoch > since_epoch:
+                yield "index", epoch, payload
+
+
 def recover_full(directory: str | Path, shuffle_seed: int | None = None):
-    """Checkpoint + WAL replay, indexes included.  Returns
-    (val, tid, indexes | None, epoch).
+    """Checkpoint + replay of the durable changelog, indexes included.
+    Returns (val, tid, indexes | None, epoch).
 
     Record chunks Thomas-merge in any order (``shuffle_seed`` exercises
     that); index chunks replay per file in file order, grouped by their
     step ids, only for epochs strictly after the checkpoint epoch
-    (exactly-once — the checkpointed index arrays already contain e_c)."""
+    (exactly-once — the checkpointed index arrays already contain e_c).
+    Both arrive through :func:`iter_changelog` — recovery is just another
+    changelog consumer, reading the stream from disk instead of live."""
     from repro.core.replication import thomas_apply
     from repro.storage.index import apply_index_ops
     import jax.numpy as jnp
@@ -223,12 +248,11 @@ def recover_full(directory: str | Path, shuffle_seed: int | None = None):
     fval = val.reshape(-1, shape[-1])
     ftid = tid.reshape(-1)
     chunks, idx_chunks = [], []
-    for wal in sorted(d.glob("wal_*.log")):
-        for kind, epoch, payload in WriteAheadLog.read_all(wal):
-            if kind == KIND_RECORD and epoch >= e_c:
-                chunks.append(payload)
-            elif kind == KIND_INDEX and epoch > e_c:
-                idx_chunks.append((epoch, payload))
+    for kind, epoch, payload in iter_changelog(d, since_epoch=e_c):
+        if kind == "record":
+            chunks.append(payload)
+        else:
+            idx_chunks.append((epoch, payload))
     if shuffle_seed is not None:
         np.random.default_rng(shuffle_seed).shuffle(chunks)
     for rows, vals, tids in chunks:
@@ -347,3 +371,35 @@ class Durability:
     def close(self):
         for w in self.wals:
             w.close()
+
+
+class WalSink:
+    """ChangeLog subscriber: WAL appends as a changelog sink.
+
+    At every commit fence the changelog hands over the whole epoch's
+    record — the partitioned op stream (already §5-transformed to
+    post-images), the single-master stream, and the batch's static index
+    op arrays — and the sink fans it to the per-worker logs and group-
+    commits them (flush + fsync + cadence checkpoint) inside the fence.
+    ``snapshot_provider`` returns the engine's committed
+    ``(val, tid, indexes | None)`` for the cadence checkpoint.
+
+    Doomed epochs never reach ``on_commit`` (the engine reverts instead
+    of committing), so the durable stream only ever contains committed
+    slabs — exactly the pre-refactor behavior.
+    """
+
+    def __init__(self, durability: Durability, R: int, C: int,
+                 worker_of_partition, snapshot_provider):
+        self.d = durability
+        self.R, self.C = int(R), int(C)
+        self.worker_of_partition = np.asarray(worker_of_partition)
+        self.snapshot_provider = snapshot_provider
+
+    def on_commit(self, epoch, record):
+        self.d.log_epoch_streams(record["part"], record["sm"],
+                                 self.R, self.C, self.worker_of_partition,
+                                 cross_kinds=record["cross_kinds"],
+                                 cross_delta=record["cross_delta"])
+        val, tid, indexes = self.snapshot_provider()
+        self.d.commit_epoch(epoch, val, tid, indexes=indexes)

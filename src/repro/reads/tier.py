@@ -43,6 +43,36 @@ class ReadTierStats:
     max_freshness_served: int = 0
     serve_time_s: float = 0.0
     served_by_freshness: dict = field(default_factory=dict)
+    mid_epoch_served: int = 0      # k=0 serves below the slab watermark
+    mid_epoch_deferred: int = 0    # dirty-partition reads held to the fence
+
+
+class _DirtyGate:
+    """ChangeLog subscriber accumulating the in-flight epoch's per-
+    partition write set at slab granularity: ``dirty[p]`` is True once any
+    published slab (at-or-below the current slab watermark) wrote
+    partition p.  Mid-epoch k=0 reads of CLEAN partitions are provably
+    watermark-fresh — the committed snapshot equals the state after
+    replaying every published slab — so the tier serves them between
+    fences; dirty partitions defer to the fence."""
+
+    needs_write_mask = True
+
+    def __init__(self):
+        self.dirty = None          # (P,) bool; None = no slabs published
+
+    def on_slab(self, log, info):
+        d = info["dirty"]
+        self.dirty = d if self.dirty is None else (self.dirty | d)
+
+    def on_commit(self, epoch, record):
+        self.dirty = None
+
+    def on_revert(self, epoch, n_slabs):
+        self.dirty = None
+
+    def on_reset(self, val, tid, epoch):
+        self.dirty = None
 
 
 class ReadTier:
@@ -58,6 +88,13 @@ class ReadTier:
         self.executor = SnapshotReadExecutor()
         self.recorder = lat.LatencyRecorder()
         self.stats = ReadTierStats()
+        self._gate: _DirtyGate | None = None
+
+    def attach_changelog(self, changelog) -> None:
+        """Subscribe the slab-watermark dirty gate to the engine's
+        changelog — enables ``serve(..., mid_epoch=True)``."""
+        if self._gate is None:
+            self._gate = changelog.subscribe(_DirtyGate())
 
     # ------------------------------------------------------------------
     def observe_epoch(self, engine, metrics: dict | None = None):
@@ -89,24 +126,44 @@ class ReadTier:
 
     # ------------------------------------------------------------------
     def serve(self, admission, now_s: float = 0.0,
-              limit: int | None = None) -> list[dict]:
+              limit: int | None = None, mid_epoch: bool = False) -> list[dict]:
         """Drain + execute one round of the read lane.  Returns the group
         results [{replica, epoch, freshness, slots, out}, ...] so callers
-        (tests, ledgers) can verify the served snapshots."""
+        (tests, ledgers) can verify the served snapshots.
+
+        mid_epoch=True is the slab-watermark serving mode (requires
+        ``attach_changelog``): DURING the in-flight epoch, k=0 reads of
+        partitions no published slab has written serve from the committed
+        snapshot (provably watermark-fresh); reads of dirty partitions —
+        and reads with no freshness-0 replica — re-enter the read lane's
+        FRONT and serve at the fence instead of falling back to OCC."""
+        if mid_epoch and self._gate is None:
+            return []                  # no changelog wired: fence-only mode
         got = admission.drain_reads(limit if limit is not None
                                     else self.serve_limit)
         if not got:
             return []
+        k_eff = 0 if mid_epoch else self.k
+        dirty = self._gate.dirty if mid_epoch else None
         pool = admission.pool
         slots = np.asarray(got, np.int64)
         homes = pool.home[slots].astype(np.int64)
         groups: dict[str, dict] = {}
         fallback: list[int] = []
+        defer: list[int] = []
         for p in np.unique(homes):
             sel = slots[homes == p]
-            choice = self.catalog.choose(int(p), self.k, weight=len(sel))
+            if dirty is not None and dirty[int(p)]:
+                # a slab at-or-below the watermark wrote this partition:
+                # the committed snapshot is no longer watermark-fresh here
+                defer.extend(int(s) for s in sel)
+                continue
+            choice = self.catalog.choose(int(p), k_eff, weight=len(sel))
             if choice is None:
-                fallback.extend(int(s) for s in sel)
+                if mid_epoch:
+                    defer.extend(int(s) for s in sel)
+                else:
+                    fallback.extend(int(s) for s in sel)
                 continue
             ent, epoch, snap, arow = choice
             g = groups.setdefault(ent.replica_id,
@@ -119,7 +176,7 @@ class ReadTier:
         served: list[np.ndarray] = []
         for rid, g in groups.items():
             freshness = self.catalog.current_epoch - g["epoch"]
-            if freshness > self.k:
+            if freshness > k_eff:
                 # belt and braces: eligibility already enforced the bound —
                 # over-stale data is NEVER returned, it re-routes to OCC
                 self.stats.stale_violations += len(g["slots"])
@@ -145,11 +202,16 @@ class ReadTier:
                                  np.full(n, now_s),
                                  np.full(n, lat.COMMITTED))
             served.append(gs)
+            if mid_epoch:
+                self.stats.mid_epoch_served += gs.size
             results.append({"replica": rid, "epoch": g["epoch"],
                             "freshness": freshness, "slots": gs,
                             "out": out})
         if served:
             admission.pool.release(np.concatenate(served))
+        if defer:
+            admission.requeue_reads_front(defer)
+            self.stats.mid_epoch_deferred += len(defer)
         if fallback:
             admission.requeue_reads_occ(fallback)
             self.stats.fallbacks += len(fallback)
@@ -169,4 +231,6 @@ class ReadTier:
             "read_by_replica": self.catalog.serves_by_replica(),
             "read_replicas_removed": s.replicas_removed,
             "read_serve_time_s": round(s.serve_time_s, 6),
+            "read_mid_epoch_served": s.mid_epoch_served,
+            "read_mid_epoch_deferred": s.mid_epoch_deferred,
         }

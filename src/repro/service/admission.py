@@ -249,6 +249,13 @@ class AdmissionController:
         q = self.read_queue
         return [q.popleft() for _ in range(min(limit, len(q)))]
 
+    def requeue_reads_front(self, slots):
+        """Mid-epoch deferral: reads whose home partition a published slab
+        already dirtied re-enter the READ lane at the front (in their
+        original order) — they serve at the next fence, not via OCC."""
+        self.read_queue.extendleft(reversed([int(s) for s in slots]))
+        self.stats.requeued += len(slots)
+
     def requeue_reads_occ(self, slots):
         """Staleness-bound fallback: reads with NO replica inside the bound
         re-enter their home partition's OCC queue at the FRONT (they are

@@ -44,7 +44,7 @@ class TxnService:
                  admission_cfg: AdmissionConfig | None = None,
                  slots_per_partition: int = 64, master_lanes: int = 64,
                  max_ops: int | None = None, feedback=None,
-                 node_of_partition=None, read_tier=None):
+                 node_of_partition=None, read_tier=None, analytics=None):
         """feedback: optional callable(batch, metrics) invoked after every
         epoch's commit fence — the service-level consume-feedback hook
         (e.g. ``lambda b, m: tpcc.apply_consume_feedback(state, b, m)``
@@ -54,11 +54,16 @@ class TxnService:
         shed/depth telemetry per node (see ClusterTxnService).
         read_tier: optional ``reads.ReadTier`` — declared-read-only
         transactions route to a bounded read lane and are served from
-        replica snapshots between fences instead of burning OCC slots."""
+        replica snapshots between fences instead of burning OCC slots.
+        analytics: optional ``changelog.AnalyticsLane`` — incrementally
+        maintained materialized views subscribe to the engine's changelog
+        and the CH-style query mix serves between fences from the
+        epoch-stamped aggregate snapshots."""
         self.engine = engine
         self.clients = list(clients)
         self.feedback = feedback
         self.read_tier = read_tier
+        self.analytics = analytics
         M = max_ops if max_ops is not None else self.clients[0].source.M
         self.admission = AdmissionController(
             engine.P, engine.R, M, engine.C, cfg=admission_cfg,
@@ -166,6 +171,12 @@ class TxnService:
         if self.read_tier is not None:
             self.read_tier.recorder.started_s = 0.0
             self.read_tier.observe_epoch(self.engine)   # initial catalog
+            clog = getattr(self.engine, "changelog", None)
+            if clog is not None:
+                # mid-epoch slab-watermark serving rides the changelog
+                self.read_tier.attach_changelog(clog)
+        if self.analytics is not None:
+            self.analytics.ensure_attached(self.engine)
         self._ingest(self.clock())
         batch, plan = self.batcher.form(self.clock())
         nxt = {}
@@ -173,6 +184,12 @@ class TxnService:
         def ingest_hook():
             self._ingest(self.clock())
             nxt["formed"] = self.batcher.form(self.clock())
+            if self.read_tier is not None:
+                # mid-epoch: k=0 serves of partitions below the slab
+                # watermark, overlapped with device execution; dirty
+                # partitions defer to the fence
+                self.read_tier.serve(self.admission, self.clock(),
+                                     mid_epoch=True)
 
         while True:
             if max_epochs is not None and self.stats.epochs >= max_epochs:
@@ -202,6 +219,11 @@ class TxnService:
                 # replica snapshots (no OCC slots burned)
                 self.read_tier.observe_epoch(self.engine, m)
                 self.read_tier.serve(self.admission, self.clock())
+            if self.analytics is not None:
+                # the HTAP lane: queries answered from the epoch-stamped
+                # MV snapshots the changelog commit just refreshed
+                self.analytics.serve(self.engine.committed_epoch,
+                                     self.clock())
             batch, plan = nxt["formed"]
 
         self.recorder.finished_s = self.clock()
@@ -241,4 +263,6 @@ class TxnService:
             out["write_txn_s"] = out["throughput_txn_s"]
             out["combined_txn_s"] = (out["throughput_txn_s"]
                                      + out["read_txn_s"])
+        if self.analytics is not None:
+            out.update(self.analytics.summary())
         return out

@@ -1,0 +1,445 @@
+"""ChangeLog subsystem: the one ordered op stream + its subscribers.
+
+Covers this PR's tentpole and satellites:
+
+* the pinned byte invariant (overlapped + fence == total == sum of slab
+  sizes), ONCE, against the ChangeLog attribution — moved here from the
+  per-engine copies;
+* subscriber protocol ordering, explicit ledger overflow (drop-oldest
+  with a counter, surfaced through engine stats) and revert correctness
+  near the bound;
+* materialized-view property: every stamped fence aggregate bit-equals a
+  from-scratch recompute over committed state, and ``time_travel(e)``
+  returns exactly the recorded fence-e snapshot;
+* mid-epoch slab-watermark reads: k=0 serves only partitions no
+  published slab wrote (bit-equal to the committed snapshot); dirty
+  partitions defer to the fence, order intact;
+* cluster (subprocess, forced host devices): the MV property holds at
+  every fence across a MID-STREAM kill + case-2 recovery, and the
+  analytics lane answers its query mix from the stamps.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from collections import Counter
+from pathlib import Path
+
+import numpy as np
+
+from repro.changelog import ChangeLog, MaterializedViews
+from repro.core.engine import StarEngine
+from repro.db import tpcc, ycsb
+from repro.reads import ReadTier, reference_read
+from repro.service.admission import AdmissionController
+from tests._hyp import given, settings, st
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=480)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# the pinned byte invariant — one copy, against the changelog attribution
+# ---------------------------------------------------------------------------
+def _mk_engine(n_slabs):
+    cfg = tpcc.TPCCConfig(n_partitions=2, n_items=400, cust_per_district=40,
+                          order_ring=64, mix="full", delivery_gen_lag=256)
+    state = tpcc.TPCCState(cfg)
+    init = tpcc.init_values(cfg, np.random.default_rng(5), state=state)
+    eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg), n_slabs=n_slabs)
+    return cfg, state, eng
+
+
+def test_stream_bytes_pin_slab_sizes_and_count_index_ops():
+    """Modeled stream bytes == sum of stream slab sizes: the overlapped +
+    fence-exposed split partitions exactly the epoch's op-stream bytes,
+    and the n_slabs=1 baseline (ship everything at the fence) sees the
+    identical total with ALL of it fence-exposed.  Index op bytes must be
+    non-zero under the full mix.  Both engines' stats derive from ONE
+    ChangeLog.attribute source, so this invariant lives here once."""
+    cfg4, st4, eng4 = _mk_engine(n_slabs=4)
+    cfg1, st1, eng1 = _mk_engine(n_slabs=1)
+    for ep in range(3):
+        m4 = eng4.run_epoch(tpcc.make_batch(cfg4, st4, 128, seed=ep))
+        m1 = eng1.run_epoch(tpcc.make_batch(cfg1, st1, 128, seed=ep))
+        # per-epoch: the split partitions the epoch's stream bytes
+        assert m4["op_bytes_overlapped"] + m4["op_bytes_fence"] == \
+            m1["op_bytes_overlapped"] + m1["op_bytes_fence"]
+        assert m1["op_bytes_overlapped"] == 0          # baseline: no overlap
+    s4, s1 = eng4.stats, eng1.stats
+    # totals: overlapped + fence == sum of all slab sizes == hybrid stream
+    assert s4.op_bytes_overlapped + s4.op_bytes_fence == s4.op_bytes_hybrid
+    assert s1.op_bytes_fence == s1.op_bytes_hybrid
+    assert s4.op_bytes_hybrid == s1.op_bytes_hybrid    # same workload
+    # streaming strictly lowers the fence-exposed bytes vs the baseline
+    assert 0 < s4.op_bytes_fence < s1.op_bytes_fence
+    assert s4.op_bytes_overlapped > 0
+    # index ops hit the byte model (previously uncounted in t_fence_net_s)
+    assert s4.index_op_bytes > 0
+    assert s4.index_op_bytes == s1.index_op_bytes
+    assert eng4.replica_consistent() and eng1.replica_consistent()
+
+
+def test_attribution_partitions_totals_on_any_frame():
+    """Attribution's overlapped/fence split partitions the total for any
+    slab frame, and the no-byte-table batch attributes to zero."""
+    clog = ChangeLog(4)
+    a = clog.attribute({"row_bytes": None}, None, False, lambda x: x)
+    assert a.total == 0 and a.overlapped == 0 and a.fence == 0
+    assert clog.slab_bounds(10) == [0, 2, 5, 7, 10]
+    assert ChangeLog(1).slab_bounds(10) == [0, 10]
+    assert ChangeLog(8).slab_bounds(3) == [0, 1, 2, 3]   # S capped at T
+
+
+# ---------------------------------------------------------------------------
+# subscriber protocol + explicit ledger overflow (satellite: bounded ledger)
+# ---------------------------------------------------------------------------
+class _Spy:
+    def __init__(self):
+        self.events = []
+
+    def on_slab(self, log, info):
+        self.events.append(("slab", info["epoch"], info["slab"]))
+
+    def on_master(self, stream):
+        self.events.append(("master",))
+
+    def on_commit(self, epoch, record):
+        self.events.append(("commit", epoch, record["part"] is not None))
+
+    def on_revert(self, epoch, n_slabs):
+        self.events.append(("revert", epoch, n_slabs))
+
+
+def _toy_log(P=2, T=3):
+    return {"row": np.zeros((P, T), np.int32),
+            "val": np.zeros((P, T, 2), np.int32),
+            "tid": np.zeros((P, T), np.uint32),
+            "write": np.zeros((P, T, 1), bool)}
+
+
+def test_ledger_overflow_explicit_and_revert_near_bound():
+    """Ledger growth past the cap is EXPLICIT drop-oldest with a counter
+    (it used to be silent truncation), and a revert near the bound
+    discards exactly the in-flight slabs — the ledger keeps each
+    committed (epoch, slab) exactly once."""
+    clog = ChangeLog(4, ledger_cap=8)
+    spy = clog.subscribe(_Spy())
+    for ep in (1, 2, 3):
+        for _ in range(4):
+            clog.publish_slab(_toy_log(), ep)
+        assert clog.slab_hwm == 4
+        assert clog.commit(ep) == (4, 4 if ep == 3 else 0)
+    assert clog.ledger_dropped == 4                  # epoch 1 dropped, counted
+    assert clog.ledger == [(2, s) for s in range(4)] + \
+        [(3, s) for s in range(4)]
+    assert clog.watermark(3) == (3, 4)
+    # revert near the bound: in-flight slabs discarded, ledger untouched
+    clog.publish_slab(_toy_log(), 4)
+    clog.publish_slab(_toy_log(), 4)
+    assert clog.revert(4) == 2
+    assert clog.slab_hwm == 0 and len(clog.ledger) == 8
+    assert clog.watermark(3) == (3, 4)               # watermark unmoved
+    # re-publish + commit: exactly-once entries, overflow counted again
+    for _ in range(4):
+        clog.publish_slab(_toy_log(), 4)
+    clog.publish_master(_toy_log())
+    assert clog.commit(4) == (4, 4)
+    assert clog.ledger_dropped == 8
+    assert max(Counter(clog.ledger).values()) == 1
+    assert clog.watermark(4) == (4, 4)
+    # subscriber saw everything, in stream order
+    kinds = [e[0] for e in spy.events]
+    assert kinds == ["slab"] * 4 + ["commit"] + ["slab"] * 4 + ["commit"] \
+        + ["slab"] * 4 + ["commit"] + ["slab"] * 2 + ["revert"] \
+        + ["slab"] * 4 + ["master", "commit"]
+    assert ("revert", 4, 2) in spy.events
+    # slab indices restart from 0 after the revert (exactly-once re-stream)
+    post = [e for e in spy.events if e[0] == "slab" and e[1] == 4]
+    assert [s for _, _, s in post] == [0, 1, 0, 1, 2, 3]
+
+
+def test_engine_surfaces_ledger_drops_in_stats():
+    """Overflow is visible at the engine surface: stats.ledger_dropped
+    mirrors the changelog counter and the watermark stays coherent."""
+    cfg = ycsb.YCSBConfig(n_partitions=2, records_per_partition=128)
+    eng = StarEngine(2, 128, n_slabs=4)
+    # the single-host engine retires ONE slab per epoch (the whole epoch
+    # log published at once); cap 2 overflows on the third commit
+    eng.changelog.ledger_cap = 2
+    for ep in range(4):
+        eng.run_epoch(ycsb.make_batch(cfg, 128, seed=ep))
+    assert eng.stats.ledger_dropped == eng.changelog.ledger_dropped == 2
+    assert len(eng.changelog.ledger) == 2
+    # only the newest committed epochs survive; watermark coherent
+    assert [e for e, _ in eng.changelog.ledger] == \
+        [eng.committed_epoch - 1, eng.committed_epoch]
+    assert eng.changelog.watermark(eng.committed_epoch) == \
+        (eng.committed_epoch, 1)
+    assert eng.replica_consistent()
+
+
+# ---------------------------------------------------------------------------
+# materialized views: bit-equality + time-travel property (hypothesis)
+# ---------------------------------------------------------------------------
+_MV = None
+
+
+def _mv_fixture():
+    """One full-mix engine with the MVs subscribed from the initial
+    committed state; examples advance it one epoch at a time."""
+    global _MV
+    if _MV is None:
+        cfg, state, eng = _mk_engine(n_slabs=4)
+        views = MaterializedViews(cfg, stock_threshold=40, retain=4)
+        eng.changelog.subscribe(views)
+        val, tid = eng.committed_state()
+        views.on_reset(val, tid, eng.committed_epoch)
+        _MV = {"cfg": cfg, "state": state, "eng": eng, "views": views,
+               "oracle": {eng.committed_epoch: views.recompute(val)}}
+    return _MV
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_mv_bit_equal_recompute_and_time_travel(seed):
+    """Every stamped fence aggregate bit-equals the from-scratch numpy
+    recompute over the engine's committed state, and time_travel(e)
+    returns exactly the stamp recorded at fence e (or None once
+    evicted)."""
+    fx = _mv_fixture()
+    cfg, state, eng, views = fx["cfg"], fx["state"], fx["eng"], fx["views"]
+    batch = tpcc.make_batch(cfg, state, 96, seed=int(seed) % 100_000)
+    m = eng.run_epoch(batch)
+    tpcc.apply_consume_feedback(state, batch, m)
+    epoch, aggs = views.latest()
+    assert epoch == eng.committed_epoch
+    want = views.recompute(eng.committed_state()[0])
+    for k in ("revenue", "stock_low", "undelivered"):
+        assert aggs[k].dtype == want[k].dtype, k
+        assert np.array_equal(aggs[k], want[k]), k
+    fx["oracle"][epoch] = {k: v.copy() for k, v in want.items()}
+    # fence-granular time-travel: exactly the recorded stamps, bounded
+    retained = views.retained_epochs()
+    assert len(retained) <= 4 and retained[-1] == epoch
+    for e in retained:
+        tt = views.time_travel(e)
+        for k, v in fx["oracle"][e].items():
+            assert np.array_equal(tt[k], v), (e, k)
+    evicted = [e for e in fx["oracle"] if e not in retained]
+    for e in evicted:
+        assert views.time_travel(e) is None
+
+
+def test_mv_revert_snaps_back_to_committed():
+    """A §4.5 revert snaps the working projection back to committed: the
+    stamps stay bit-equal to the committed state through the failure and
+    at the next fence (nothing uncommitted leaks into the aggregates)."""
+    cfg, state, eng = _mk_engine(n_slabs=4)
+    views = MaterializedViews(cfg, stock_threshold=40, retain=4)
+    eng.changelog.subscribe(views)
+    val, tid = eng.committed_state()
+    views.on_reset(val, tid, eng.committed_epoch)
+    batch = tpcc.make_batch(cfg, state, 96, seed=0)
+    m = eng.run_epoch(batch)
+    tpcc.apply_consume_feedback(state, batch, m)
+    eng.inject_failure({0})                          # scribble + revert
+    assert views.reverts == 1
+    epoch, aggs = views.latest()
+    want = views.recompute(eng.committed_state()[0])
+    for k in ("revenue", "stock_low", "undelivered"):
+        assert np.array_equal(aggs[k], want[k]), k
+    # the next committed fence still matches the oracle
+    batch = tpcc.make_batch(cfg, state, 96, seed=1)
+    m = eng.run_epoch(batch)
+    tpcc.apply_consume_feedback(state, batch, m)
+    epoch, aggs = views.latest()
+    assert epoch == eng.committed_epoch
+    want = views.recompute(eng.committed_state()[0])
+    for k in ("revenue", "stock_low", "undelivered"):
+        assert np.array_equal(aggs[k], want[k]), k
+    assert eng.replica_consistent()
+
+
+# ---------------------------------------------------------------------------
+# mid-epoch slab-watermark reads (satellite: k=0 below the watermark)
+# ---------------------------------------------------------------------------
+def _stamp_view(tier, P, R, epoch, rng):
+    view = {"id": "full", "kind": "full", "node": 0, "epoch": epoch,
+            "watermark": (epoch, 0), "cover": np.ones(P, bool),
+            "row_of_partition": np.arange(P, dtype=np.int64),
+            "val": rng.integers(0, 100, (P, R, 3)).astype(np.int32),
+            "tid": np.zeros((P, R), np.uint32), "idx": []}
+    tier.catalog.P = P
+    tier.catalog.stamp(view)
+    return view
+
+
+def _read_req(n, home_p, M=2, C=3):
+    return {"parts": np.full((n, M), home_p, np.int32),
+            "rows": np.tile(np.arange(M, dtype=np.int32), (n, 1)),
+            "kinds": np.zeros((n, M), np.int32),
+            "deltas": np.zeros((n, M, C), np.int32),
+            "user_abort": np.zeros(n, bool),
+            "home": np.full(n, home_p, np.int32),
+            "read_only": np.ones(n, bool),
+            "txn_id": np.arange(n, dtype=np.int64),
+            "tenant": np.zeros(n, np.int32),
+            "arrival_s": np.zeros(n)}
+
+
+def test_mid_epoch_reads_serve_below_watermark_defer_dirty():
+    """DURING an epoch, k=0 reads of partitions no published slab wrote
+    serve bit-equal to the committed snapshot; reads of dirty partitions
+    re-enter the read lane's FRONT (order intact) and serve at the
+    fence.  Without an attached changelog, mid-epoch mode serves
+    nothing."""
+    P, R = 2, 8
+    tier = ReadTier(max_staleness_epochs=0)
+    adm = AdmissionController(P, R, max_ops=2, n_cols=3, read_lane=True)
+    rng = np.random.default_rng(3)
+    view = _stamp_view(tier, P, R, epoch=5, rng=rng)
+
+    # no changelog attached: mid-epoch serving is off, lane untouched
+    assert not adm.offer(_read_req(2, home_p=0), 0.0).any()
+    assert tier.serve(adm, mid_epoch=True) == []
+    assert adm.read_depth() == 2
+
+    clog = ChangeLog(n_slabs=4)
+    tier.attach_changelog(clog)
+    assert not adm.offer(_read_req(3, home_p=1), 0.0).any()
+    deferred_order = [s for s in adm.read_queue
+                      if adm.pool.home[s] == 1]
+
+    # slab 0 dirties partition 1 only
+    log = _toy_log(P=P, T=3)
+    log["write"][1, 0, 0] = True
+    clog.publish_slab(log, epoch=6)
+
+    results = tier.serve(adm, mid_epoch=True)
+    pool = adm.pool
+    served = np.concatenate([r["slots"] for r in results])
+    assert (pool.home[served] == 0).all()            # clean partition only
+    assert tier.stats.mid_epoch_served == 2
+    assert tier.stats.mid_epoch_deferred == 3
+    assert tier.stats.stale_violations == 0
+    for r in results:
+        assert r["freshness"] == 0                   # k=0: fence-fresh
+        ent = tier.catalog.entries[r["replica"]]
+        arow = ent.row_of_partition[pool.home[r["slots"]].astype(np.int64)]
+        exp = reference_read({"val": view["val"], "tid": view["tid"],
+                              "idx": []}, arow, pool.row[r["slots"]],
+                             pool.kind[r["slots"]], pool.delta[r["slots"]])
+        for key, want in exp.items():                # bit-equal committed
+            assert np.array_equal(np.asarray(r["out"][key]), want), key
+    # deferred reads sit at the FRONT of the read lane, order intact
+    assert list(adm.read_queue)[:3] == deferred_order
+
+    # fence: commit resets the gate; the deferred reads now serve
+    clog.commit(6)
+    tier.catalog.announce_epoch(6)
+    tier.catalog.stamp(dict(view, epoch=6, watermark=(6, 4)))
+    results = tier.serve(adm, mid_epoch=True)
+    assert sum(r["slots"].size for r in results) == 3
+    assert tier.stats.mid_epoch_served == 5
+    assert adm.read_depth() == 0
+
+
+def test_mid_epoch_gate_resets_on_revert():
+    """A §4.5 revert clears the accumulated dirty set — the re-executed
+    epoch's watermark starts clean."""
+    clog = ChangeLog(n_slabs=2)
+    tier = ReadTier()
+    tier.attach_changelog(clog)
+    log = _toy_log()
+    log["write"][0, 1, 0] = True
+    clog.publish_slab(log, epoch=2)
+    assert tier._gate.dirty is not None and tier._gate.dirty[0]
+    clog.revert(2)
+    assert tier._gate.dirty is None
+    clog.publish_slab(_toy_log(), epoch=2)
+    assert not tier._gate.dirty.any()
+    clog.commit(2)
+    assert tier._gate.dirty is None
+
+
+# ---------------------------------------------------------------------------
+# cluster: MV property across a MID-STREAM kill + case-2 recovery
+# ---------------------------------------------------------------------------
+def test_cluster_mv_bit_equal_across_midstream_kill_case2():
+    """The analytics lane rides ClusterRuntime under the full TPC-C mix.
+    Killing the full-replica node MID-STREAM (aborted at slab 1) forces
+    the §4.5 case-2 path (FALLBACK_DIST_CC): the doomed epoch's slabs had
+    already updated the working projection, the revert snaps it back to
+    committed, and every subsequent fence stamp STILL bit-equals the
+    from-scratch recompute — plus fence-granular time-travel to every
+    retained epoch and a live query mix off the stamps."""
+    out = _run("""
+        import jax, numpy as np
+        from repro.changelog import AnalyticsLane
+        from repro.cluster import ClusterRuntime
+        from repro.core.fault import FaultInjector, RecoveryCase
+        from repro.db import tpcc
+        P = 8
+        cfg = tpcc.TPCCConfig(n_partitions=P, n_items=400,
+                              cust_per_district=40, order_ring=64,
+                              mix="full", delivery_gen_lag=96)
+        state = tpcc.TPCCState(cfg)
+        init = tpcc.init_values(cfg, np.random.default_rng(0), state=state)
+        mesh = jax.make_mesh((4,), ("part",), devices=jax.devices()[:4])
+        inj = FaultInjector()
+        inj.schedule_kill(0, epoch=3, slab=1)   # full holder, mid-stream
+        rt = ClusterRuntime(mesh, P, cfg.rows_per_partition, init_val=init,
+                            indexes=tpcc.index_specs(cfg), injector=inj)
+        lane = AnalyticsLane(cfg, stock_threshold=40, retain=4)
+        assert lane.ensure_attached(rt)
+        views = lane.views
+        oracle = {rt.committed_epoch:
+                  views.recompute(rt.committed_state()[0])}
+        events = []
+        for ep in range(6):
+            batch = tpcc.make_batch(cfg, state, 96, seed=ep)
+            m = rt.run_epoch(batch)
+            tpcc.apply_consume_feedback(state, batch, m)
+            if "recovery" in m: events.append(m["recovery"])
+            out = lane.serve(rt.committed_epoch)
+            epoch, aggs = views.latest()
+            assert epoch == rt.committed_epoch, (epoch, rt.committed_epoch)
+            want = views.recompute(rt.committed_state()[0])
+            for k in ("revenue", "stock_low", "undelivered"):
+                assert np.array_equal(aggs[k], want[k]), (ep, k)
+            oracle[epoch] = {k: v.copy() for k, v in want.items()}
+            # the query mix answers from the stamp it just verified
+            assert out["epoch"] == epoch
+            assert out["stock_low"]["total"] == int(want["stock_low"].sum())
+            assert out["undelivered"]["total"] == \\
+                int((want["undelivered"]).sum())
+            top = out["top_revenue"]
+            flat = want["revenue"].reshape(-1)
+            assert top[0][2] == int(flat.max())
+            assert rt.replica_consistent(), ep
+        for e in views.retained_epochs():
+            tt = views.time_travel(e)
+            for k, v in oracle[e].items():
+                assert np.array_equal(tt[k], v), (e, k)
+        [ev] = events
+        assert ev.case is RecoveryCase.FALLBACK_DIST_CC, ev
+        assert ev.aborted_at_slab == 1, ev
+        assert views.reverts == 1                 # the doomed epoch
+        assert views.slabs_applied > views.commits
+        s = lane.summary()
+        assert s["analytics_serves"] == 6
+        assert s["analytics_max_epoch_lag"] == 0
+        print("OK cluster mv", views.slabs_applied, s["analytics_queries"])
+    """, devices=4)
+    assert "OK cluster mv" in out

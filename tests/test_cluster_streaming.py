@@ -3,9 +3,6 @@ secondary partial replicas (this PR's tentpole), subprocess-driven on 4-8
 forced host devices like tests/test_cluster_runtime.
 
 Covers:
-* byte attribution: modeled stream bytes == sum of the stream slab sizes
-  (and index op bytes are counted — they were silently dropped from
-  ``t_fence_net_s`` before);
 * full five-transaction TPC-C mix on ``ClusterRuntime`` bit-equal to the
   single-process ``StarEngine`` (records AND index segments) at every
   fence;
@@ -18,17 +15,16 @@ Covers:
   checkpoint + per-node logs (records and ordered index-op streams) and
   every subsequent fence stays bit-equal to an independently surviving
   replica.
+
+The byte-attribution invariant (overlapped + fence == total == sum of
+slab sizes, index ops counted) moved to tests/test_changelog.py — it is
+pinned ONCE against the ChangeLog, the single attribution source.
 """
 import os
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
-
-import numpy as np
-
-from repro.core.engine import StarEngine
-from repro.db import tpcc
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
@@ -41,48 +37,6 @@ def _run(code: str, devices: int = 8) -> str:
                          capture_output=True, text=True, env=env, timeout=480)
     assert out.returncode == 0, out.stderr[-4000:]
     return out.stdout
-
-
-# ---------------------------------------------------------------------------
-# byte attribution (host-side, no subprocess)
-# ---------------------------------------------------------------------------
-def _mk_engine(n_slabs):
-    cfg = tpcc.TPCCConfig(n_partitions=2, n_items=400, cust_per_district=40,
-                          order_ring=64, mix="full", delivery_gen_lag=256)
-    state = tpcc.TPCCState(cfg)
-    init = tpcc.init_values(cfg, np.random.default_rng(5), state=state)
-    eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
-                     indexes=tpcc.index_specs(cfg), n_slabs=n_slabs)
-    return cfg, state, eng
-
-
-def test_stream_bytes_pin_slab_sizes_and_count_index_ops():
-    """Modeled stream bytes == sum of stream slab sizes: the overlapped +
-    fence-exposed split partitions exactly the epoch's op-stream bytes,
-    and the n_slabs=1 baseline (ship everything at the fence) sees the
-    identical total with ALL of it fence-exposed.  Index op bytes must be
-    non-zero under the full mix (the fence-latency attribution fix)."""
-    cfg4, st4, eng4 = _mk_engine(n_slabs=4)
-    cfg1, st1, eng1 = _mk_engine(n_slabs=1)
-    for ep in range(3):
-        m4 = eng4.run_epoch(tpcc.make_batch(cfg4, st4, 128, seed=ep))
-        m1 = eng1.run_epoch(tpcc.make_batch(cfg1, st1, 128, seed=ep))
-        # per-epoch: the split partitions the epoch's stream bytes
-        assert m4["op_bytes_overlapped"] + m4["op_bytes_fence"] == \
-            m1["op_bytes_overlapped"] + m1["op_bytes_fence"]
-        assert m1["op_bytes_overlapped"] == 0          # baseline: no overlap
-    s4, s1 = eng4.stats, eng1.stats
-    # totals: overlapped + fence == sum of all slab sizes == hybrid stream
-    assert s4.op_bytes_overlapped + s4.op_bytes_fence == s4.op_bytes_hybrid
-    assert s1.op_bytes_fence == s1.op_bytes_hybrid
-    assert s4.op_bytes_hybrid == s1.op_bytes_hybrid    # same workload
-    # streaming strictly lowers the fence-exposed bytes vs the baseline
-    assert 0 < s4.op_bytes_fence < s1.op_bytes_fence
-    assert s4.op_bytes_overlapped > 0
-    # index ops hit the byte model (previously uncounted in t_fence_net_s)
-    assert s4.index_op_bytes > 0
-    assert s4.index_op_bytes == s1.index_op_bytes
-    assert eng4.replica_consistent() and eng1.replica_consistent()
 
 
 # ---------------------------------------------------------------------------
