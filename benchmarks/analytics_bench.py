@@ -80,7 +80,7 @@ def _drive(cfg, state, eng, lane, epochs, B, check=True):
         epoch, aggs = views.latest()
         assert epoch == eng.committed_epoch, (epoch, eng.committed_epoch)
         want = views.recompute(eng.committed_state()[0])
-        for k in ("revenue", "stock_low", "undelivered"):
+        for k in ("revenue", "stock_low", "undelivered", "order_latency"):
             assert np.array_equal(aggs[k], want[k]), \
                 f"MV {k} diverged from recompute at fence {epoch}"
         oracle[epoch] = want
@@ -135,7 +135,7 @@ def run(smoke: bool = False):
     # -- fence stamp + query serve ---------------------------------------
     proj = np.asarray(views.proj)
     us_stamp, _ = timed(lambda: views._aggregates(proj), reps=reps)
-    rows.append((f"{lbl}/fence_stamp", us_stamp * 1e6, "3 aggregates"))
+    rows.append((f"{lbl}/fence_stamp", us_stamp * 1e6, "4 aggregates"))
     us_serve, _ = timed(
         lambda: lane.serve(eng.committed_epoch) or {"epoch": 0}, reps=reps)
     rows.append((f"{lbl}/query_serve", us_serve * 1e6,

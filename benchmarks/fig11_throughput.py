@@ -33,6 +33,7 @@ def measure_tpcc_mix(mix: str, n_txns: int = 512, epochs: int = 4,
     import numpy as np
     from repro.core.engine import StarEngine
     from repro.db import tpcc
+    from repro.obs import MetricsRegistry
 
     if smoke:
         n_txns, epochs = 128, 2
@@ -45,10 +46,13 @@ def measure_tpcc_mix(mix: str, n_txns: int = 512, epochs: int = 4,
     eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
                      indexes=tpcc.index_specs(cfg) if mix == "full" else None,
                      kernel=kernel)
+    reg = MetricsRegistry()
+    reg.register_object("engine", eng.stats)
     wb = tpcc.make_batch(cfg, state, n_txns, seed=1000)
     wm = eng.run_epoch(wb)                               # warm jit
     if mix == "full":      # resolve the warm batch's Delivery claims too
         tpcc.apply_consume_feedback(state, wb, wm)
+    reg.snapshot(0)                  # post-warm baseline time-series point
     warm = eng.stats.part_time_s + eng.stats.sm_time_s   # exclude jit compile
     warm_sm, warm_rounds = eng.stats.sm_time_s, eng.stats.sm_rounds
     t0 = time.perf_counter()
@@ -59,6 +63,7 @@ def measure_tpcc_mix(mix: str, n_txns: int = 512, epochs: int = 4,
         committed += m["committed_single"] + m["committed_cross"]
         if mix == "full":        # consume feedback: re-queue skipped districts
             tpcc.apply_consume_feedback(state, batch, m)
+        reg.snapshot(ep + 1)
     elapsed = eng.stats.part_time_s + eng.stats.sm_time_s - warm
     wall = time.perf_counter() - t0
     assert eng.replica_consistent(), "replica diverged under measurement"
@@ -86,6 +91,16 @@ def measure_tpcc_mix(mix: str, n_txns: int = 512, epochs: int = 4,
                  int(eng.stats.op_bytes_fence)))
     rows.append((f"fig11/tpcc_measured_mix_{tag}_op_bytes_overlapped", 0.0,
                  int(eng.stats.op_bytes_overlapped)))
+    # phase breakdown off the registry time series (post-warm baseline vs
+    # final snapshot), not hand-merged stats fields
+    s0, s1 = reg.snapshots[0], reg.snapshots[-1]
+    t_part = s1["engine.part_time_s"] - s0["engine.part_time_s"]
+    t_sm = s1["engine.sm_time_s"] - s0["engine.sm_time_s"]
+    t_fence = s1["engine.fence_time_s"] - s0["engine.fence_time_s"]
+    tot = max(t_part + t_sm + t_fence, 1e-9)
+    for ph, t in (("part", t_part), ("sm", t_sm), ("fence", t_fence)):
+        rows.append((f"fig11/tpcc_measured_mix_{tag}_phase_{ph}_pct", 0.0,
+                     round(100.0 * t / tot, 1)))
     return rows
 
 

@@ -25,6 +25,15 @@ def _measure_async_service(duration_s=1.5, rate=1500.0):
                      slots_per_partition=32, master_lanes=32)
     out = svc.run(duration_s=duration_s)
     out["queue_delay_ms"] = eng.controller.queue_delay_ms
+    # phase attribution off the registry time series (first → last epoch
+    # snapshot: excludes warmup/compile), not hand-merged stats fields
+    snaps = svc.metrics.snapshots
+    s0, s1 = (snaps[0], snaps[-1]) if len(snaps) > 1 else ({}, svc.metrics.latest())
+    phases = {ph: s1[f"engine.{ph}_time_s"] - s0.get(f"engine.{ph}_time_s", 0.0)
+              for ph in ("part", "sm", "fence")}
+    tot = max(sum(phases.values()), 1e-9)
+    out["phase_pct"] = {ph: round(100.0 * t / tot, 1)
+                        for ph, t in phases.items()}
     return out
 
 
@@ -73,6 +82,8 @@ def run():
                  round(m["throughput_txn_s"], 1)))
     rows.append(("fig12/async_queue_delay_ms", epoch_us,
                  round(m["queue_delay_ms"], 2)))
+    for ph, pct in m["phase_pct"].items():
+        rows.append((f"fig12/async_phase_{ph}_pct", 0.0, pct))
     # read-tier split: write path vs bounded-staleness snapshot-read path
     rt = _measure_read_tier_split()
     rows += [

@@ -65,6 +65,7 @@ def worker(args):
 
     from repro.cluster import ClusterRuntime
     from repro.core.fault import FaultInjector
+    from repro.obs import MetricsRegistry
 
     N = jax.device_count()
     P = N * args.ppn
@@ -124,6 +125,23 @@ def worker(args):
 
     rt.run_epoch(make(999))                       # jit warm
     recoveries = []
+    # per-epoch registry snapshots ride the RESULT JSON back to the sweep
+    # parent: engine stats + the per-node fence-wait/committed arrays +
+    # the recovery ledger, under the same namespaces the service exports
+    reg = MetricsRegistry()
+    reg.register_object("engine", rt.stats)
+
+    def _node_metrics():
+        out = {}
+        for k in range(N):
+            out[f"node{k}.committed"] = int(rt.eng.node_committed[k])
+            out[f"node{k}.fence_wait_s"] = float(rt.eng.node_fence_wait_s[k])
+        out["recoveries"] = len(recoveries)
+        out["recovery_latency_s"] = sum(r["t_recovery_ms"]
+                                        for r in recoveries) / 1e3
+        return out
+
+    reg.register_provider("cluster", _node_metrics)
     consistent_after_recovery = True
     t_parts, commits = [], []
     for ep in range(args.epochs):
@@ -143,6 +161,7 @@ def worker(args):
                                "t_recovery_ms":
                                    round(ev.t_recovery_s * 1e3, 2)})
             consistent_after_recovery = rt.replica_consistent()
+        reg.snapshot(ep)
     # median-of-epochs after dropping the settle epochs (thread pools and
     # caches are still warming in the first couple): the 2-core host's
     # scheduler adds heavy upper tails, the median is the robust estimate
@@ -175,6 +194,7 @@ def worker(args):
         "recoveries": recoveries,
         "consistent": bool(rt.replica_consistent()
                            and consistent_after_recovery),
+        "metrics": reg.snapshots,
     }))
 
 
@@ -211,7 +231,7 @@ def run():
     return sweep(smoke=False)[0]
 
 
-def sweep(smoke: bool = False):
+def sweep(smoke: bool = False, sweep_json: str | None = None):
     if smoke:
         scale = ["--rows", "64", "--txns-per-node", "48", "--epochs", "10"]
         repeats = 2
@@ -278,10 +298,21 @@ def sweep(smoke: bool = False):
                  int(r["consistent"])))
     rows.append(("fig13/recovery_run_throughput_txn_s", 0.0,
                  r["part_txn_s"]))
+    if sweep_json:
+        # persist every child's full telemetry — per-epoch registry
+        # snapshots (engine.* + cluster.node*.* + recovery ledger)
+        # included — so perf trajectories survive the sweep
+        with open(sweep_json, "w") as f:
+            json.dump({"schema": 1,
+                       "nodes": {str(n): results[n] for n in NODE_COUNTS},
+                       "baseline_n4_slabs1": base,
+                       "kill_n8": r}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {sweep_json}")
     return rows, thr, ev
 
 
-def full_mix_smoke():
+def full_mix_smoke(sweep_json: str | None = None):
     """CI regression gate: the five-transaction TPC-C mix on a 4-node
     cluster with a mid-run node kill — recovery classified, replicas
     (records + index segments) consistent, and a floor on the
@@ -302,6 +333,12 @@ def full_mix_smoke():
         ("fig13/fullmix_recovery_classified", 0.0, 1),
         ("fig13/fullmix_consistent", 0.0, int(r["consistent"])),
     ]
+    if sweep_json:
+        with open(sweep_json, "w") as f:
+            json.dump({"schema": 1, "fullmix_n4_kill": r},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {sweep_json}")
     return rows, r, ev
 
 
@@ -324,19 +361,24 @@ def main():
     ap.add_argument("--slabs", type=int, default=4, help=argparse.SUPPRESS)
     ap.add_argument("--mix", default="ycsb", choices=("ycsb", "full"),
                     help=argparse.SUPPRESS)
+    ap.add_argument("--sweep-json", metavar="PATH", default=None,
+                    dest="sweep_json",
+                    help="persist every child's RESULT JSON — per-epoch "
+                    "registry snapshots (engine.* / cluster.node*.*) and "
+                    "recovery stats included — to this file")
     args = ap.parse_args()
     if args.worker:
         worker(args)
         return
     if args.full_smoke:
-        rows, r, ev = full_mix_smoke()
+        rows, r, ev = full_mix_smoke(sweep_json=args.sweep_json)
         print("name,us_per_call,derived")
         emit(rows)
         print(f"FULL-MIX SMOKE OK committed={r['committed_single']} "
               f"overlap_frac={r['overlap_frac']} "
               f"recovery={ev['t_recovery_ms']}ms")
         return
-    rows, thr, ev = sweep(smoke=args.smoke)
+    rows, thr, ev = sweep(smoke=args.smoke, sweep_json=args.sweep_json)
     print("name,us_per_call,derived")
     emit(rows)
     if args.smoke:

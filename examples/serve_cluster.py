@@ -55,6 +55,7 @@ import jax
 from repro.cluster import ClusterRuntime, ClusterTxnService
 from repro.core.fault import FaultInjector
 from repro.db import tpcc, ycsb
+from repro.obs import Tracer, set_tracer
 from repro.service import (AdmissionConfig, OpenLoopClient, TPCCSource,
                            YCSBSource)
 
@@ -70,15 +71,29 @@ _ap.add_argument("--max-staleness", type=int, default=2, metavar="K",
 _ap.add_argument("--analytics", action="store_true",
                  help="attach the HTAP lane: ChangeLog-maintained "
                  "materialized views + CH-style query mix (full mix only)")
+_ap.add_argument("--trace", metavar="OUT.json", default=None,
+                 help="export a Chrome/Perfetto trace of the run (epoch/"
+                 "phase/slab/fence/SM-round/recovery spans) to this path")
+_ap.add_argument("--metrics", metavar="OUT.jsonl", default=None,
+                 help="export the per-epoch MetricsRegistry snapshots "
+                 "as JSON lines to this path")
+_ap.add_argument("--kill-epoch", type=int, default=8, metavar="E",
+                 help="epoch at which the FaultInjector kills a node "
+                 "(lower it so --quick runs still exercise recovery)")
 _ARGS = _ap.parse_args()
 QUICK, MIX = _ARGS.quick, _ARGS.mix
 READ_TIER, MAX_STALENESS = _ARGS.read_tier, _ARGS.max_staleness
 ANALYTICS = _ARGS.analytics
+TRACE, METRICS = _ARGS.trace, _ARGS.metrics
 if ANALYTICS and MIX != "full":
     _ap.error("--analytics requires --mix full (TPC-C views)")
 
 
 def main():
+    tracer = None
+    if TRACE:
+        tracer = Tracer(capacity=1 << 18, enabled=True)
+        set_tracer(tracer)
     n = jax.device_count()
     if n < 2:
         print("NOTE: run with XLA_FLAGS=--xla_force_host_platform_device_"
@@ -86,7 +101,7 @@ def main():
               f"{n} device(s).")
     mesh = jax.make_mesh((n,), ("part",))
     inj = FaultInjector()
-    inj.schedule_kill(node=min(2, n - 1), epoch=8)
+    inj.schedule_kill(node=min(2, n - 1), epoch=_ARGS.kill_epoch)
 
     feedback = None
     if MIX == "full":
@@ -189,13 +204,20 @@ def main():
         assert out["analytics_max_epoch_lag"] == 0, out
         epoch, aggs = lane.views.latest()
         want = lane.views.recompute(rt.committed_state()[0])
-        for k in ("revenue", "stock_low", "undelivered"):
+        for k in ("revenue", "stock_low", "undelivered", "order_latency"):
             assert np.array_equal(aggs[k], want[k]), k
         assert epoch == rt.committed_epoch
         print("  analytics: OK (served > 0, fence-fresh, final stamp "
               "bit-equal to recompute)")
     print("  replicas bit-identical at the final fence: OK "
           "(records + indexes + secondaries)")
+    if TRACE:
+        n_ev = tracer.export_chrome(TRACE)
+        print(f"  trace          : {n_ev} events -> {TRACE} "
+              f"({tracer.dropped} dropped)")
+    if METRICS:
+        n_snap = svc.metrics.export_jsonl(METRICS)
+        print(f"  metrics        : {n_snap} epoch snapshots -> {METRICS}")
 
 
 if __name__ == "__main__":

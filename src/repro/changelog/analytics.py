@@ -13,10 +13,12 @@ read tier: ``ensure_attached`` subscribes the views to the engine's
 changelog (seeding them from the committed full-replica state) and
 ``serve`` runs one round of the query mix, stamping per-query latency:
 
-* ``top_revenue``   — top-k (warehouse, district) pairs by ring revenue;
-* ``stock_low``     — warehouses ranked by stock-below-threshold count;
-* ``undelivered``   — max / total NEW-ORDER backlog depth per district;
-* ``revenue_delta`` — time-travel: revenue movement between the oldest
+* ``top_revenue``    — top-k (warehouse, district) pairs by ring revenue;
+* ``stock_low``      — warehouses ranked by stock-below-threshold count;
+* ``undelivered``    — max / total NEW-ORDER backlog depth per district;
+* ``order_latency``  — fleet-wide NewOrder→Delivery latency histogram
+  (order-id distance buckets) plus the worst district's p-high bucket;
+* ``revenue_delta``  — time-travel: revenue movement between the oldest
   and newest retained fence (periodic, exercises the stamp history).
 """
 from __future__ import annotations
@@ -25,13 +27,15 @@ import time
 
 import numpy as np
 
-from repro.changelog.views import MaterializedViews
+from repro.changelog.views import LATENCY_BUCKETS, MaterializedViews
+from repro.obs import trace as obs
 
 
 class AnalyticsLane:
     """Serves the analytical query mix from epoch-stamped MV snapshots."""
 
-    QUERIES = ("top_revenue", "stock_low", "undelivered", "revenue_delta")
+    QUERIES = ("top_revenue", "stock_low", "undelivered", "order_latency",
+               "revenue_delta")
 
     def __init__(self, cfg, top_k: int = 5, stock_threshold: int = 15,
                  retain: int = 8, travel_every: int = 4):
@@ -78,13 +82,16 @@ class AnalyticsLane:
         out["top_revenue"] = self._q_top_revenue(aggs)
         out["stock_low"] = self._q_stock_low(aggs)
         out["undelivered"] = self._q_undelivered(aggs)
-        ran = 3
+        out["order_latency"] = self._q_order_latency(aggs)
+        ran = 4
         if self.serves % self.travel_every == 0:
             delta = self._q_revenue_delta()
             if delta is not None:
                 out["revenue_delta"] = delta
                 ran += 1
         dt = time.perf_counter() - t0
+        obs.complete("analytics.serve", "service", t0, t0 + dt,
+                     epoch=int(epoch), queries=ran)
         self.query_s += dt
         self.lat_ms.append(1e3 * dt / ran)
         self.serves += 1
@@ -112,6 +119,26 @@ class AnalyticsLane:
         und = aggs["undelivered"]
         return {"total": int(und.sum()), "max_depth": int(und.max()),
                 "mean_depth": float(und.mean())}
+
+    def _q_order_latency(self, aggs):
+        """Fleet-wide latency histogram: sum the per-district cumulative
+        bucket counts; report the distribution plus the district whose
+        deliveries lag the most (largest share above the last edge)."""
+        self.by_query["order_latency"] += 1
+        h = aggs["order_latency"].astype(np.int64)   # (P, N_DIST, NB+1)
+        fleet = h.sum(axis=(0, 1))                   # cumulative + total
+        total = int(fleet[-1])
+        over = h[..., -1] - h[..., -2]               # > last bucket edge
+        worst = int(over.reshape(-1).argmax())
+        return {
+            "buckets": {f"le_{b}": int(fleet[i])
+                        for i, b in enumerate(LATENCY_BUCKETS)},
+            "delivered": total,
+            "over_last_bucket": int(fleet[-1] - fleet[-2]),
+            "worst_warehouse": worst // h.shape[1],
+            "worst_district": worst % h.shape[1],
+            "worst_over": int(over.reshape(-1)[worst]),
+        }
 
     def _q_revenue_delta(self):
         epochs = self.views.retained_epochs()

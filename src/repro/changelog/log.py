@@ -61,6 +61,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs
+
 
 @dataclass
 class Attribution:
@@ -135,7 +137,12 @@ class ChangeLog:
         info = {"epoch": int(epoch), "slab": self.slab_hwm, "dirty": dirty}
         self._slab_logs.append(log)
         self._plog_cache = None
-        self._fire("on_slab", log, info)
+        # the subscriber seam IS the ship path: one span per published slab
+        # covers replica replay + secondary roll-ship + MV apply + WAL
+        with obs.span("changelog.slab_ship", cat="ship",
+                      epoch=int(epoch), slab=self.slab_hwm,
+                      subscribers=len(self._subs)):
+            self._fire("on_slab", log, info)
         self.slab_hwm += 1
 
     def publish_master(self, log, kinds=None, delta=None):
@@ -144,7 +151,9 @@ class ChangeLog:
         replay and WAL recovery re-apply (kind, operand), which the log
         itself does not carry)."""
         self._master = {"log": log, "kinds": kinds, "delta": delta}
-        self._fire("on_master", self._master)
+        with obs.span("changelog.master_ship", cat="ship",
+                      subscribers=len(self._subs)):
+            self._fire("on_master", self._master)
 
     def epoch_plog(self):
         """The in-flight epoch's whole partitioned log — the ordered
@@ -193,7 +202,9 @@ class ChangeLog:
                   else None,
                   "cross_delta": self._master["delta"] if self._master
                   else None}
-        self._fire("on_commit", int(epoch), record)
+        with obs.span("changelog.commit", cat="fence", epoch=int(epoch),
+                      slabs=shipped):
+            self._fire("on_commit", int(epoch), record)
         self._clear()
         return shipped, dropped
 

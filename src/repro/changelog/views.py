@@ -1,8 +1,8 @@
 """Incrementally-maintained columnar materialized views over the ChangeLog.
 
 The analytics subscriber the ChangeLog refactor pays for: a columnar
-projection of the TPC-C store (the two value columns every decision-
-support aggregate here reads — column 0 and column 2) maintained
+projection of the TPC-C store (the value columns the decision-support
+aggregates here read — ``VIEW_COLS``) maintained
 incrementally from the SAME ordered op stream the replicas replay,
 slab by slab, on whatever device holds the subscriber's arrays.
 
@@ -34,9 +34,13 @@ Aggregates (per partition == per warehouse):
 * ``stock_low`` (P,)        int32 — stock rows with quantity below the
   threshold (StockLevel's decision-support cousin);
 * ``undelivered`` (P, N_DIST) int32 — NEW-ORDER ring slots not yet
-  tombstoned by Delivery (o_id column != 0).
+  tombstoned by Delivery (o_id column != 0);
+* ``order_latency`` (P, N_DIST, len(LATENCY_BUCKETS)+1) int32 — per-
+  district histogram of NewOrder→Delivery latency (in order-ids) over the
+  delivered orders retained in the ring: cumulative counts per bucket
+  edge plus a trailing total column.
 
-All three read the retained ring state — reused ring slots overwrite in
+All four read the retained ring state — reused ring slots overwrite in
 place, so "revenue" is revenue over the ring window, exactly what the
 oracle recomputes.
 """
@@ -51,9 +55,15 @@ import numpy as np
 from repro.core.replication import thomas_apply
 from repro.db.tpcc import N_DIST
 
-#: value columns the views project: col 0 (next_o_id / s_qty / o_id ...)
-#: and col 2 (order-line amount / d_ytd ...)
-VIEW_COLS = (0, 2)
+#: value columns the views project: col 0 (next_o_id / s_qty / o_id ...),
+#: col 2 (order-line amount / d_ytd ...) and col 5 (order latency in
+#: order-ids, stamped by Delivery on the orders row)
+VIEW_COLS = (0, 2, 5)
+
+#: order-latency histogram bucket edges (latency in order-ids, i.e. how
+#: far next_o_id advanced past an order before Delivery consumed it);
+#: cumulative counts per edge + a trailing total ("+inf") column
+LATENCY_BUCKETS = (1, 2, 4, 8, 16, 32)
 
 
 class MaterializedViews:
@@ -63,7 +73,7 @@ class MaterializedViews:
         self.cfg = cfg
         self.stock_threshold = int(stock_threshold)
         self.retain = int(retain)
-        self.proj = None               # (P, R, 2) working projection
+        self.proj = None               # (P, R, len(VIEW_COLS)) projection
         self.ptid = None               # (P, R) working TIDs
         self._c_proj = None            # committed projection
         self._c_ptid = None
@@ -82,7 +92,7 @@ class MaterializedViews:
     def _apply_slab(proj, ptid, row, vals, tid, write):
         """Scatter one slab's post-image column projection, queue-slot by
         queue-slot — the same pad-row scatter ``replay_partitioned``
-        commits with, on the (P, R, 2) projection."""
+        commits with, on the (P, R, len(VIEW_COLS)) projection."""
         R = proj.shape[1]
 
         def step(carry, slot):
@@ -181,9 +191,9 @@ class MaterializedViews:
 
     # -- aggregates ------------------------------------------------------
     def _aggregates(self, proj) -> dict:
-        """Aggregates off an np (P, R, 2) column projection.  Host-side
-        numpy on purpose: int64 sums are exact without the x64 flag, and
-        the fence stamp is the only consumer (once per epoch)."""
+        """Aggregates off an np (P, R, len(VIEW_COLS)) column projection.
+        Host-side numpy on purpose: int64 sums are exact without the x64
+        flag, and the fence stamp is the only consumer (once per epoch)."""
         cfg = self.cfg
         P = proj.shape[0]
         ring = cfg.order_ring
@@ -191,12 +201,23 @@ class MaterializedViews:
                   cfg.off_order_line + N_DIST * ring * 15, 1]
         st = proj[:, cfg.off_stock:cfg.off_stock + cfg.n_items, 0]
         no = proj[:, cfg.off_new_order:cfg.off_new_order + N_DIST * ring, 0]
+        # Delivery stamps the order's age (in order-ids, always >= 1) in
+        # orders col 5; NewOrder's whole-row SET zeroes it on ring reuse,
+        # so lat > 0 selects exactly the ring's delivered-and-retained
+        # orders.  Counts are exact integers — bit-equal to the oracle.
+        lat = proj[:, cfg.off_orders:cfg.off_orders + N_DIST * ring,
+                   2].reshape(P, N_DIST, ring)
+        live = lat > 0
         return {
             "revenue": ol.astype(np.int64).reshape(
                 P, N_DIST, ring * 15).sum(axis=-1),
             "stock_low": (st < self.stock_threshold).sum(
                 axis=-1).astype(np.int32),
             "undelivered": (no.reshape(P, N_DIST, ring) != 0).sum(
+                axis=-1).astype(np.int32),
+            "order_latency": np.stack(
+                [(live & (lat <= b)).sum(axis=-1)
+                 for b in LATENCY_BUCKETS] + [live.sum(axis=-1)],
                 axis=-1).astype(np.int32),
         }
 

@@ -51,6 +51,7 @@ from repro.cluster.coordinator import Coordinator, RecoveryEvent
 from repro.core.cluster import ClusterStarEngine
 from repro.core.fault import ClusterConfig, FaultInjector, RecoveryCase
 from repro.db import wal as walmod
+from repro.obs import trace as obs
 
 
 class ClusterRuntime:
@@ -182,15 +183,24 @@ class ClusterRuntime:
                 f"only {doomed.get('slabs')} slab(s) — slab index out of "
                 f"range for this batch/n_slabs configuration")
         t0 = time.perf_counter()
-        event = self._recover(kills)
-        event.t_recovery_s = time.perf_counter() - t0
-        event.aborted_at_slab = doomed.get("aborted_at_slab")
-        self.coordinator.recovered(event, set(kills))
-        self.injector.revive(kills)
-        # ---- resume: re-execute the reverted epoch (ingest already ran);
-        # the changelog's watermark was reset by the revert, so the stream
-        # re-publishes from slab 0 onto the reverted base — exactly once
-        m = self.eng.run_epoch(batch)
+        with obs.span("recovery", cat="recovery", epoch=self.epoch,
+                      failed=str(sorted(kills))) as rspan:
+            event = self._recover(kills)
+            event.t_recovery_s = time.perf_counter() - t0
+            event.aborted_at_slab = doomed.get("aborted_at_slab")
+            rspan.set(case=event.case.name, run_mode=event.run_mode,
+                      aborted_at_slab=event.aborted_at_slab)
+            with obs.span("recovery.remaster", cat="recovery",
+                          view=self.coordinator.view + 1):
+                self.coordinator.recovered(event, set(kills))
+                self.injector.revive(kills)
+            # ---- resume: re-execute the reverted epoch (ingest already
+            # ran); the changelog's watermark was reset by the revert, so
+            # the stream re-publishes from slab 0 onto the reverted base —
+            # exactly once
+            with obs.span("recovery.reexecute", cat="recovery",
+                          epoch=self.epoch):
+                m = self.eng.run_epoch(batch)
         m["recovery"] = event
         return m
 
@@ -199,12 +209,18 @@ class ClusterRuntime:
         """§4.5: revert, classify, restore, re-master."""
         eng, coord = self.eng, self.coordinator
         epoch = self.epoch
-        plan = coord.fence_missed(epoch, kills)
+        with obs.span("recovery.classify", cat="recovery", epoch=epoch,
+                      failed=str(sorted(kills))) as csp:
+            plan = coord.fence_missed(epoch, kills)
+            csp.set(case=plan.case.name, run_mode=plan.run_mode)
         failed = set(range(self.topology.n_nodes)) - coord.alive
         # revert every replica to the last committed epoch (§4.5.2) —
         # discarding the in-flight stream slabs the replicas consumed
         hwm_before = eng._slab_hwm
-        eng.revert_to_snapshot()
+        with obs.span("recovery.revert", cat="recovery", epoch=epoch,
+                      to_epoch=plan.revert_to_epoch,
+                      slabs_discarded=hwm_before):
+            eng.revert_to_snapshot()
         # physical memory loss: EVERYTHING a killed node held dies with it
         # — its primary block and the secondary copy it hosted; full
         # replicas die with their node
@@ -220,7 +236,9 @@ class ClusterRuntime:
                          RecoveryCase.FULL_ONLY):
             # donor copy from the surviving full replica (§4.5.3 case 1/3):
             # every killed node re-copies its block on rejoin, lost or not
-            eng.restore_nodes_from_full(sorted(kills))
+            with obs.span("recovery.restore", cat="recovery",
+                          source="full_replica", nodes=str(sorted(kills))):
+                eng.restore_nodes_from_full(sorted(kills))
         elif plan.case is RecoveryCase.FALLBACK_DIST_CC:
             # no full replica left; the partial set is complete — dead
             # blocks restore from their PHYSICAL surviving secondary
@@ -230,16 +248,24 @@ class ClusterRuntime:
                           if eng.secondary
                           and eng.sec_home(n) not in failed]
             if restorable:
-                eng.restore_blocks_from_secondary(restorable)
+                with obs.span("recovery.restore", cat="recovery",
+                              source="secondary_copy",
+                              nodes=str(restorable)):
+                    eng.restore_blocks_from_secondary(restorable)
                 from_secondary = tuple(restorable)
-            eng.rebuild_full_from_partials()
+            with obs.span("recovery.restore", cat="recovery",
+                          source="rebuild_full_from_partials"):
+                eng.rebuild_full_from_partials()
         else:                                   # UNAVAILABLE: disk or halt
             if self.durability is None:
                 raise RuntimeError(
                     "cluster UNAVAILABLE (no full replica, incomplete "
                     "partial set) and no durability attached: halt")
-            val, tid, idx, e_c = walmod.recover_full(self.durability.dir)
-            eng.load_committed(val, tid, indexes=idx)
+            with obs.span("recovery.restore", cat="recovery",
+                          source="disk_wal"):
+                val, tid, idx, e_c = walmod.recover_full(
+                    self.durability.dir)
+                eng.load_committed(val, tid, indexes=idx)
             reloaded = True
         return RecoveryEvent(
             epoch=epoch, failed=tuple(sorted(kills)), case=plan.case,

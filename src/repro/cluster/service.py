@@ -44,6 +44,23 @@ class ClusterTxnService(TxnService):
         N = runtime.n_nodes
         self.node_depth_max = np.zeros(N, np.int64)
         self.recovery_events = []
+        # per-node telemetry under one namespace: cluster.node<k>.* plus
+        # the recovery ledger — read live at every registry snapshot
+        self.metrics.register_provider("cluster", self._node_metrics)
+
+    def _node_metrics(self) -> dict:
+        eng = self.runtime.eng
+        shed = self.node_shed()
+        out = {}
+        for k in range(self.runtime.n_nodes):
+            out[f"node{k}.committed"] = int(eng.node_committed[k])
+            out[f"node{k}.fence_wait_s"] = float(eng.node_fence_wait_s[k])
+            out[f"node{k}.queue_depth_max"] = int(self.node_depth_max[k])
+            out[f"node{k}.shed"] = int(shed[k])
+        out["recoveries"] = len(self.recovery_events)
+        out["recovery_latency_s"] = float(
+            sum(e.t_recovery_s for e in self.recovery_events))
+        return out
 
     # ------------------------------------------------------------------
     def _observe_epoch(self, metrics: dict):
@@ -53,6 +70,7 @@ class ClusterTxnService(TxnService):
         np.maximum(self.node_depth_max, by_node, out=self.node_depth_max)
         if "recovery" in metrics:
             self.recovery_events.append(metrics["recovery"])
+        super()._observe_epoch(metrics)
 
     def node_shed(self) -> np.ndarray:
         """Rejected-arrival counts grouped by owning node (master-queue

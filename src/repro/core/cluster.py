@@ -67,6 +67,7 @@ from repro.core.engine import EngineStats
 from repro.core.partitioned import run_partitioned
 from repro.core.phase_switch import PhaseController
 from repro.core.single_master import run_single_master
+from repro.obs import trace as obs
 from repro.storage.index import IndexSpec, make_index
 
 
@@ -99,40 +100,45 @@ class _ReplicaShip:
 
     def on_slab(self, log, info):
         eng = self.eng
-        log_m = jax.device_put(log, eng._master_dev)
-        eng.full_val, eng.full_tid, fidx = eng._replay_full(
-            eng.full_val, eng.full_tid, log_m, eng.full_idx)
-        if eng.has_index:
-            eng.full_idx = fidx
-        if eng.secondary:
-            eng.sec_val, eng.sec_tid, sidx = eng._replay_sec(
-                eng.sec_val, eng.sec_tid, log, eng.sec_idx)
+        with obs.span("replica.replay_full", cat="replay",
+                      epoch=info["epoch"], slab=info["slab"]):
+            log_m = jax.device_put(log, eng._master_dev)
+            eng.full_val, eng.full_tid, fidx = eng._replay_full(
+                eng.full_val, eng.full_tid, log_m, eng.full_idx)
             if eng.has_index:
-                eng.sec_idx = sidx
+                eng.full_idx = fidx
+        if eng.secondary:
+            with obs.span("replica.replay_secondary", cat="replay",
+                          epoch=info["epoch"], slab=info["slab"]):
+                eng.sec_val, eng.sec_tid, sidx = eng._replay_sec(
+                    eng.sec_val, eng.sec_tid, log, eng.sec_idx)
+                if eng.has_index:
+                    eng.sec_idx = sidx
 
     def on_master(self, stream):
         eng = self.eng
-        slog = stream["log"]
-        w = slog["write"].reshape(-1)
-        rows = jax.device_put(
-            jnp.where(w, slog["row"].reshape(-1), -1), eng._bcast)
-        vals = jax.device_put(slog["val"].reshape(-1, eng.C), eng._bcast)
-        tids = jax.device_put(slog["tid"].reshape(-1), eng._bcast)
-        eng.part_val, eng.part_tid = eng._scatter(
-            eng.part_val, eng.part_tid, rows, vals, tids)
-        if eng.secondary:
-            eng.sec_val, eng.sec_tid = eng._scatter_sec(
-                eng.sec_val, eng.sec_tid, rows, vals, tids)
-        if eng.has_index:
-            kb = jax.device_put(stream["kinds"], eng._bcast)
-            db = jax.device_put(stream["delta"], eng._bcast)
-            iwb = jax.device_put(slog["iwrite"], eng._bcast)
-            tdb = jax.device_put(slog["tid"], eng._bcast)
-            eng.part_idx = eng._sm_idx_replay(eng.part_idx, kb, db,
-                                              iwb, tdb)
+        with obs.span("replica.scatter_back", cat="replay"):
+            slog = stream["log"]
+            w = slog["write"].reshape(-1)
+            rows = jax.device_put(
+                jnp.where(w, slog["row"].reshape(-1), -1), eng._bcast)
+            vals = jax.device_put(slog["val"].reshape(-1, eng.C), eng._bcast)
+            tids = jax.device_put(slog["tid"].reshape(-1), eng._bcast)
+            eng.part_val, eng.part_tid = eng._scatter(
+                eng.part_val, eng.part_tid, rows, vals, tids)
             if eng.secondary:
-                eng.sec_idx = eng._sm_idx_replay_sec(eng.sec_idx, kb, db,
-                                                     iwb, tdb)
+                eng.sec_val, eng.sec_tid = eng._scatter_sec(
+                    eng.sec_val, eng.sec_tid, rows, vals, tids)
+            if eng.has_index:
+                kb = jax.device_put(stream["kinds"], eng._bcast)
+                db = jax.device_put(stream["delta"], eng._bcast)
+                iwb = jax.device_put(slog["iwrite"], eng._bcast)
+                tdb = jax.device_put(slog["tid"], eng._bcast)
+                eng.part_idx = eng._sm_idx_replay(eng.part_idx, kb, db,
+                                                  iwb, tdb)
+                if eng.secondary:
+                    eng.sec_idx = eng._sm_idx_replay_sec(eng.sec_idx, kb, db,
+                                                         iwb, tdb)
 
 
 class ClusterStarEngine:
@@ -414,6 +420,8 @@ class ClusterStarEngine:
         slab's execution dispatch; returning True at slab s kills the
         epoch mid-stream (a node died during the phase) with slabs
         0..s-1 already shipped: remaining slabs never execute or ship."""
+        tr = obs.get_tracer()
+        t_ep0 = time.perf_counter()
         epoch_u = jnp.uint32(self.epoch)
         ptxn = jax.tree.map(jnp.asarray, _pad_pow2(batch["ptxn"], 1))
         cross = jax.tree.map(jnp.asarray, _pad_pow2(batch["cross"], 0))
@@ -430,8 +438,11 @@ class ClusterStarEngine:
         for s in range(S):
             slab = jax.tree.map(lambda a: a[:, bounds[s]:bounds[s + 1]],
                                 ptxn)
-            pv, pt, pidx, seq, log, comm, extras = self._part(
-                pv, pt, pidx, seq, slab, epoch_u)
+            with tr.span("cluster.slab_execute", cat="phase",
+                         epoch=self.epoch, slab=s,
+                         txns=bounds[s + 1] - bounds[s]):
+                pv, pt, pidx, seq, log, comm, extras = self._part(
+                    pv, pt, pidx, seq, slab, epoch_u)
             if s > 0:
                 # previous slab's stream ships while THIS slab executes
                 self.changelog.publish_slab(slab_logs[s - 1], self.epoch)
@@ -446,10 +457,14 @@ class ClusterStarEngine:
             ti = time.perf_counter()
             ingest()
             t_ingest = time.perf_counter() - ti
+            tr.complete("service.ingest_overlap", "service", ti,
+                        ti + t_ingest, epoch=self.epoch)
         tb = time.perf_counter()
         jax.block_until_ready(pv)
         t1 = time.perf_counter()
         t_part = max(t1 - t0 - t_ingest, t1 - tb)
+        tr.complete("engine.partitioned", "phase", t0, t1,
+                    epoch=self.epoch, slabs=S)
         self.part_val, self.part_tid, self.part_idx = pv, pt, pidx
 
         if aborted_at is not None:
@@ -460,7 +475,9 @@ class ClusterStarEngine:
                     "slabs_consumed": self._slab_hwm}
 
         # ---- tail ship: the ONLY stream transfer the fence waits on -----
-        self.changelog.publish_slab(slab_logs[-1], self.epoch)
+        with tr.span("fence.tail_ship", cat="fence", epoch=self.epoch,
+                     slab=S - 1):
+            self.changelog.publish_slab(slab_logs[-1], self.epoch)
         plog = self.changelog.epoch_plog()
         p_committed = (committed_chunks[0] if S == 1 else
                        jnp.concatenate(committed_chunks, axis=1))
@@ -479,6 +496,8 @@ class ClusterStarEngine:
         node_counts = self._fence_barrier(
             jnp.asarray(counts[:, 0], jnp.int32))
         n_single = int(node_counts[0])
+        tr.complete("fence.psum", "fence", tf0, time.perf_counter(),
+                    epoch=self.epoch, tail_bytes=ob_tail)
         # modeled network: the tail slab drains inside the fence; the head
         # slabs shipped during execution and surface only as un-hidden
         # residue (paper: "negligible" — now measurable instead of assumed)
@@ -533,6 +552,15 @@ class ClusterStarEngine:
             c_committed = np.zeros(0, bool)
         t_sm = time.perf_counter() - t0
         t_sm_round = t_sm / self.max_rounds if B > 0 else 0.0
+        tr.complete("engine.single_master", "phase", t0, t0 + t_sm,
+                    epoch=self.epoch, rounds=self.max_rounds if B else 0)
+        if tr.enabled and B > 0:
+            # rounds execute inside ONE jitted call; attribute the measured
+            # phase time evenly (the same t_sm_round fig11/fig13 report)
+            for r in range(self.max_rounds):
+                tr.complete("engine.sm_round", "phase",
+                            t0 + r * t_sm_round, t0 + (r + 1) * t_sm_round,
+                            epoch=self.epoch, round=r)
 
         # ---- fence 2: epoch boundary + two-version snapshot --------------
         # the fence's contract is "every outstanding stream applied": wait
@@ -541,6 +569,8 @@ class ClusterStarEngine:
         # silently delays the NEXT epoch's partitioned phase
         tf2 = time.perf_counter()
         jax.block_until_ready((self.full_val, self.part_val))
+        tr.complete("fence.replay_drain", "fence", tf2,
+                    time.perf_counter(), epoch=self.epoch)
         t_net2 = repl.fence_net_seconds(self.net, vb + ib_sm)
         p_committed = np.asarray(p_committed)                  # (P, T)
         node_c = p_committed.sum(1).reshape(self.n_nodes, -1).sum(1)
@@ -567,6 +597,8 @@ class ClusterStarEngine:
                                     / max(n_cross + n_single, 1))
             tau_p, tau_s = self.controller.plan()
         t_fence2 = time.perf_counter()
+        tr.complete("engine.fence", "fence", tf2, t_fence2, which=2,
+                    epoch=self.epoch - (1 if commit else 0), commit=commit)
         if commit:
             s = self.stats
             s.epochs += 1
@@ -606,6 +638,9 @@ class ClusterStarEngine:
             m["p_cskip"] = np.asarray(plog["cskip"])           # (P, T, K)
             m["c_cskip"] = (np.asarray(slog["cskip"]).any(0)
                             if B > 0 else None)                # (B_pad, K)
+        tr.complete("engine.epoch", "epoch", t_ep0, time.perf_counter(),
+                    epoch=self.epoch - (1 if commit else 0),
+                    committed=n_single + n_cross, commit=commit)
         return m
 
     # ------------------------------------------------------------------

@@ -35,6 +35,7 @@ from repro.core.fault import ClusterConfig, make_recovery_plan
 from repro.core.partitioned import run_partitioned
 from repro.core.phase_switch import PhaseController
 from repro.core.single_master import run_single_master
+from repro.obs import trace as obs
 from repro.storage import IndexSpec, StorageEngine
 
 
@@ -219,6 +220,8 @@ class StarEngine:
         hooks host-side batch formation for the *next* epoch here so ingest
         overlaps device execution (double buffering). Its host time is
         reported separately as ``t_ingest_s``."""
+        tr = obs.get_tracer()
+        t_ep0 = time.perf_counter()
         epoch_u = jnp.uint32(self.epoch)
         ptxn = jax.tree.map(jnp.asarray, self._pad_axis(batch["ptxn"], 1))
         cross = jax.tree.map(jnp.asarray, self._pad_axis(batch["cross"], 0))
@@ -234,9 +237,13 @@ class StarEngine:
             ti = time.perf_counter()
             ingest()
             t_ingest = time.perf_counter() - ti
+            tr.complete("service.ingest_overlap", "service", ti,
+                        ti + t_ingest, epoch=self.epoch)
         tb = time.perf_counter()
         jax.block_until_ready(val)
         t1 = time.perf_counter()
+        tr.complete("engine.partitioned", "phase", t0, t1,
+                    epoch=self.epoch)
         # device-attributable time: when host ingest outlasts the device the
         # wall clock measures ingest, not the phase — don't let that deflate
         # the t_p estimate feeding Eq. 1-2 (t_ingest_s reports the overlap)
@@ -276,6 +283,9 @@ class StarEngine:
             t_net1 = self._fence(vb_alt)
         t_fence1 = time.perf_counter()
         t_f1 = t_fence1 - t0
+        tr.complete("engine.fence", "fence", t0, t_fence1, which=1,
+                    epoch=self.epoch, tail_bytes=ob_tail if self.hybrid
+                    else vb_alt, overlapped_bytes=ob_head)
 
         # ---- single-master phase (cross-partition txns, Silo OCC) ------
         t0 = time.perf_counter()
@@ -308,6 +318,15 @@ class StarEngine:
         # per-round kernel time: the single-master phase is max_rounds
         # identical fused-round launches (one per OCC round)
         t_sm_round = t_sm / self.max_rounds if B > 0 else 0.0
+        tr.complete("engine.single_master", "phase", t0, t0 + t_sm,
+                    epoch=self.epoch, rounds=self.max_rounds if B else 0)
+        if tr.enabled and B > 0:
+            # the rounds execute inside ONE jitted call; attribute the
+            # measured phase time evenly (the same t_sm_round fig11 reports)
+            for r in range(self.max_rounds):
+                tr.complete("engine.sm_round", "phase",
+                            t0 + r * t_sm_round, t0 + (r + 1) * t_sm_round,
+                            epoch=self.epoch, round=r)
 
         # ---- byte accounting, single-master value stream ----------------
         ib_sm = 0
@@ -330,6 +349,9 @@ class StarEngine:
         self.epoch += 1
         t_fence2 = time.perf_counter()
         t_f2 = t_fence2 - t0
+        tr.complete("engine.fence", "fence", t0, t_fence2, which=2,
+                    epoch=self.epoch - 1, commit=True,
+                    value_bytes=vb + ib_sm)
 
         # ---- controller telemetry ---------------------------------------
         nc = int(sstats["committed"])
@@ -389,6 +411,8 @@ class StarEngine:
             m["p_cskip"] = np.asarray(part_out["log"]["cskip"])  # (P,T,K)
             m["c_cskip"] = (np.asarray(sm_out["log"]["cskip"]).any(0)
                             if B > 0 else None)                  # (B_pad,K)
+        tr.complete("engine.epoch", "epoch", t_ep0, time.perf_counter(),
+                    epoch=self.epoch - 1, committed=ns + nc)
         return m
 
     # ------------------------------------------------------------------

@@ -510,6 +510,11 @@ def _delivery(cfg, state, rng, w):
         kinds[j] = ADD                                        # o_carrier_id
         rows[j] = cfg.off_orders + d_id * ring + slot
         deltas[j, 4] = carrier
+        # order latency in order-ids: how far next_o_id advanced past this
+        # order before Delivery consumed it (>= 1).  Rides the same guarded
+        # ADD, so a skipped consume never stamps it; col 5 is zeroed by
+        # NewOrder's whole-row SET on ring reuse (views.order_latency)
+        deltas[j, 5] = int(state.next_o_id[w, d_id]) - o_id
         deltas[j, -1] = d_id + 1
         tables[j] = "orders"
         kinds[j + 1] = ADD                                    # c_balance

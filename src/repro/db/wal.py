@@ -397,9 +397,12 @@ class WalSink:
         self.snapshot_provider = snapshot_provider
 
     def on_commit(self, epoch, record):
-        self.d.log_epoch_streams(record["part"], record["sm"],
-                                 self.R, self.C, self.worker_of_partition,
-                                 cross_kinds=record["cross_kinds"],
-                                 cross_delta=record["cross_delta"])
-        val, tid, indexes = self.snapshot_provider()
-        self.d.commit_epoch(epoch, val, tid, indexes=indexes)
+        from repro.obs import trace as obs
+        with obs.span("fence.wal_sink", cat="fence", epoch=int(epoch)):
+            self.d.log_epoch_streams(record["part"], record["sm"],
+                                     self.R, self.C,
+                                     self.worker_of_partition,
+                                     cross_kinds=record["cross_kinds"],
+                                     cross_delta=record["cross_delta"])
+            val, tid, indexes = self.snapshot_provider()
+            self.d.commit_epoch(epoch, val, tid, indexes=indexes)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.kernels.index_merge.kernel import index_merge_pallas
 from repro.kernels.occ.ops import resolve_interpret
+from repro.obs.trace import kernel_launch
 from repro.storage.index import SENTINEL
 
 W = 4                                  # int32/uint32 word bytes
@@ -34,6 +35,9 @@ def index_merge(key, prow, tid, del_pq, ins_pq, prow_pq, tid_pq, *,
     (key', prow', tid', overflow (P,)) — the pallas path is bit-identical
     to the vmapped jnp oracle (``ref.segment_merge_ref``).
     """
+    kernel_launch("index_merge.index_merge",
+                  backend="pallas" if use_pallas else "jnp",
+                  segments=int(key.shape[0]), cap=int(key.shape[1]))
     if not use_pallas:
         from repro.kernels.index_merge.ref import segment_merge_ref
         return jax.vmap(segment_merge_ref)(key, prow, tid, del_pq, ins_pq,

@@ -17,6 +17,7 @@ from repro.core.ops import (IX_EXPECT, IX_HI, IX_ID, IX_LO, SCAN_CONSUME,
                             is_index_kind, reads_index, writes_index)
 from repro.kernels.occ import ref
 from repro.kernels.occ.kernel import occ_round_pallas, scan_window_pallas
+from repro.obs.trace import kernel_launch
 from repro.storage.index import SCAN_L, SENTINEL, key_partition
 
 KERNELS = ("jnp", "pallas")
@@ -103,6 +104,8 @@ def _locate_index_ops_fused(index, kinds, delta, n_rows, interpret):
 def locate_index_ops(index, kinds, delta, n_rows, *, kernel="jnp",
                      interpret=None):
     """Resolve one round's index/scan ops (see ref.locate_index_ops_ref)."""
+    kernel_launch("occ.locate_index_ops", backend=kernel,
+                  lanes=int(kinds.shape[0]))
     if kernel == "jnp":
         return ref.locate_index_ops_ref(index, kinds, delta, n_rows)
     return _locate_index_ops_fused(index, kinds, delta, n_rows,
@@ -117,6 +120,8 @@ def occ_round(val, tidw, rows, kind, delta_v, wmask, amask, active, epoch,
               kernel="jnp", interpret=None):
     """One OCC round: gather → lock → validate → TID → install.  Returns
     (val', tidw', commit_now, new_tid, new, w)."""
+    kernel_launch("occ.occ_round", backend=kernel,
+                  lanes=int(rows.shape[0]), rows=int(val.shape[0]))
     if kernel == "jnp":
         return ref.occ_round_ref(val, tidw, rows, kind, delta_v, wmask,
                                  amask, active, epoch, last_tid, ix=ix,
@@ -140,6 +145,8 @@ def occ_round(val, tidw, rows, kind, delta_v, wmask, amask, active, epoch,
 def step_index_ops(index, kinds, delta, *, kernel="jnp", interpret=None):
     """Resolve one partitioned queue slot's index ops: (consume_ok (P, K),
     slot_tid (P, K))."""
+    kernel_launch("occ.step_index_ops", backend=kernel,
+                  partitions=int(kinds.shape[0]))
     if kernel == "jnp":
         return ref.step_index_ops_ref(index, kinds, delta)
     Pq, K = kinds.shape

@@ -28,6 +28,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from repro.obs import trace as obs
 from repro.reads.catalog import SnapshotCatalog
 from repro.reads.executor import SnapshotReadExecutor
 from repro.service import latency as lat
@@ -189,7 +190,11 @@ class ReadTier:
                                     pool.row[gs], pool.kind[gs],
                                     pool.delta[gs])
             jax.block_until_ready(out["val"])
-            self.stats.serve_time_s += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            obs.complete("reads.serve_batch", "reads", t0, t1,
+                         replica=rid, reads=int(gs.size),
+                         freshness=freshness, mid_epoch=mid_epoch)
+            self.stats.serve_time_s += t1 - t0
             self.stats.batches += 1
             self.stats.served += gs.size
             self.stats.max_freshness_served = max(
@@ -212,6 +217,7 @@ class ReadTier:
         if defer:
             admission.requeue_reads_front(defer)
             self.stats.mid_epoch_deferred += len(defer)
+            obs.instant("reads.mid_epoch_defer", "reads", reads=len(defer))
         if fallback:
             admission.requeue_reads_occ(fallback)
             self.stats.fallbacks += len(fallback)

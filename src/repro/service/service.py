@@ -22,6 +22,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.engine import StarEngine
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry
 from repro.service import latency as lat
 from repro.service.admission import (AdmissionConfig, AdmissionController,
                                      BACKPRESSURE)
@@ -44,7 +46,8 @@ class TxnService:
                  admission_cfg: AdmissionConfig | None = None,
                  slots_per_partition: int = 64, master_lanes: int = 64,
                  max_ops: int | None = None, feedback=None,
-                 node_of_partition=None, read_tier=None, analytics=None):
+                 node_of_partition=None, read_tier=None, analytics=None,
+                 metrics: MetricsRegistry | None = None):
         """feedback: optional callable(batch, metrics) invoked after every
         epoch's commit fence — the service-level consume-feedback hook
         (e.g. ``lambda b, m: tpcc.apply_consume_feedback(state, b, m)``
@@ -58,7 +61,10 @@ class TxnService:
         analytics: optional ``changelog.AnalyticsLane`` — incrementally
         maintained materialized views subscribe to the engine's changelog
         and the CH-style query mix serves between fences from the
-        epoch-stamped aggregate snapshots."""
+        epoch-stamped aggregate snapshots.
+        metrics: optional ``obs.MetricsRegistry`` (one is created if not
+        given) — the engine/service/read-tier stats dataclasses register
+        into it and ``_observe_epoch`` records a per-epoch snapshot."""
         self.engine = engine
         self.clients = list(clients)
         self.feedback = feedback
@@ -77,6 +83,21 @@ class TxnService:
         self.stats = ServiceStats()
         self._t0 = None
         self._deadline = float("inf")
+        # one metrics namespace: the stats dataclasses register as live
+        # objects (snapshot-time reads, never hand-merged), the lane
+        # summaries and the kernel-launch counter come in as providers
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.metrics.register_object("engine", engine.stats)
+        self.metrics.register_object("service", self.stats)
+        self.metrics.register_object("admission", self.admission.stats)
+        if read_tier is not None:
+            self.metrics.register_object("reads", read_tier.stats)
+        if analytics is not None:
+            self.metrics.register_provider(
+                "analytics",
+                lambda: {k.removeprefix("analytics_"): v
+                         for k, v in analytics.summary().items()})
+        self.metrics.register_provider("kernels", obs.kernel_launch_counts)
 
     # ------------------------------------------------------------------
     def clock(self) -> float:
@@ -86,17 +107,18 @@ class TxnService:
         """Pull due arrivals from every client and run admission. New
         arrivals stop at the deadline so the drain phase terminates."""
         until = min(now_s, self._deadline)
-        for c in self.clients:
-            req = c.pull(until)
-            if req is None:
-                continue
-            rejected = self.admission.offer(req, now_s)
-            if rejected.any():
-                rej = slice_request(req, rejected)
-                if self.admission.cfg.policy == BACKPRESSURE:
-                    c.push_back(rej)
-                else:
-                    c.on_shed(rej, until)   # client sees the rejection
+        with obs.span("service.admission", cat="service"):
+            for c in self.clients:
+                req = c.pull(until)
+                if req is None:
+                    continue
+                rejected = self.admission.offer(req, now_s)
+                if rejected.any():
+                    rej = slice_request(req, rejected)
+                    if self.admission.cfg.policy == BACKPRESSURE:
+                        c.push_back(rej)
+                    else:
+                        c.on_shed(rej, until)   # client sees the rejection
 
     def _complete(self, plan, metrics):
         """Commit fence reached: stamp, retire, re-queue starved."""
@@ -183,7 +205,8 @@ class TxnService:
 
         def ingest_hook():
             self._ingest(self.clock())
-            nxt["formed"] = self.batcher.form(self.clock())
+            with obs.span("service.batch_form", cat="service"):
+                nxt["formed"] = self.batcher.form(self.clock())
             if self.read_tier is not None:
                 # mid-epoch: k=0 serves of partitions below the slab
                 # watermark, overlapped with device execution; dirty
@@ -232,8 +255,10 @@ class TxnService:
         return self.summary()
 
     def _observe_epoch(self, metrics: dict):
-        """Per-epoch telemetry hook (no-op here; ClusterTxnService samples
-        per-node queue depths and collects recovery events)."""
+        """Per-epoch telemetry hook: one registry snapshot per committed
+        epoch (ClusterTxnService extends it with per-node sampling and
+        recovery-event collection)."""
+        self.metrics.snapshot(self.engine.committed_epoch)
 
     def summary(self) -> dict:
         rec, adm = self.recorder, self.admission.stats

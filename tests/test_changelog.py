@@ -225,7 +225,7 @@ def test_mv_bit_equal_recompute_and_time_travel(seed):
     epoch, aggs = views.latest()
     assert epoch == eng.committed_epoch
     want = views.recompute(eng.committed_state()[0])
-    for k in ("revenue", "stock_low", "undelivered"):
+    for k in ("revenue", "stock_low", "undelivered", "order_latency"):
         assert aggs[k].dtype == want[k].dtype, k
         assert np.array_equal(aggs[k], want[k]), k
     fx["oracle"][epoch] = {k: v.copy() for k, v in want.items()}
@@ -257,7 +257,7 @@ def test_mv_revert_snaps_back_to_committed():
     assert views.reverts == 1
     epoch, aggs = views.latest()
     want = views.recompute(eng.committed_state()[0])
-    for k in ("revenue", "stock_low", "undelivered"):
+    for k in ("revenue", "stock_low", "undelivered", "order_latency"):
         assert np.array_equal(aggs[k], want[k]), k
     # the next committed fence still matches the oracle
     batch = tpcc.make_batch(cfg, state, 96, seed=1)
@@ -266,7 +266,7 @@ def test_mv_revert_snaps_back_to_committed():
     epoch, aggs = views.latest()
     assert epoch == eng.committed_epoch
     want = views.recompute(eng.committed_state()[0])
-    for k in ("revenue", "stock_low", "undelivered"):
+    for k in ("revenue", "stock_low", "undelivered", "order_latency"):
         assert np.array_equal(aggs[k], want[k]), k
     assert eng.replica_consistent()
 
@@ -416,7 +416,7 @@ def test_cluster_mv_bit_equal_across_midstream_kill_case2():
             epoch, aggs = views.latest()
             assert epoch == rt.committed_epoch, (epoch, rt.committed_epoch)
             want = views.recompute(rt.committed_state()[0])
-            for k in ("revenue", "stock_low", "undelivered"):
+            for k in ("revenue", "stock_low", "undelivered", "order_latency"):
                 assert np.array_equal(aggs[k], want[k]), (ep, k)
             oracle[epoch] = {k: v.copy() for k, v in want.items()}
             # the query mix answers from the stamp it just verified

@@ -1,0 +1,284 @@
+"""Unified observability layer: tracer, registry, and their wiring.
+
+* trace-export schema: the Chrome/Perfetto ``trace_event`` JSON a real
+  engine run exports is loadable — every event has ph X/i, microsecond
+  ts, non-negative dur, and complete spans NEST per (pid, tid): any two
+  either disjoint or contained, with the whole-epoch span containing the
+  phase spans;
+* registry bit-match: per-epoch snapshots taken by the service layer
+  read the SAME live stats dataclasses — the final snapshot equals every
+  legacy ``EngineStats``/``ServiceStats`` field exactly, on a full-mix
+  TPC-C run;
+* overhead budget: with tracing DISABLED (the default), the per-call
+  cost of the instrumentation points times a generous spans-per-epoch
+  count stays under 2% of a measured epoch;
+* recovery span tree (subprocess, forced host devices): a mid-run node
+  kill exports classify → revert → restore → re-master → re-execute
+  spans, all nested inside one ``recovery`` span.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+from dataclasses import fields
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.engine import StarEngine
+from repro.db import tpcc
+from repro.obs import MetricsRegistry, Tracer, set_tracer
+from repro.obs.trace import get_tracer
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(code: str, devices: int = 4) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=480)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def _small_engine():
+    cfg = tpcc.TPCCConfig(n_partitions=2, n_items=400, cust_per_district=40,
+                          order_ring=64, mix="full", delivery_gen_lag=256)
+    state = tpcc.TPCCState(cfg)
+    init = tpcc.init_values(cfg, np.random.default_rng(5), state=state)
+    eng = StarEngine(cfg.n_partitions, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg))
+    return cfg, state, eng
+
+
+# ---------------------------------------------------------------------------
+# trace export schema + nesting
+# ---------------------------------------------------------------------------
+EPS = 0.05        # us; absorbs the 3-decimal export rounding at boundaries
+
+
+def _contained(a, b):
+    """Complete event a inside complete event b (closed interval)."""
+    return (a["ts"] >= b["ts"] - EPS
+            and a["ts"] + a["dur"] <= b["ts"] + b["dur"] + EPS)
+
+
+def test_trace_export_schema_and_nesting(tmp_path):
+    tracer = Tracer(enabled=True)
+    old = set_tracer(tracer)
+    try:
+        cfg, state, eng = _small_engine()
+        for ep in range(3):
+            batch = tpcc.make_batch(cfg, state, 96, seed=ep)
+            m = eng.run_epoch(batch)
+            tpcc.apply_consume_feedback(state, batch, m)
+    finally:
+        set_tracer(old)
+
+    path = tmp_path / "trace.json"
+    n = tracer.export_chrome(str(path))
+    assert n > 0 and tracer.dropped == 0
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and len(evs) == n
+    names = {e["name"] for e in evs}
+    # the stack's load-bearing spans are all present
+    for want in ("engine.epoch", "engine.partitioned", "engine.fence",
+                 "engine.single_master", "changelog.slab_ship",
+                 "changelog.commit"):
+        assert want in names, (want, sorted(names))
+    for e in evs:
+        assert e["ph"] in ("X", "i"), e
+        assert isinstance(e["ts"], (int, float))
+        assert {"pid", "tid", "name", "cat"} <= e.keys()
+        if e["ph"] == "X":
+            assert e["dur"] >= 0, e           # no negative durations
+    # sorted by ts (stable Perfetto ingestion)
+    ts = [e["ts"] for e in evs]
+    assert ts == sorted(ts)
+    # the engine span hierarchy nests per (pid, tid): pairwise disjoint
+    # or contained (other categories may straddle measured-window edges)
+    by_tid = {}
+    for e in evs:
+        if e["ph"] == "X" and e["name"].startswith("engine."):
+            by_tid.setdefault((e["pid"], e["tid"]), []).append(e)
+    assert by_tid
+    for group in by_tid.values():
+        for i, a in enumerate(group):
+            for b in group[i + 1:]:
+                disjoint = (a["ts"] + a["dur"] <= b["ts"] + EPS
+                            or b["ts"] + b["dur"] <= a["ts"] + EPS)
+                assert disjoint or _contained(a, b) or _contained(b, a), \
+                    (a, b)
+    # every phase span sits inside a whole-epoch span
+    epochs = [e for e in evs if e["name"] == "engine.epoch"]
+    for e in evs:
+        if e["name"] in ("engine.partitioned", "engine.single_master"):
+            assert any(_contained(e, ep) for ep in epochs), e
+
+
+def test_trace_instants_and_kernel_counts():
+    from repro.obs.trace import kernel_launch, kernel_launch_counts
+    before = kernel_launch_counts().get("test.k", 0)
+    kernel_launch("test.k", lanes=8)
+    kernel_launch("test.k", lanes=8)
+    assert kernel_launch_counts()["test.k"] == before + 2
+
+
+def test_ring_buffer_bounded_drop_oldest():
+    tr = Tracer(capacity=16, enabled=True)
+    for i in range(64):
+        tr.instant(f"e{i}")
+    assert len(tr.events()) == 16
+    assert tr.dropped == 48
+    assert tr.events()[0]["name"] == "e48"     # oldest dropped
+    assert tr.to_chrome()["otherData"]["dropped_events"] == 48
+
+
+# ---------------------------------------------------------------------------
+# registry: bit-match with the legacy stats dataclasses
+# ---------------------------------------------------------------------------
+def test_registry_snapshot_bit_matches_legacy_stats():
+    from repro.service import (AdmissionConfig, OpenLoopClient, TPCCSource,
+                               TxnService)
+    cfg = tpcc.TPCCConfig(n_partitions=2, n_items=400, cust_per_district=40,
+                          order_ring=64, mix="full", delivery_gen_lag=256)
+    state = tpcc.TPCCState(cfg)
+    init = tpcc.init_values(cfg, np.random.default_rng(7), state=state)
+    eng = StarEngine(2, cfg.rows_per_partition, init_val=init,
+                     indexes=tpcc.index_specs(cfg))
+    client = OpenLoopClient(TPCCSource(cfg, state=state, seed=1),
+                            rate_txn_s=400.0, seed=7)
+    svc = TxnService(eng, [client], AdmissionConfig(64, 64),
+                     slots_per_partition=16, master_lanes=16,
+                     feedback=lambda b, m: tpcc.apply_consume_feedback(
+                         state, b, m))
+    out = svc.run(duration_s=0.4)
+    assert out["committed"] > 0
+    snaps = svc.metrics.snapshots
+    assert len(snaps) == svc.stats.epochs          # one point per epoch
+    last = snaps[-1]
+    # live-object registration: the final snapshot equals every numeric
+    # legacy field EXACTLY (same objects read at snapshot time)
+    for f in fields(eng.stats):
+        v = getattr(eng.stats, f.name)
+        if isinstance(v, (int, float)):
+            assert last[f"engine.{f.name}"] == v, f.name
+    for f in fields(svc.stats):
+        v = getattr(svc.stats, f.name)
+        if isinstance(v, (int, float)):
+            assert last[f"service.{f.name}"] == v, f.name
+    for f in fields(svc.admission.stats):
+        v = getattr(svc.admission.stats, f.name)
+        if isinstance(v, (int, float)):
+            assert last[f"admission.{f.name}"] == v, f.name
+    # kernel-launch counters surface under kernels.*
+    assert any(k.startswith("kernels.occ.") for k in last), sorted(last)[:20]
+    # the time series is per-epoch monotonic where the stats are counters
+    ep = [s["engine.epochs"] for s in snaps]
+    assert ep == sorted(ep)
+
+
+def test_registry_exporters(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter_add("a.count", 3)
+    reg.gauge_set("a.gauge", 1.5)
+    reg.hist_observe("a.lat_s", 0.004)
+    reg.hist_observe("a.lat_s", 0.3)
+    reg.snapshot(0)
+    reg.counter_add("a.count", 1)
+    reg.snapshot(1)
+    p = tmp_path / "m.jsonl"
+    n = reg.export_jsonl(str(p))
+    lines = [json.loads(ln) for ln in p.read_text().splitlines()]
+    assert n == len(lines) == 2
+    assert lines[0]["a.count"] == 3 and lines[1]["a.count"] == 4
+    assert lines[1]["epoch"] == 1
+    txt = reg.export_prometheus()
+    assert "# TYPE a_count gauge" in txt
+    assert 'a_lat_s_bucket{le="+Inf"} 2' in txt
+    assert "a_lat_s_count 2" in txt
+
+
+# ---------------------------------------------------------------------------
+# disabled-path overhead budget
+# ---------------------------------------------------------------------------
+def test_disabled_tracer_overhead_under_budget():
+    """The default (disabled) tracer must cost <= 2% of epoch time for a
+    generous per-epoch span count.  Measured as per-call cost of the real
+    disabled entry points times a 4x-headroom span budget."""
+    from repro.obs import trace as obs
+    assert not get_tracer().enabled          # the default is off
+
+    cfg, state, eng = _small_engine()
+    eng.run_epoch(tpcc.make_batch(cfg, state, 96, seed=99))   # warm jit
+    t0 = time.perf_counter()
+    eng.run_epoch(tpcc.make_batch(cfg, state, 96, seed=100))
+    epoch_s = time.perf_counter() - t0
+
+    reps = 20000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with obs.span("x", cat="y", epoch=1):
+            pass
+        obs.complete("x", "y", 0.0, 1.0, epoch=1)
+        obs.instant("x", "y")
+    per_call_s = (time.perf_counter() - t0) / (3 * reps)
+
+    # spans per epoch, with ~4x headroom over what the engine actually
+    # emits (epoch + 2 phases + 2 fences + per-slab ship/commit + rounds
+    # + service/read/analytics spans)
+    spans_per_epoch = 256
+    overhead = per_call_s * spans_per_epoch
+    assert overhead <= 0.02 * epoch_s, \
+        (f"disabled tracing {overhead * 1e6:.1f}us/epoch vs "
+         f"epoch {epoch_s * 1e3:.2f}ms")
+
+
+# ---------------------------------------------------------------------------
+# recovery span tree across a mid-run kill (subprocess cluster)
+# ---------------------------------------------------------------------------
+def test_recovery_span_tree_exported():
+    out = _run("""
+        import json
+        import numpy as np
+        import jax
+        from repro.cluster import ClusterRuntime
+        from repro.core.fault import FaultInjector
+        from repro.db import ycsb
+        from repro.obs import Tracer, set_tracer
+
+        tracer = Tracer(enabled=True)
+        set_tracer(tracer)
+        n = jax.device_count()
+        mesh = jax.make_mesh((n,), ("part",))
+        inj = FaultInjector(); inj.schedule_kill(node=1, epoch=1)
+        P = 2 * n
+        cfg = ycsb.YCSBConfig(n_partitions=P, records_per_partition=64)
+        rt = ClusterRuntime(mesh, P, 64, injector=inj)
+        for ep in range(3):
+            rt.run_epoch(ycsb.make_batch(cfg, 64, seed=ep))
+        assert rt.replica_consistent()
+        doc = tracer.to_chrome()
+        print("TRACE " + json.dumps(doc["traceEvents"]))
+    """, devices=2)
+    line = [ln for ln in out.splitlines() if ln.startswith("TRACE ")][-1]
+    evs = json.loads(line[len("TRACE "):])
+    spans = {e["name"]: e for e in evs if e["ph"] == "X"}
+    # the full §4.5 recovery tree made it into the export
+    for want in ("recovery", "recovery.classify", "recovery.revert",
+                 "recovery.restore", "recovery.remaster",
+                 "recovery.reexecute"):
+        assert want in spans, (want, sorted(spans))
+    root = spans["recovery"]
+    for child in ("recovery.classify", "recovery.revert",
+                  "recovery.restore", "recovery.remaster",
+                  "recovery.reexecute"):
+        c = spans[child]
+        assert c["tid"] == root["tid"]
+        assert _contained(c, root), (child, c, root)
+    assert root["args"]["case"] == "PHASE_SWITCHING"
